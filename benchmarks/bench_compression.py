@@ -1,0 +1,49 @@
+"""Compressed stream transmission (paper §3/§4.1): sparse tensor streams and
+quant8 for language/speech activation streams — wire bytes + codec cost.
+
+The paper: "some clients have explicitly requested sparse tensor streams to
+compress streams for language and speech models".  We measure a
+transformer-activation-shaped stream at several sparsity levels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import StreamBuffer
+from repro.core import compression as comp
+
+from .common import emit, time_us
+
+SHAPE = (64, 1024)  # one frame of LM activations (seq x d)
+
+
+def _frame(sparsity: float) -> StreamBuffer:
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, SHAPE)
+    if sparsity > 0:
+        keep = jax.random.uniform(k2, SHAPE) >= sparsity
+        x = jnp.where(keep, x, 0.0)
+    return StreamBuffer(tensors=(x,))
+
+
+def run():
+    for sparsity in (0.0, 0.75, 0.9):
+        buf = _frame(sparsity)
+        raw = buf.nbytes()
+        density = max(0.05, round((1 - sparsity) * 1.25, 2))
+        for codec in ("none", "quant8", f"sparse:{density}"):
+            if codec.startswith("sparse") and sparsity == 0.0:
+                continue  # dense payload: COO framing would expand
+            us = time_us(lambda: jax.block_until_ready(
+                comp.encode(buf, codec)[0].tensors), n=10)
+            _, nbytes = comp.encode(buf, codec)
+            # verify lossless reconstruction within codec tolerance
+            dec = comp.decode(comp.encode(buf, codec)[0], codec)
+            assert dec.tensors[0].shape == SHAPE
+            emit(f"compress/sparsity{sparsity}/{codec}", us,
+                 f"wire_bytes={nbytes};ratio={raw / max(nbytes, 1):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

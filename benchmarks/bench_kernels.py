@@ -1,0 +1,38 @@
+"""Stream-codec Pallas kernels: µs/call in interpret mode (CPU) — relative
+cost of the codecs on a fixed activation frame.  Absolute TPU numbers come
+from the roofline (the kernels are VMEM-resident, bandwidth-bound).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .common import emit, time_us
+
+N = 64 * 1024
+
+
+def run():
+    x2 = jax.random.normal(jax.random.PRNGKey(0), (64, 1024))
+    flat = jnp.where(jax.random.uniform(jax.random.PRNGKey(1), (N,)) < 0.8,
+                     0.0, 1.0) * jax.random.normal(jax.random.PRNGKey(2), (N,))
+
+    q, s = ops.quantize8(x2)
+    us = time_us(lambda: jax.block_until_ready(ops.quantize8(x2)), n=5)
+    emit("kernel/quant8_enc", us, f"in_bytes={x2.size * 4};out_bytes={x2.size}")
+    us = time_us(lambda: jax.block_until_ready(ops.dequantize8(q, s)), n=5)
+    emit("kernel/quant8_dec", us, "")
+
+    v, i, nnz = ops.sparse_enc(flat, cap=N // 4, threshold=0.0)
+    us = time_us(lambda: jax.block_until_ready(
+        ops.sparse_enc(flat, cap=N // 4, threshold=0.0)), n=5)
+    emit("kernel/sparse_enc", us, f"nnz={int(nnz)};cap={N // 4}")
+    us = time_us(lambda: jax.block_until_ready(
+        ops.sparse_dec(v, i, nnz, N)), n=5)
+    emit("kernel/sparse_dec", us, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Roofline table: reads results/dryrun.json (produced by launch/dryrun.py)
+and prints the per-(arch × shape) three-term roofline + bottleneck — the
+§Roofline deliverable, derived from the compiled single-pod dry-run.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def run(path: str = RESULTS):
+    if not os.path.exists(path):
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all --mesh single` first")
+        return
+    with open(path) as f:
+        data = json.load(f)
+    rows = [r for r in data if r.get("mesh") == "single"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    for r in rows:
+        tag = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            emit(tag, 0.0, f"skipped:{r['reason'][:60]}")
+            continue
+        if "roofline" not in r:
+            emit(tag, 0.0, f"status={r['status']}")
+            continue
+        t = r["roofline"]
+        emit(tag, 0.0,
+             f"compute_s={t['compute_s']:.3e};memory_s={t['memory_s']:.3e};"
+             f"collective_s={t['collective_s']:.3e};dominant={t['dominant']};"
+             f"model_vs_hlo={r.get('model_vs_hlo_flops', 0):.3f};"
+             f"peak_GB_per_dev={(r['memory']['peak_bytes'] or 0) / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    run()

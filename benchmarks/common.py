@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing.
+
+The paper evaluates on RPi4 boards over Ethernet (Fig. 6/7): throughput, CPU
+usage, peak memory for three stream bandwidths at 60 Hz.  Here the "network"
+is the in-process Channel; we measure (a) host-side cost per frame in µs
+(the CPU-usage analogue), (b) wire bytes per frame, and (c) derived
+sustainable fps over a modelled 1 Gbps link — broker-relayed transports pay
+the relay hop twice, which is exactly the effect Fig. 7 shows.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+LINK_BYTES_PER_S = 125e6        # 1 Gbps Ethernet (RPi4)
+TARGET_FPS = 60.0
+
+# the paper's three bandwidths
+BANDWIDTHS: Dict[str, Tuple[int, int]] = {
+    "low_qqvga": (120, 160),
+    "mid_vga": (480, 640),
+    "high_fullhd": (1080, 1920),
+}
+
+
+def time_us(fn: Callable, n: int, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def sustainable_fps(bytes_per_frame: float, relay_hops: int,
+                    cpu_us_per_frame: float) -> float:
+    """fps over the modelled link: every relay hop re-sends the payload."""
+    wire = bytes_per_frame * (1 + relay_hops)
+    net_fps = LINK_BYTES_PER_S / max(wire, 1)
+    cpu_fps = 1e6 / max(cpu_us_per_frame, 1e-9)
+    return min(net_fps, cpu_fps)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,113 @@
+"""Render results/dryrun.json into the EXPERIMENTS.md markdown tables.
+
+    PYTHONPATH=src python -m benchmarks.report [--mesh single|multi]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+ARCH_ORDER = ["qwen1.5-110b", "internvl2-76b", "granite-20b", "gemma3-4b",
+              "deepseek-v2-236b", "stablelm-1.6b", "whisper-large-v3",
+              "mixtral-8x22b", "mamba2-130m", "recurrentgemma-9b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt(x, pat="{:.2e}"):
+    return pat.format(x) if x is not None else "—"
+
+
+def roofline_table(data, variant=""):
+    rows = [r for r in data if r.get("mesh") == "single"
+            and r.get("variant", "") == variant]
+    rows.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]),
+                             SHAPE_ORDER.index(r["shape"])))
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | peak GB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skip | — | — |")
+            continue
+        if "roofline" not in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ? | ? | ? | "
+                       f"{r['status']} | — | — |")
+            continue
+        t = r["roofline"]
+        peak = (r["memory"]["peak_bytes"] or 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(t['compute_s'])} | "
+            f"{_fmt(t['memory_s'])} | {_fmt(t['collective_s'])} | "
+            f"{t['dominant'].replace('_s', '')} | "
+            f"{_fmt(r.get('model_vs_hlo_flops'), '{:.2f}')} | {peak:.1f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(data, mesh):
+    rows = [r for r in data if r.get("mesh") == mesh
+            and not r.get("variant")]
+    rows.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]),
+                             SHAPE_ORDER.index(r["shape"])))
+    out = ["| arch | shape | status | chips | lower s | compile s | "
+           "peak GB/dev | collectives (AG/AR/RS/A2A/CP GB/dev) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | skipped "
+                       f"({r['reason'][:40]}…) | — | — | — | — | — |")
+            continue
+        peak = (r.get("memory", {}).get("peak_bytes") or 0) / 1e9
+        c = r.get("scanned_cost_raw", {}).get("colls",
+                                              r.get("collectives", {}))
+        coll = "/".join(f"{c.get(k, 0) / 1e9:.2f}" for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['status']} | "
+            f"{r.get('n_chips', '—')} | {r.get('lower_s', '—')} | "
+            f"{r.get('compile_s', '—')} | {peak:.1f} | {coll} |")
+    return "\n".join(out)
+
+
+def variants_table(data):
+    rows = [r for r in data if r.get("variant")]
+    if not rows:
+        return "(no perf variants recorded yet)"
+    out = ["| arch | shape | variant | compute s | memory s | collective s "
+           "| dominant |", "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "roofline" not in r:
+            continue
+        t = r["roofline"]
+        out.append(f"| {r['arch']} | {r['shape']} | {r['variant']} | "
+                   f"{_fmt(t['compute_s'])} | {_fmt(t['memory_s'])} | "
+                   f"{_fmt(t['collective_s'])} | {t['dominant'].replace('_s', '')} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--what", choices=("roofline", "dryrun-single",
+                                       "dryrun-multi", "variants"),
+                    default="roofline")
+    ap.add_argument("--path", default=RESULTS)
+    args = ap.parse_args()
+    with open(args.path) as f:
+        data = json.load(f)
+    if args.what == "roofline":
+        print(roofline_table(data))
+    elif args.what == "dryrun-single":
+        print(dryrun_table(data, "single"))
+    elif args.what == "dryrun-multi":
+        print(dryrun_table(data, "multi"))
+    else:
+        print(variants_table(data))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   Fig. 7 pub/sub  -> bench_pubsub      (RELAY vs HYBRID vs DIRECT, 3 bands)
+#   Fig. 7 query    -> bench_query       (MQTT-hybrid vs TCP + failover)
+#   §4.2.3 sync     -> bench_sync        (NTP rebase vs raw clocks)
+#   §3/§4.1 codecs  -> bench_compression (sparse/quant8 wire bytes)
+#   kernels         -> bench_kernels     (Pallas codec kernels, interpret)
+#   §Roofline       -> bench_roofline    (reads results/dryrun.json)
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_compression, bench_kernels, bench_pubsub,
+                   bench_query, bench_roofline, bench_sync)
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("pubsub", bench_pubsub.run),
+        ("query", bench_query.run),
+        ("query_failover", bench_query.run_failover),
+        ("sync", bench_sync.run),
+        ("compression", bench_compression.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", bench_roofline.run),
+    ]
+    failed = 0
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},0.0,SUITE_FAILED")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

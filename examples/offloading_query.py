@@ -1,0 +1,78 @@
+"""Fig. 2 / Listing 1: inference offloading with query elements.
+
+Device A (a TV: camera + display, no NPU) runs the full UI pipeline but its
+``tensor_filter`` is replaced by ``tensor_query_client`` — nothing else
+changes (R1).  Device B (a phone) serves the model; a second phone joins and
+the client fails over when the first dies (R3/R4).
+
+    PYTHONPATH=src python examples/offloading_query.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import TensorSpec, parse_launch
+from repro.core.elements import register_model
+from repro.runtime import Device, Runtime
+
+
+def init(rng):
+    return {"w": jax.random.normal(rng, (300 * 300 * 3, 8)) * 0.01}
+
+
+def apply(p, x):
+    logits = x.astype(jnp.float32).reshape(1, -1) @ p["w"]
+    boxes = jax.nn.sigmoid(logits[:, :4])
+    scores = jax.nn.softmax(logits[:, 4:])[0]
+    return boxes.reshape(1, 4), scores
+
+
+register_model("ssd_v2", init, apply,
+               out_specs=(TensorSpec((1, 4), "float32"),
+                          TensorSpec((8,), "float32")))
+
+SERVER = """
+tensor_query_serversrc operation=objectdetection/ssdv2 name=ssrc !
+  tensor_filter framework=jax model=ssd_v2 !
+  tensor_query_serversink name=ssink
+"""
+
+CLIENT = """
+testsrc name=v4l2src width=320 height=240 ! tee name=ts
+ts. videoconvert ! videoscale ! video/x-raw,width=300,height=300,format=RGB !
+  queue leaky=2 ! tensor_converter !
+  tensor_transform mode=arithmetic option=typecast:float32,add:-127.5,div:127.5 !
+  tensor_query_client operation=objectdetection/ssdv2 name=qc !
+  appsink name=boxes
+ts. queue leaky=2 ! videoconvert ! appsink name=screen
+"""
+
+rt = Runtime()
+for name in ("phoneB", "phoneC"):
+    dev = Device(name)
+    srv = parse_launch(SERVER)
+    srv.elements["ssink"].pair_with(srv.elements["ssrc"])
+    dev.add_pipeline(srv, jit=False)
+    rt.add_device(dev)
+    # keep handles for the failover demo
+    if name == "phoneB":
+        primary = srv.elements["ssrc"]
+
+tv = Device("tv")
+cli = parse_launch(CLIENT)
+tv.add_pipeline(cli, jit=False)
+rt.add_device(tv)
+
+rt.run(5)
+out = tv.runs[0].last_outputs
+print(f"5 frames offloaded: boxes={out['boxes'].tensors[0].shape} "
+      f"screen={out['screen'].tensor.shape}")
+
+# phoneB dies mid-stream -> client rebinds to phoneC (R4)
+primary.endpoint.alive = False
+rt.broker.mark_down(primary.registration)
+rt.run(5)
+qc = cli.elements["qc"]
+print(f"after failover: frames={tv.runs[0].frames} "
+      f"(failovers={qc.binding.failovers}) — service uninterrupted")
+assert tv.runs[0].frames == 10
+print("OK")

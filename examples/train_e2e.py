@@ -1,0 +1,30 @@
+"""End-to-end training driver: train a ~30M-parameter LM (stablelm family,
+reduced width for a 1-core CPU box) for a few hundred steps on the Markov
+corpus and watch the loss drop.  On a TPU slice the same launcher trains the
+full assigned configs on the production mesh.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+"""
+import argparse
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+    losses = train.main([
+        "--arch", "stablelm-1.6b", "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "64", "--lr", "3e-3",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        "--log-every", "20",
+    ])
+    assert losses[-1] < losses[0], "loss did not decrease"
+    print("OK — loss decreased; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

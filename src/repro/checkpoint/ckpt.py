@@ -1,0 +1,124 @@
+"""Checkpointing: pytree -> sharded .npz files + a json manifest.
+
+Layout:  <dir>/step_<n>/manifest.json + arrays_<k>.npz  (arrays chunked so
+no single file exceeds ~512 MB; restore is lazy per-chunk).  Paths in the
+manifest are '/'-joined pytree key paths, so restore round-trips dicts,
+lists, and NamedTuples produced by the optimizer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_CHUNK_BYTES = 512 << 20
+
+
+def _flatten(tree) -> List[Tuple[str, np.ndarray, str]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        true_dtype = str(arr.dtype)
+        if true_dtype == "bfloat16":  # numpy npz can't store ml_dtypes
+            arr = arr.view(np.uint16)
+        out.append((key, arr, true_dtype))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    leaves = _flatten(tree)
+    chunks: List[Dict[str, np.ndarray]] = [{}]
+    sizes = [0]
+    manifest = {"step": step, "leaves": {}, "chunks": 0}
+    for key, arr, true_dtype in leaves:
+        if sizes[-1] + arr.nbytes > _CHUNK_BYTES and chunks[-1]:
+            chunks.append({})
+            sizes.append(0)
+        ck = len(chunks) - 1
+        slot = f"a{len(chunks[ck])}"
+        chunks[ck][slot] = arr
+        sizes[ck] += arr.nbytes
+        manifest["leaves"][key] = {"chunk": ck, "slot": slot,
+                                   "shape": list(arr.shape),
+                                   "dtype": true_dtype}
+    manifest["chunks"] = len(chunks)
+    for i, ch in enumerate(chunks):
+        np.savez(os.path.join(d, f"arrays_{i}.npz"), **ch)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return d
+
+
+def load_checkpoint(directory: str, step: Optional[int] = None,
+                    like: Any = None) -> Tuple[int, Any]:
+    """Returns (step, tree).  If ``like`` is given, the result has its exact
+    pytree structure (required to restore lists/NamedTuples)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    cache: Dict[int, Any] = {}
+
+    def chunk(i):
+        if i not in cache:
+            cache[i] = np.load(os.path.join(d, f"arrays_{i}.npz"))
+        return cache[i]
+
+    def restore(meta):
+        arr = chunk(meta["chunk"])[meta["slot"]]
+        if meta["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        return arr
+
+    by_key = {k: restore(v) for k, v in manifest["leaves"].items()}
+    if like is not None:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in flat:
+            key = "/".join(_path_str(p) for p in path)
+            if key not in by_key:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            target = np.asarray(leaf).dtype
+            got = by_key[key]
+            leaves.append(got if str(got.dtype) == str(target)
+                          else got.astype(target))
+        return step, jax.tree_util.tree_unflatten(treedef, leaves)
+    # best-effort nested-dict reconstruction
+    tree: Dict = {}
+    for key, arr in by_key.items():
+        node = tree
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return step, tree
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for n in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", n))]
+    return max(steps) if steps else None

@@ -1,0 +1,30 @@
+# The paper's primary contribution: stream-pipeline infrastructure for
+# among-device AI — pipe-and-filter pipelines over tensor streams, a
+# control-plane broker with capability discovery + failover, pub/sub and
+# query (inference offloading) protocols, timestamp synchronization, and
+# compressed stream codecs.
+from .formats import Caps, CapsError, TensorFormat, TensorSpec
+from .buffers import FlexHeader, SparsePayload, StreamBuffer, flex_wrap, flex_unwrap
+from .element import Element, element_factory, register_element, FACTORY
+from .elements import register_model, MODEL_REGISTRY
+from .pipeline import Pipeline, parse_launch, parse_caps
+from .broker import Broker, BrokerError, topic_matches
+from .pubsub import Channel, MqttSink, MqttSrc, Transport
+from .query import (QueryServerEndpoint, QueryTransport, TensorQueryClient,
+                    TensorQueryServerSink, TensorQueryServerSrc)
+from .sync import PipelineClock, SimClock, ntp_offset
+from . import compression
+
+__all__ = [
+    "Caps", "CapsError", "TensorFormat", "TensorSpec",
+    "FlexHeader", "SparsePayload", "StreamBuffer", "flex_wrap", "flex_unwrap",
+    "Element", "element_factory", "register_element", "FACTORY",
+    "register_model", "MODEL_REGISTRY",
+    "Pipeline", "parse_launch", "parse_caps",
+    "Broker", "BrokerError", "topic_matches",
+    "Channel", "MqttSink", "MqttSrc", "Transport",
+    "QueryServerEndpoint", "QueryTransport", "TensorQueryClient",
+    "TensorQueryServerSink", "TensorQueryServerSrc",
+    "PipelineClock", "SimClock", "ntp_offset",
+    "compression",
+]

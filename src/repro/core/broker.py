@@ -1,0 +1,158 @@
+"""Control-plane broker — the MQTT analogue (paper §4.2).
+
+The broker carries *control* traffic only in HYBRID mode (discovery,
+capability negotiation, liveness, failover), exactly like the paper's
+MQTT-hybrid protocol; in RELAY mode it also relays the data plane (pure MQTT),
+which the paper measures to be the bandwidth bottleneck (Fig. 7).
+
+Topics follow MQTT semantics: '/'-separated levels, subscriptions may use
+'+' (one level) and '#' (all remaining levels) wildcards — the paper's
+example: servers "/objdetect/mobilev3" and "/objdetect/yolov2", client
+subscribes "/objdetect/#" and the broker picks one (R3), failing over to the
+alternative when the connected one dies (R4).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from .formats import Caps
+
+__all__ = ["Broker", "Registration", "topic_matches", "BrokerError"]
+
+
+class BrokerError(RuntimeError):
+    pass
+
+
+def topic_matches(pattern: str, topic: str) -> bool:
+    """MQTT topic-filter matching with '+' and '#'."""
+    pp = pattern.strip("/").split("/")
+    tt = topic.strip("/").split("/")
+    for i, p in enumerate(pp):
+        if p == "#":
+            return True
+        if i >= len(tt):
+            return False
+        if p != "+" and p != tt[i]:
+            return False
+    return len(pp) == len(tt)
+
+
+@dataclass
+class Registration:
+    """A published service/stream: topic + caps + declared specs (the paper:
+    servers may declare 'workload status' and 'model and version' for clients
+    to choose)."""
+
+    topic: str
+    caps: Caps
+    endpoint: Any                      # publisher object (data-plane handle)
+    specs: Dict[str, Any] = field(default_factory=dict)
+    alive: bool = True
+    reg_id: int = 0
+
+    def describe(self) -> str:
+        extra = ", ".join(f"{k}={v}" for k, v in self.specs.items())
+        return f"{self.topic} [{self.caps.describe()}] {extra}".strip()
+
+
+class Broker:
+    """In-process MQTT-analogue. Subscribers get *bindings* that auto-fail-over
+    across compatible registrations (R4)."""
+
+    def __init__(self, name: str = "broker"):
+        self.name = name
+        self._regs: Dict[int, Registration] = {}
+        self._ids = itertools.count(1)
+        self._watchers: List[Callable[[str, Registration], None]] = []
+        # data-plane accounting for RELAY transport benchmarking
+        self.relay_bytes = 0
+        self.relay_msgs = 0
+
+    # -- publish side ----------------------------------------------------------
+    def register(self, topic: str, caps: Caps, endpoint: Any,
+                 **specs) -> Registration:
+        reg = Registration(topic=topic, caps=caps, endpoint=endpoint,
+                           specs=specs, reg_id=next(self._ids))
+        self._regs[reg.reg_id] = reg
+        self._notify("register", reg)
+        return reg
+
+    def unregister(self, reg: Registration):
+        reg.alive = False
+        self._regs.pop(reg.reg_id, None)
+        self._notify("unregister", reg)
+
+    def mark_down(self, reg: Registration):
+        """Liveness loss without clean unregister (device crash)."""
+        reg.alive = False
+        self._notify("down", reg)
+
+    # -- discovery -------------------------------------------------------------
+    def discover(self, topic_filter: str,
+                 require: Optional[Dict[str, Any]] = None) -> List[Registration]:
+        out = []
+        for reg in self._regs.values():
+            if not reg.alive:
+                continue
+            if not topic_matches(topic_filter, reg.topic):
+                continue
+            if require and any(reg.specs.get(k) != v for k, v in require.items()):
+                continue
+            out.append(reg)
+        return sorted(out, key=lambda r: r.reg_id)
+
+    def subscribe(self, topic_filter: str, **require) -> "Binding":
+        return Binding(self, topic_filter, require or None)
+
+    def _notify(self, event: str, reg: Registration):
+        for w in list(self._watchers):
+            w(event, reg)
+
+    def watch(self, fn: Callable[[str, Registration], None]):
+        self._watchers.append(fn)
+
+    # -- RELAY data plane -------------------------------------------------------
+    def relay(self, payload_nbytes: int):
+        """Account one broker-relayed frame (pure-MQTT data plane)."""
+        self.relay_bytes += payload_nbytes
+        self.relay_msgs += 1
+
+
+class Binding:
+    """A live subscription that resolves to one concrete registration and
+    transparently fails over (R4)."""
+
+    def __init__(self, broker: Broker, topic_filter: str,
+                 require: Optional[Dict[str, Any]]):
+        self.broker = broker
+        self.topic_filter = topic_filter
+        self.require = require
+        self.current: Optional[Registration] = None
+        self.failovers = 0
+        broker.watch(self._on_event)
+        self._rebind()
+
+    def _rebind(self):
+        cands = self.broker.discover(self.topic_filter, self.require)
+        prev = self.current
+        self.current = cands[0] if cands else None
+        if prev is not None and self.current is not None and prev is not self.current:
+            self.failovers += 1
+
+    def _on_event(self, event: str, reg: Registration):
+        if event in ("down", "unregister") and reg is self.current:
+            self._rebind()
+        elif event == "register" and self.current is None \
+                and topic_matches(self.topic_filter, reg.topic):
+            self._rebind()
+
+    @property
+    def endpoint(self):
+        if self.current is None:
+            raise BrokerError(
+                f"no live publisher for {self.topic_filter!r}"
+                + (f" with {self.require}" if self.require else ""))
+        return self.current.endpoint

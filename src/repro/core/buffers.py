@@ -1,0 +1,148 @@
+"""Stream buffers: the unit of data flowing through pipelines.
+
+A ``StreamBuffer`` mirrors a GstBuffer: tensor payload(s) + presentation
+timestamp (pts, nanoseconds) + metadata dict (client-id tags, topic, etc.).
+Buffers are JAX pytrees so whole pipelines jit/vmap over them.
+
+FLEXIBLE frames additionally carry a ``FlexHeader`` per tensor — the
+per-frame schema header of the paper's dynamic format.  SPARSE frames carry
+``SparsePayload`` COO triples produced by ``tensor_sparse_enc``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import MAX_RANK, TensorFormat, TensorSpec, dtype_to_tag, tag_to_dtype
+
+__all__ = ["FlexHeader", "SparsePayload", "StreamBuffer", "flex_wrap", "flex_unwrap"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class FlexHeader:
+    """Per-frame dynamic-schema header (dims padded to MAX_RANK, dtype tag,
+    number of valid elements)."""
+
+    dims: jnp.ndarray      # int32[MAX_RANK]
+    dtype_tag: jnp.ndarray  # int32 scalar
+    valid: jnp.ndarray     # int32 scalar, number of valid elements
+
+    def tree_flatten(self):
+        return (self.dims, self.dtype_tag, self.valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class SparsePayload:
+    """Fixed-capacity COO: values[max_nnz], flat indices[max_nnz], nnz count."""
+
+    values: jnp.ndarray   # [max_nnz] dtype of source
+    indices: jnp.ndarray  # int32[max_nnz] flattened coordinates
+    nnz: jnp.ndarray      # int32 scalar
+    dense_shape: Tuple[int, ...] = field(default=())  # static aux
+
+    def tree_flatten(self):
+        return (self.values, self.indices, self.nnz), self.dense_shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, dense_shape=aux)
+
+    @property
+    def wire_nbytes(self) -> int:
+        """Bytes actually transmitted (capacity-bounded COO framing)."""
+        return int(self.values.size * self.values.dtype.itemsize
+                   + self.indices.size * 4 + 4)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class StreamBuffer:
+    """One frame on a pad. ``tensors`` maps 1:1 onto the pad caps' TensorSpecs.
+
+    ``pts`` is the presentation timestamp in ns relative to the owning
+    pipeline's base time (GStreamer running-time); ``meta`` is a *static*
+    python dict (topic, client_id routing tags, sync info) — it is aux data,
+    not traced.
+    """
+
+    tensors: Tuple[Any, ...]                 # arrays / SparsePayload
+    pts: jnp.ndarray = None                  # int64 ns scalar
+    headers: Optional[Tuple[FlexHeader, ...]] = None
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.pts is None:
+            self.pts = jnp.int64(0) if jax.config.jax_enable_x64 else jnp.int32(0)
+
+    def tree_flatten(self):
+        return (self.tensors, self.pts, self.headers), tuple(sorted(self.meta.items()))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        tensors, pts, headers = children
+        return cls(tensors=tensors, pts=pts, headers=headers, meta=dict(aux))
+
+    # -- convenience ---------------------------------------------------------
+    @property
+    def tensor(self):
+        assert len(self.tensors) == 1, "buffer has multiple tensors"
+        return self.tensors[0]
+
+    def with_(self, **kw) -> "StreamBuffer":
+        d = dict(tensors=self.tensors, pts=self.pts, headers=self.headers,
+                 meta=dict(self.meta))
+        d.update(kw)
+        return StreamBuffer(**d)
+
+    def nbytes(self) -> int:
+        n = 0
+        for t in self.tensors:
+            if isinstance(t, SparsePayload):
+                n += t.wire_nbytes
+            else:
+                n += t.size * t.dtype.itemsize
+        return n
+
+
+def flex_wrap(x: jnp.ndarray, capacity: int) -> Tuple[jnp.ndarray, FlexHeader]:
+    """Encode array `x` into a FLEXIBLE frame of element-capacity `capacity`.
+
+    The payload is a flat padded vector; the header records true dims/dtype.
+    Shapes stay static (capacity), contents vary per frame — the paper's
+    dynamic schema realized under XLA's static-shape constraint.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    if n > capacity:
+        raise ValueError(f"frame ({n} elems) exceeds flexible capacity {capacity}")
+    payload = jnp.zeros((capacity,), dtype=x.dtype).at[:n].set(flat)
+    dims = np.ones((MAX_RANK,), np.int32)
+    dims[: x.ndim] = x.shape
+    hdr = FlexHeader(
+        dims=jnp.asarray(dims),
+        dtype_tag=jnp.int32(dtype_to_tag(x.dtype)),
+        valid=jnp.int32(n),
+    )
+    return payload, hdr
+
+
+def flex_unwrap(payload: jnp.ndarray, header: FlexHeader,
+                static_shape: Optional[Tuple[int, ...]] = None) -> jnp.ndarray:
+    """Decode a FLEXIBLE frame. If the consumer knows the shape statically
+    (downstream caps), pass ``static_shape`` to get a strongly-shaped array;
+    otherwise returns the padded flat payload (the consumer must honour
+    ``header.valid``)."""
+    if static_shape is not None:
+        n = int(np.prod(static_shape))
+        return payload[:n].reshape(static_shape)
+    return payload

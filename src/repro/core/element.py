@@ -1,0 +1,123 @@
+"""Element base class + factory registry (GStreamer element analogue).
+
+An Element is a pure transformation over StreamBuffers with typed pads.
+Caps negotiation happens at *link* time (Pipeline.link), mirroring
+GStreamer's link-time caps intersection — incompatible pipelines fail at
+construction, not mid-stream (the paper's argument for schema'd streams).
+
+Elements are pure w.r.t. ``apply``: state (e.g. KV caches, RG-LRU state,
+query connections) is carried in the params/state pytree, so a compiled
+pipeline is a single jittable function.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Type
+
+import jax
+
+from .buffers import StreamBuffer
+from .formats import Caps, CapsError
+
+__all__ = ["Element", "register_element", "element_factory", "FACTORY"]
+
+FACTORY: Dict[str, Type["Element"]] = {}
+
+
+def register_element(factory_name: str):
+    def deco(cls: Type["Element"]):
+        cls.factory_name = factory_name
+        FACTORY[factory_name] = cls
+        return cls
+    return deco
+
+
+def element_factory(factory_name: str, name: Optional[str] = None, **props) -> "Element":
+    try:
+        cls = FACTORY[factory_name]
+    except KeyError as e:
+        raise KeyError(
+            f"no such element factory {factory_name!r}; "
+            f"known: {sorted(FACTORY)}") from e
+    return cls(name=name, **props)
+
+
+class Element:
+    """Base element.  Subclasses declare pad counts and caps templates and
+    implement ``apply``.
+
+    * ``n_sink_pads`` / ``n_src_pads`` — fixed pad counts (None = request pads,
+      grown on demand like GStreamer request pads on mux/compositor/tee).
+    * ``sink_caps_template()`` — what the element accepts.
+    * ``negotiate(in_caps)`` — given negotiated input caps, return output caps.
+    * ``apply(params, inputs, ctx)`` — list[StreamBuffer] -> list[StreamBuffer].
+    """
+
+    factory_name = "element"
+    n_sink_pads: Optional[int] = 1
+    n_src_pads: Optional[int] = 1
+
+    _uid = 0
+
+    def __init__(self, name: Optional[str] = None, **props):
+        if name is None:
+            Element._uid += 1
+            name = f"{self.factory_name}{Element._uid}"
+        self.name = name
+        self.props = props
+        self.in_caps: List[Caps] = []
+        self.out_caps: List[Caps] = []
+
+    # -- caps ---------------------------------------------------------------
+    def sink_caps_template(self, pad: int = 0) -> Caps:
+        return Caps.ANY
+
+    def negotiate(self, in_caps: Sequence[Caps]) -> List[Caps]:
+        """Default: single pass-through pad."""
+        n_out = self.n_src_pads if self.n_src_pads is not None else 1
+        base = in_caps[0] if in_caps else Caps.ANY
+        return [base] * n_out
+
+    def accept_caps(self, pad: int, caps: Caps) -> Caps:
+        tmpl = self.sink_caps_template(pad)
+        try:
+            return caps.intersect(tmpl)
+        except CapsError as e:
+            raise CapsError(f"{self.name}.sink_{pad}: {e}") from e
+
+    # -- params / state ------------------------------------------------------
+    def init_params(self, rng) -> dict:
+        return {}
+
+    def init_state(self) -> dict:
+        """Per-stream mutable state threaded through compiled steps."""
+        return {}
+
+    # -- execution ------------------------------------------------------------
+    def apply(self, params, inputs: List[StreamBuffer], ctx=None) -> List[StreamBuffer]:
+        raise NotImplementedError(self.factory_name)
+
+    def __repr__(self):
+        kv = " ".join(f"{k}={v}" for k, v in self.props.items())
+        return f"<{self.factory_name} {self.name}{' ' + kv if kv else ''}>"
+
+
+class StatefulElement(Element):
+    """Element whose apply also consumes/produces state:
+    apply(params, inputs, ctx) may read ctx.state[self.name] and write
+    ctx.next_state[self.name] (both pytrees)."""
+
+
+class PipelineContext:
+    """Per-step context handed to elements: carries stream state in/out and
+    static run info (step index is traced, wiring info is static)."""
+
+    def __init__(self, state: dict, rng=None):
+        self.state = state
+        self.next_state = dict(state)
+        self.rng = rng
+
+    def get_state(self, name: str):
+        return self.state.get(name)
+
+    def set_state(self, name: str, value):
+        self.next_state[name] = value

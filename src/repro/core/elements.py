@@ -1,0 +1,491 @@
+"""Stock pipeline elements — the NNStreamer/GStreamer element set used by the
+paper's examples (Listings 1 & 2): converters, transforms, NN filters,
+decoders, mux/demux, tee, queue, compositor, tensor_if, sparse enc/dec.
+
+All hot-path math is jnp (jit-safe); properties are static strings parsed at
+construction, exactly like gst-launch property strings.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .buffers import FlexHeader, SparsePayload, StreamBuffer, flex_wrap, flex_unwrap
+from .element import Element, PipelineContext, register_element
+from .formats import Caps, CapsError, TensorFormat, TensorSpec
+
+# ---------------------------------------------------------------------------
+# Sources / sinks
+# ---------------------------------------------------------------------------
+
+
+@register_element("appsrc")
+class AppSrc(Element):
+    """Application-fed source: the pipeline step receives its frame from the
+    caller (Pipeline.step inputs dict, keyed by element name)."""
+
+    n_sink_pads = 0
+
+    def __init__(self, name=None, caps: Optional[Caps] = None, **props):
+        super().__init__(name=name, **props)
+        self.declared_caps = caps or Caps.ANY
+
+    def negotiate(self, in_caps):
+        return [self.declared_caps]
+
+    def apply(self, params, inputs, ctx=None):
+        return list(inputs)  # pipeline injects the external frame as inputs[0]
+
+
+@register_element("testsrc")
+class TestSrc(Element):
+    """videotestsrc analogue: deterministic synthetic frames from the step
+    counter (kept in state), so examples run with no camera."""
+
+    n_sink_pads = 0
+
+    def __init__(self, name=None, width=64, height=48, channels=3, **props):
+        super().__init__(name=name, **props)
+        self.shape = (int(height), int(width), int(channels))
+
+    def negotiate(self, in_caps):
+        return [Caps(media="video/x-raw",
+                     tensors=(TensorSpec(self.shape, "uint8"),))]
+
+    def init_state(self):
+        return {"frame": jnp.int32(0)}
+
+    def apply(self, params, inputs, ctx: PipelineContext = None):
+        i = ctx.get_state(self.name)["frame"]
+        h, w, c = self.shape
+        yy = jnp.arange(h, dtype=jnp.int32)[:, None, None]
+        xx = jnp.arange(w, dtype=jnp.int32)[None, :, None]
+        cc = jnp.arange(c, dtype=jnp.int32)[None, None, :]
+        frame = ((yy * 3 + xx * 5 + cc * 17 + i * 7) % 256).astype(jnp.uint8)
+        ctx.set_state(self.name, {"frame": i + 1})
+        pts = (i.astype(jnp.int32)) * jnp.int32(16_666_667 // 1000)  # ~60Hz in µs
+        return [StreamBuffer(tensors=(frame,), pts=pts)]
+
+
+@register_element("appsink")
+class AppSink(Element):
+    """Terminal sink: Pipeline.step returns its input buffer keyed by name."""
+
+    n_src_pads = 0
+
+    def apply(self, params, inputs, ctx=None):
+        return list(inputs)
+
+
+@register_element("fakesink")
+class FakeSink(AppSink):
+    pass
+
+
+@register_element("capsfilter")
+class CapsFilter(Element):
+    """Caps assertion element (the `video/x-raw,width=300,...` strings in
+    gst-launch lines)."""
+
+    def __init__(self, name=None, caps: Caps = None, **props):
+        super().__init__(name=name, **props)
+        self.filter_caps = caps or Caps.ANY
+
+    def negotiate(self, in_caps):
+        return [in_caps[0].intersect(self.filter_caps)]
+
+    def apply(self, params, inputs, ctx=None):
+        return list(inputs)
+
+
+# ---------------------------------------------------------------------------
+# Video helpers (enough to express the paper's example pipelines)
+# ---------------------------------------------------------------------------
+
+
+@register_element("videoconvert")
+class VideoConvert(Element):
+    def apply(self, params, inputs, ctx=None):
+        return list(inputs)
+
+
+@register_element("videoscale")
+class VideoScale(Element):
+    """Combined with a downstream capsfilter this resizes; standalone it is
+    pass-through (as in GStreamer, the scale target comes from caps)."""
+
+    def __init__(self, name=None, width=None, height=None, **props):
+        super().__init__(name=name, **props)
+        self.target = (int(height), int(width)) if width and height else None
+
+    def negotiate(self, in_caps):
+        if self.target is None:
+            return [in_caps[0]]
+        src = in_caps[0].tensors[0]
+        h, w = self.target
+        c = src.shape[-1] if len(src.shape) == 3 else 1
+        return [Caps(media="video/x-raw", tensors=(TensorSpec((h, w, c), src.dtype),))]
+
+    def apply(self, params, inputs, ctx=None):
+        if self.target is None:
+            return list(inputs)
+        buf = inputs[0]
+        x = buf.tensor
+        h, w = self.target
+        y = jax.image.resize(x.astype(jnp.float32), (h, w, x.shape[-1]), "bilinear")
+        return [buf.with_(tensors=(y.astype(x.dtype),))]
+
+
+@register_element("compositor")
+class Compositor(Element):
+    """Overlay N video frames by zorder; xpos/ypos offsets per sink pad
+    (mix.sink_0::xpos=... in Listing 2)."""
+
+    n_sink_pads = None  # request pads
+
+    def __init__(self, name=None, **props):
+        super().__init__(name=name, **props)
+        self.pad_props = {}  # pad index -> dict
+
+    def set_pad_prop(self, pad: int, key: str, val):
+        self.pad_props.setdefault(pad, {})[key] = int(val)
+
+    def negotiate(self, in_caps):
+        return [in_caps[0]]
+
+    def apply(self, params, inputs, ctx=None):
+        base = inputs[0].tensor.astype(jnp.float32)
+        order = sorted(range(len(inputs)),
+                       key=lambda i: self.pad_props.get(i, {}).get("zorder", 0))
+        h, w = base.shape[0], base.shape[1]
+        canvas = jnp.zeros_like(base)
+        for i in order:
+            frame = inputs[i].tensor.astype(jnp.float32)
+            xpos = self.pad_props.get(i, {}).get("xpos", 0)
+            ypos = self.pad_props.get(i, {}).get("ypos", 0)
+            fh = min(frame.shape[0], h - ypos)
+            fw = min(frame.shape[1], w - xpos)
+            if fh <= 0 or fw <= 0:
+                continue
+            canvas = jax.lax.dynamic_update_slice(
+                canvas, frame[:fh, :fw], (ypos, xpos, 0))
+        out = canvas.astype(inputs[0].tensor.dtype)
+        return [inputs[0].with_(tensors=(out,))]
+
+
+# ---------------------------------------------------------------------------
+# Tensor elements
+# ---------------------------------------------------------------------------
+
+
+@register_element("tensor_converter")
+class TensorConverter(Element):
+    """media stream -> other/tensors.  video/x-raw HWC frames become a single
+    tensor; other/flexbuf (schemaless) frames are decoded via their header."""
+
+    def negotiate(self, in_caps):
+        src = in_caps[0]
+        if src.media == "other/flexbuf" or (
+                src.tensors and src.tensors[0].format == TensorFormat.FLEXIBLE):
+            specs = tuple(t.with_format(TensorFormat.FLEXIBLE) for t in src.tensors) \
+                or (TensorSpec((0,), "float32", TensorFormat.FLEXIBLE),)
+            return [Caps(media="other/tensors", tensors=specs)]
+        return [Caps(media="other/tensors", tensors=src.tensors)]
+
+    def apply(self, params, inputs, ctx=None):
+        return [inputs[0]]
+
+
+@register_element("tensor_transform")
+class TensorTransform(Element):
+    """mode=arithmetic option=typecast:float32,add:-127.5,div:127.5 — the
+    TROPT preprocessing string from Listing 1, plus transpose/clamp modes."""
+
+    def __init__(self, name=None, mode="arithmetic", option="", **props):
+        super().__init__(name=name, **props)
+        self.mode = mode
+        self.ops = [tok for tok in str(option).split(",") if tok]
+
+    def _arith(self, x):
+        for op in self.ops:
+            kind, _, arg = op.partition(":")
+            if kind == "typecast":
+                x = x.astype(jnp.dtype(arg))
+            elif kind == "add":
+                x = x + float(arg)
+            elif kind == "sub":
+                x = x - float(arg)
+            elif kind == "mul":
+                x = x * float(arg)
+            elif kind == "div":
+                x = x / float(arg)
+            elif kind == "clamp":
+                lo, hi = arg.split(":") if ":" in arg else arg.split("-")
+                x = jnp.clip(x, float(lo), float(hi))
+            else:
+                raise ValueError(f"unknown arithmetic op {op!r}")
+        return x
+
+    def negotiate(self, in_caps):
+        src = in_caps[0]
+        if self.mode == "arithmetic" and src.tensors:
+            dt = None
+            for op in self.ops:
+                if op.startswith("typecast:"):
+                    dt = op.split(":", 1)[1]
+            if dt:
+                specs = tuple(TensorSpec(t.shape, dt, t.format, t.max_nnz)
+                              for t in src.tensors)
+                return [Caps(media="other/tensors", tensors=specs)]
+        if self.mode == "transpose" and src.tensors:
+            perm = tuple(int(i) for i in self.ops[0].split(":"))
+            t0 = src.tensors[0]
+            shape = tuple(t0.shape[i] for i in perm)
+            return [Caps(media="other/tensors", tensors=(TensorSpec(shape, t0.dtype),))]
+        return [src]
+
+    def apply(self, params, inputs, ctx=None):
+        buf = inputs[0]
+        if self.mode == "arithmetic":
+            out = tuple(self._arith(t) for t in buf.tensors)
+        elif self.mode == "transpose":
+            perm = tuple(int(i) for i in self.ops[0].split(":"))
+            out = tuple(jnp.transpose(t, perm) for t in buf.tensors)
+        else:
+            raise ValueError(f"unknown transform mode {self.mode!r}")
+        return [buf.with_(tensors=out)]
+
+
+# Model registry: tensor_filter model=<key> resolves through here, so pipeline
+# descriptions stay strings (like model file paths in NNStreamer).
+MODEL_REGISTRY = {}
+
+
+def register_model(key: str, init_fn: Callable, apply_fn: Callable,
+                   out_specs: Sequence[TensorSpec] = ()):
+    MODEL_REGISTRY[key] = (init_fn, apply_fn, tuple(out_specs))
+
+
+@register_element("tensor_filter")
+class TensorFilter(Element):
+    """The NN inference element.  ``model`` is a registry key (or a callable
+    pair passed programmatically).  framework= is recorded for fidelity but on
+    TPU there is exactly one framework (XLA)."""
+
+    def __init__(self, name=None, model=None, framework="jax",
+                 apply_fn=None, init_fn=None, out_specs=(), **props):
+        super().__init__(name=name, framework=framework, **props)
+        if apply_fn is not None:
+            self._init_fn, self._apply_fn, self._out_specs = init_fn, apply_fn, tuple(out_specs)
+            self.model_key = name
+        else:
+            if model not in MODEL_REGISTRY:
+                raise KeyError(f"tensor_filter model={model!r} not registered; "
+                               f"known: {sorted(MODEL_REGISTRY)}")
+            self._init_fn, self._apply_fn, self._out_specs = MODEL_REGISTRY[model]
+            self.model_key = model
+
+    def negotiate(self, in_caps):
+        if self._out_specs:
+            return [Caps(media="other/tensors", tensors=self._out_specs)]
+        return [Caps(media="other/tensors")]
+
+    def init_params(self, rng):
+        return self._init_fn(rng) if self._init_fn else {}
+
+    def apply(self, params, inputs, ctx=None):
+        buf = inputs[0]
+        outs = self._apply_fn(params, *buf.tensors)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        return [buf.with_(tensors=tuple(outs))]
+
+
+@register_element("tensor_decoder")
+class TensorDecoder(Element):
+    """NN output -> media. Modes: direct_video (tensor -> displayable frame),
+    bounding_boxes (SSD-style box overlay), classification (argmax)."""
+
+    def __init__(self, name=None, mode="direct_video", **props):
+        super().__init__(name=name, **props)
+        self.mode = mode
+        self.opts = {k: v for k, v in props.items() if k.startswith("option")}
+
+    def negotiate(self, in_caps):
+        if self.mode in ("direct_video", "bounding_boxes"):
+            return [Caps(media="video/x-raw")]
+        return [Caps(media="other/tensors")]
+
+    def apply(self, params, inputs, ctx=None):
+        buf = inputs[0]
+        if self.mode == "direct_video":
+            x = buf.tensors[0]
+            return [buf.with_(tensors=(x.astype(jnp.uint8) if x.dtype != jnp.uint8 else x,))]
+        if self.mode == "classification":
+            logits = buf.tensors[0]
+            return [buf.with_(tensors=(jnp.argmax(logits, axis=-1).astype(jnp.int32),))]
+        if self.mode == "bounding_boxes":
+            # SSD-style: tensors = (boxes[N,4], scores[N]); rasterize top box
+            # outline onto a canvas whose size comes from option4 "W:H".
+            wh = self.opts.get("option4", "64:48")
+            w, h = (int(v) for v in wh.split(":"))
+            boxes, scores = buf.tensors[0], buf.tensors[1]
+            best = jnp.argmax(scores)
+            box = jnp.clip(boxes[best], 0.0, 1.0)
+            x0, y0, x1, y1 = (box[0] * w, box[1] * h, box[2] * w, box[3] * h)
+            yy = jnp.arange(h, dtype=jnp.float32)[:, None]
+            xx = jnp.arange(w, dtype=jnp.float32)[None, :]
+            on_edge = (
+                ((jnp.abs(yy - y0) < 1) | (jnp.abs(yy - y1) < 1)) & (xx >= x0) & (xx <= x1)
+            ) | (
+                ((jnp.abs(xx - x0) < 1) | (jnp.abs(xx - x1) < 1)) & (yy >= y0) & (yy <= y1)
+            )
+            canvas = jnp.where(on_edge[..., None], 255, 0).astype(jnp.uint8)
+            canvas = jnp.broadcast_to(canvas, (h, w, 4))  # RGBA overlay
+            return [buf.with_(tensors=(canvas,))]
+        raise ValueError(f"unknown decoder mode {self.mode!r}")
+
+
+@register_element("tensor_mux")
+class TensorMux(Element):
+    """Merge N single-tensor streams into one multi-tensor buffer, keeping the
+    earliest pts (paper §4.2.3: muxing is where cross-device sync matters)."""
+
+    n_sink_pads = None
+
+    def negotiate(self, in_caps):
+        specs = tuple(t for c in in_caps for t in c.tensors)
+        return [Caps(media="other/tensors", tensors=specs)]
+
+    def apply(self, params, inputs, ctx=None):
+        tensors = tuple(t for b in inputs for t in b.tensors)
+        pts = inputs[0].pts
+        for b in inputs[1:]:
+            pts = jnp.minimum(pts, b.pts)
+        meta = {}
+        for b in inputs:
+            meta.update(b.meta)
+        return [StreamBuffer(tensors=tensors, pts=pts, meta=meta)]
+
+
+@register_element("tensor_demux")
+class TensorDemux(Element):
+    """Split a multi-tensor buffer into per-tensor streams (dmux.src_N)."""
+
+    n_src_pads = None
+
+    def negotiate(self, in_caps):
+        return [Caps(media="other/tensors", tensors=(t,)) for t in in_caps[0].tensors]
+
+    def apply(self, params, inputs, ctx=None):
+        buf = inputs[0]
+        return [buf.with_(tensors=(t,)) for t in buf.tensors]
+
+
+@register_element("tee")
+class Tee(Element):
+    """Fan out one stream to N branches."""
+
+    n_src_pads = None
+
+    def negotiate(self, in_caps):
+        return [in_caps[0]]  # grown per request pad by Pipeline
+
+    def apply(self, params, inputs, ctx=None):
+        return [inputs[0]] * max(1, len(self.out_caps))
+
+
+@register_element("queue")
+class Queue(Element):
+    """leaky=2 drops old buffers when full — crucial for parallelism (paper
+    §5.1).  In a compiled (synchronous) pipeline a queue is identity; its
+    leaky/backpressure semantics live in runtime.scheduler.LatencyQueue."""
+
+    def __init__(self, name=None, leaky=0, **props):
+        # gst: max-size-buffers; accept both hyphen/underscore spellings.
+        super().__init__(name=name, **props)
+        self.leaky = int(leaky)
+        self.max_size = int(props.get("max_size_buffers", props.get("max-size-buffers", 2)))
+
+    def apply(self, params, inputs, ctx=None):
+        return list(inputs)
+
+
+@register_element("queue2")
+class Queue2(Queue):
+    """Used by the paper to inject latency when testing timestamp sync."""
+
+
+@register_element("tensor_if")
+class TensorIf(Element):
+    """Conditional gate (Fig. 5 'DETECT' activation path): compares a scalar
+    reduction of the control tensor against a threshold and gates the data
+    path via lax.cond-compatible select (data still flows; a gate flag in the
+    buffer meta plus zeroing keeps it jit-compatible)."""
+
+    n_sink_pads = 1
+
+    def __init__(self, name=None, compared_value="A1", operator="GE",
+                 threshold=0.5, **props):
+        super().__init__(name=name, **props)
+        self.threshold = float(threshold)
+        self.operator = operator
+
+    def apply(self, params, inputs, ctx=None):
+        buf = inputs[0]
+        score = jnp.max(buf.tensors[0].astype(jnp.float32))
+        ok = {"GE": score >= self.threshold, "GT": score > self.threshold,
+              "LE": score <= self.threshold, "LT": score < self.threshold,
+              "EQ": score == self.threshold}[self.operator]
+        gated = tuple(jnp.where(ok, t, jnp.zeros_like(t)) for t in buf.tensors)
+        out = buf.with_(tensors=gated)
+        out.meta["gate_open"] = None  # key presence documents gating; value is traced below
+        return [out.with_(tensors=gated + (ok.astype(jnp.int32),))]
+
+
+# ---------------------------------------------------------------------------
+# Sparse conversion elements (paper §4.1) — thin wrappers over the Pallas
+# kernels in repro.kernels (imported lazily to keep core importable alone).
+# ---------------------------------------------------------------------------
+
+
+@register_element("tensor_sparse_enc")
+class TensorSparseEnc(Element):
+    def __init__(self, name=None, max_nnz=None, threshold=0.0, **props):
+        super().__init__(name=name, **props)
+        self.max_nnz = int(max_nnz) if max_nnz else None
+        self.threshold = float(threshold)
+
+    def negotiate(self, in_caps):
+        t0 = in_caps[0].tensors[0]
+        nnz = self.max_nnz or max(1, t0.nelem // 4)
+        return [Caps(media="other/tensors",
+                     tensors=(TensorSpec(t0.shape, t0.dtype, TensorFormat.SPARSE, nnz),))]
+
+    def apply(self, params, inputs, ctx=None):
+        from ..kernels import ops as kops
+        buf = inputs[0]
+        x = buf.tensors[0]
+        nnz_cap = self.max_nnz or max(1, x.size // 4)
+        values, indices, nnz = kops.sparse_enc(x.reshape(-1), nnz_cap, self.threshold)
+        sp = SparsePayload(values=values, indices=indices, nnz=nnz,
+                           dense_shape=tuple(x.shape))
+        return [buf.with_(tensors=(sp,))]
+
+
+@register_element("tensor_sparse_dec")
+class TensorSparseDec(Element):
+    def negotiate(self, in_caps):
+        t0 = in_caps[0].tensors[0]
+        return [Caps(media="other/tensors", tensors=(TensorSpec(t0.shape, t0.dtype),))]
+
+    def apply(self, params, inputs, ctx=None):
+        from ..kernels import ops as kops
+        buf = inputs[0]
+        sp: SparsePayload = buf.tensors[0]
+        n = int(np.prod(sp.dense_shape))
+        dense = kops.sparse_dec(sp.values, sp.indices, sp.nnz, n)
+        return [buf.with_(tensors=(dense.reshape(sp.dense_shape),))]

@@ -1,0 +1,166 @@
+"""Tensor stream data types — the ``other/tensors`` media type (paper §4.1).
+
+NNStreamer extends GStreamer caps with a tensor media type whose ``format``
+field is one of ``static``, ``flexible`` (dynamic schema: every frame carries a
+header declaring dims/dtype) or ``sparse`` (COO coordinate list).  XLA needs
+static shapes, so the TPU-native realization is:
+
+* STATIC   — plain array, schema fixed at caps-negotiation time.
+* FLEXIBLE — max-capacity padded array + per-frame header (ndim, dims, dtype
+  tag, valid element count) carried as sideband arrays in the same buffer.
+* SPARSE   — fixed-capacity COO triple (values, indices, nnz counter); the
+  binary layout is *not* consumable by ordinary tensor elements, exactly as in
+  the paper, so ``tensor_sparse_enc``/``tensor_sparse_dec`` convert explicitly.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TensorFormat", "TensorSpec", "Caps", "CapsError",
+    "DTYPE_TAGS", "dtype_to_tag", "tag_to_dtype",
+]
+
+
+class TensorFormat(enum.Enum):
+    STATIC = "static"
+    FLEXIBLE = "flexible"
+    SPARSE = "sparse"
+
+
+# Stable on-the-wire dtype tags (NNStreamer's tensor_typedef analogue).
+DTYPE_TAGS: Tuple[str, ...] = (
+    "int8", "uint8", "int16", "uint16", "int32", "uint32",
+    "int64", "uint64", "float16", "float32", "float64", "bfloat16",
+)
+
+
+def dtype_to_tag(dtype) -> int:
+    name = jnp.dtype(dtype).name if not isinstance(dtype, str) else dtype
+    try:
+        return DTYPE_TAGS.index(name)
+    except ValueError as e:
+        raise CapsError(f"unsupported stream dtype {name!r}") from e
+
+
+def tag_to_dtype(tag: int):
+    return jnp.dtype(DTYPE_TAGS[int(tag)])
+
+
+class CapsError(ValueError):
+    """Raised when caps negotiation between two pads fails (link-time error)."""
+
+
+# NNStreamer limits tensors to rank<=4 on the wire ("4:20:1:1" style dims).
+MAX_RANK = 4
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    """Schema of one tensor in a stream frame.
+
+    ``shape`` is the *frame* shape (no batch dim — a frame is one sample, the
+    pipeline may carry batched frames by making the leading dim explicit).
+    For FLEXIBLE, ``shape`` is the maximum capacity; actual dims live in the
+    per-frame header.  For SPARSE, ``shape`` is the dense logical shape and
+    ``max_nnz`` bounds the coordinate list.
+    """
+
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+    format: TensorFormat = TensorFormat.STATIC
+    max_nnz: Optional[int] = None
+
+    def __post_init__(self):
+        if len(self.shape) > MAX_RANK:
+            raise CapsError(f"rank {len(self.shape)} > {MAX_RANK}: {self.shape}")
+        if self.format == TensorFormat.SPARSE and self.max_nnz is None:
+            object.__setattr__(self, "max_nnz", int(np.prod(self.shape)))
+        dtype_to_tag(self.dtype)  # validate
+
+    @property
+    def nelem(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def nbytes(self) -> int:
+        return self.nelem * jnp.dtype(self.dtype).itemsize
+
+    def with_format(self, fmt: TensorFormat) -> "TensorSpec":
+        return replace(self, format=fmt)
+
+    def compatible(self, other: "TensorSpec") -> bool:
+        """Can a producer of `self` feed a consumer expecting `other`?"""
+        if self.format != other.format:
+            return False
+        if self.format == TensorFormat.FLEXIBLE:
+            # flexible: capacity must fit, dtype checked per-frame at run time
+            return self.nelem <= other.nelem
+        if self.dtype != other.dtype:
+            return False
+        if self.format == TensorFormat.SPARSE:
+            return self.shape == other.shape and self.max_nnz <= (other.max_nnz or 0)
+        return self.shape == other.shape
+
+    def describe(self) -> str:
+        dims = ":".join(str(d) for d in self.shape) or "1"
+        s = f"{dims},{self.dtype}"
+        if self.format != TensorFormat.STATIC:
+            s += f",format={self.format.value}"
+        return s
+
+
+@dataclass(frozen=True)
+class Caps:
+    """GStreamer-caps analogue for a pad: media type + per-tensor schemas.
+
+    ``media`` mirrors the paper's MIME strings: "other/tensors",
+    "other/flexbuf" (schemaless third-party serialization), "video/x-raw",
+    "any" (ANY caps for pass-through elements).
+    """
+
+    media: str = "other/tensors"
+    tensors: Tuple[TensorSpec, ...] = field(default_factory=tuple)
+
+    ANY: "Caps" = None  # set below
+
+    @property
+    def num_tensors(self) -> int:
+        return len(self.tensors)
+
+    def is_any(self) -> bool:
+        return self.media == "any"
+
+    def intersect(self, other: "Caps") -> "Caps":
+        """Link-time negotiation: producer caps ∩ consumer template."""
+        if self.is_any():
+            return other
+        if other.is_any():
+            return self
+        if self.media != other.media:
+            raise CapsError(f"media mismatch: {self.media} vs {other.media}")
+        if other.tensors and self.tensors:
+            if len(self.tensors) != len(other.tensors):
+                raise CapsError(
+                    f"num_tensors mismatch: {len(self.tensors)} vs {len(other.tensors)}")
+            for i, (a, b) in enumerate(zip(self.tensors, other.tensors)):
+                if not a.compatible(b):
+                    raise CapsError(
+                        f"tensor {i} incompatible: {a.describe()} vs {b.describe()}")
+            return self
+        return self if self.tensors else other
+
+    def describe(self) -> str:
+        if self.is_any():
+            return "ANY"
+        parts = [self.media, f"num_tensors={self.num_tensors}"]
+        parts += [t.describe() for t in self.tensors]
+        return ", ".join(parts)
+
+
+Caps.ANY = Caps(media="any")

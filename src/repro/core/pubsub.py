@@ -1,0 +1,222 @@
+"""Pub/Sub stream elements — ``mqttsink`` / ``mqttsrc`` (paper §4.2.1).
+
+Transports:
+
+* ``RELAY``  — data plane goes through the broker (pure MQTT). Every frame is
+  serialized, accounted on the broker, and copied an extra hop.  This is the
+  configuration the paper shows to bottleneck at VGA/FullHD 60 Hz.
+* ``HYBRID`` — broker only does discovery/control; frames travel on a direct
+  channel between the two pipelines (the paper's MQTT-hybrid, planned for
+  pub/sub in "subsequent releases" — we implement it, see DESIGN.md §8
+  beyond-paper items).
+* ``DIRECT`` — no broker at all (ZeroMQ/TCP counterpart used as the paper's
+  normalization baseline; no discovery, fixed endpoint).
+
+On the TPU mesh the data plane of HYBRID/DIRECT lowers to a
+``collective_permute`` across the ``pod`` axis (see launch/steps.py); this
+module provides the host-level (multi-process simulation) path used by the
+runtime scheduler, examples, and the Fig.-7 benchmark.
+"""
+from __future__ import annotations
+
+import enum
+from collections import deque
+from typing import Deque, Optional
+
+import jax.numpy as jnp
+
+from .broker import Broker, BrokerError
+from .buffers import StreamBuffer
+from .element import Element, PipelineContext, register_element
+from .formats import Caps
+from . import compression as comp
+
+__all__ = ["Transport", "Channel", "MqttSink", "MqttSrc"]
+
+
+class Transport(enum.Enum):
+    RELAY = "relay"      # pure MQTT: broker carries data
+    HYBRID = "hybrid"    # MQTT-hybrid: broker control, direct data
+    DIRECT = "direct"    # raw TCP/ZeroMQ: no broker involvement
+
+
+class Channel:
+    """Bounded FIFO standing in for a network socket between two pipelines.
+    Tracks bytes for the benchmark harness. ``latency_ns`` models link delay
+    (used by the sync tests).
+
+    Pub/sub semantics: a publisher Channel with attached consumers BROADCASTS
+    every frame to each consumer queue (MQTT: every subscriber gets every
+    message).  With no consumers it queues locally (point-to-point: the query
+    protocol's request/response channels)."""
+
+    def __init__(self, capacity: int = 16, latency_ns: int = 0):
+        self.q: Deque = deque()
+        self.capacity = capacity
+        self.latency_ns = latency_ns
+        self.bytes_sent = 0
+        self.msgs_sent = 0
+        self.drops = 0
+        self.consumers = []
+
+    def attach_consumer(self, capacity: Optional[int] = None) -> "Channel":
+        ch = Channel(capacity=capacity or self.capacity,
+                     latency_ns=self.latency_ns)
+        self.consumers.append(ch)
+        # late subscriber still sees queued history (MQTT retained-ish)
+        for buf in self.q:
+            ch._enqueue(buf)
+        return ch
+
+    def _enqueue(self, buf: StreamBuffer):
+        if len(self.q) >= self.capacity:
+            self.drops += 1
+            self.q.popleft()  # leaky=2 downstream semantics: drop oldest
+        self.q.append(buf)
+
+    def push(self, buf: StreamBuffer, nbytes: Optional[int] = None) -> bool:
+        self.bytes_sent += buf.nbytes() if nbytes is None else nbytes
+        self.msgs_sent += 1
+        if self.consumers:
+            for c in self.consumers:
+                c._enqueue(buf)
+            return True
+        self._enqueue(buf)
+        return True
+
+    def pop(self) -> Optional[StreamBuffer]:
+        return self.q.popleft() if self.q else None
+
+    def __len__(self):
+        return len(self.q)
+
+
+@register_element("mqttsink")
+class MqttSink(Element):
+    """Publish the incoming stream under ``pub-topic``.
+
+    Properties: pub_topic, transport (relay|hybrid|direct), codec
+    (none|quant8|sparse) — codec implements the paper's compressed
+    transmission (R3 note: "Sparse tensors and gst-gz support compressed
+    transmissions").
+    """
+
+    n_src_pads = 0
+
+    def __init__(self, name=None, pub_topic="", transport="hybrid",
+                 codec="none", broker: Optional[Broker] = None,
+                 sync_clock=None, **props):
+        super().__init__(name=name, **props)
+        self.topic = props.get("pub-topic", pub_topic)
+        self.transport = Transport(transport)
+        self.codec = codec
+        self.broker = broker
+        self.channel = Channel()
+        self.registration = None
+        self.sync_clock = sync_clock  # PipelineClock for §4.2.3 timestamps
+
+    def connect(self, broker: Broker):
+        self.broker = broker
+        return self
+
+    def negotiate(self, in_caps):
+        caps = in_caps[0] if in_caps else Caps.ANY
+        if self.broker is not None and self.transport != Transport.DIRECT:
+            self.registration = self.broker.register(
+                self.topic, caps, self.channel,
+                codec=self.codec, element=self.name)
+        self._caps = caps
+        return []
+
+    def apply(self, params, inputs, ctx: PipelineContext = None):
+        buf = inputs[0]
+        payload, nbytes = comp.encode(buf, self.codec)
+        if self.sync_clock is not None:
+            payload = payload.with_(meta={**payload.meta,
+                                          "base_time_utc": self.sync_clock.base_time_utc()})
+        if self.transport == Transport.RELAY and self.broker is not None:
+            self.broker.relay(nbytes)  # extra hop through the broker
+        self.channel.push(payload, nbytes)
+        return []
+
+
+@register_element("mqttsrc")
+class MqttSrc(Element):
+    """Subscribe to ``sub-topic`` (wildcards allowed) and emit frames.
+
+    Discovery resolves through the broker to a publisher Channel; if the bound
+    publisher dies, the binding fails over automatically (R4).  DIRECT
+    transport bypasses discovery — the channel must be wired explicitly
+    (``connect_direct``), mirroring IP:port configs the paper argues against.
+    """
+
+    n_sink_pads = 0
+
+    def __init__(self, name=None, sub_topic="", transport="hybrid",
+                 codec="none", broker: Optional[Broker] = None,
+                 is_live="false", sync_clock=None, **props):
+        super().__init__(name=name, **props)
+        self.topic_filter = props.get("sub-topic", sub_topic)
+        self.transport = Transport(transport)
+        self.codec = codec
+        self.broker = broker
+        self.binding = None
+        self._direct: Optional[Channel] = None
+        self._rx: Optional[Channel] = None      # per-subscriber queue
+        self._rx_src: Optional[Channel] = None  # publisher it's attached to
+        self.sync_clock = sync_clock
+
+    def connect(self, broker: Broker):
+        self.broker = broker
+        return self
+
+    def connect_direct(self, channel: Channel):
+        self._direct = channel
+        return self
+
+    def _resolve(self) -> Channel:
+        """Per-subscriber receive queue (broadcast fan-out), re-attached
+        transparently after failover."""
+        if self.transport == Transport.DIRECT:
+            if self._direct is None:
+                raise BrokerError(f"{self.name}: DIRECT transport needs connect_direct()")
+            pub = self._direct
+        else:
+            if self.binding is None:
+                self.binding = self.broker.subscribe(self.topic_filter)
+            pub = self.binding.endpoint
+        if self._rx_src is not pub:
+            self._rx = pub.attach_consumer()
+            self._rx_src = pub
+        return self._rx
+
+    def negotiate(self, in_caps):
+        # caps come from the discovered publisher when available
+        if self.broker is not None and self.transport != Transport.DIRECT:
+            try:
+                self.binding = self.broker.subscribe(self.topic_filter)
+                if self.binding.current is not None:
+                    return [self.binding.current.caps]
+            except BrokerError:
+                pass
+        return [Caps.ANY]
+
+    def pull(self) -> Optional[StreamBuffer]:
+        """Host-level receive (runtime scheduler path)."""
+        chan = self._resolve()
+        raw = chan.pop()
+        if raw is None:
+            return None
+        buf = comp.decode(raw, self.codec)
+        if self.sync_clock is not None and "base_time_utc" in buf.meta:
+            # §4.2.3: rebase the publisher's running-time into ours
+            buf = self.sync_clock.rebase(buf)
+        return buf
+
+    def apply(self, params, inputs, ctx=None):
+        buf = self.pull()
+        if buf is None:
+            raise BrokerError(
+                f"{self.name}: no frame available (drive via runtime scheduler "
+                f"or push to the publisher channel first)")
+        return [buf]

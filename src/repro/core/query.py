@@ -1,0 +1,204 @@
+"""Query protocol — inference workload offloading (paper §4.2.2, Fig. 2).
+
+``tensor_query_client`` drops into a pipeline wherever a ``tensor_filter``
+would go; the inference itself runs in a *server* pipeline
+(``tensor_query_serversrc ! tensor_filter ! tensor_query_serversink``) on
+another device.  The client is transparent: swap it with a local
+tensor_filter and the rest of the pipeline is untouched (R1).
+
+Transports:
+* ``TCP_RAW``     — direct connection to a fixed endpoint; fast, but no
+                    discovery/failover (fails R3/R4 — kept as the paper's
+                    baseline).
+* ``MQTT_HYBRID`` — connection & control via broker topics (operation name =
+                    topic; wildcards pick among servers), bulk tensors direct.
+
+Multi-client: serversrc tags ``client_id`` into buffer meta; serversink uses
+it to route the answer back to the right client connection — exactly the
+paper's mechanism.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from typing import Dict, Optional
+
+from .broker import Broker, BrokerError
+from .buffers import StreamBuffer
+from .element import Element, register_element
+from .formats import Caps
+from .pubsub import Channel
+from . import compression as comp
+
+__all__ = ["QueryTransport", "QueryServerEndpoint", "TensorQueryClient",
+           "TensorQueryServerSrc", "TensorQueryServerSink"]
+
+
+class QueryTransport(enum.Enum):
+    TCP_RAW = "tcp"
+    MQTT_HYBRID = "hybrid"
+
+
+class QueryServerEndpoint:
+    """Server side connection state shared by serversrc/serversink pairs.
+
+    Holds one request channel and per-client response channels."""
+
+    _ids = itertools.count(1)
+
+    def __init__(self, operation: str, spec: Optional[Dict] = None):
+        self.operation = operation
+        self.spec = spec or {}
+        self.requests = Channel(capacity=64)
+        self.responses: Dict[int, Channel] = {}
+        self.endpoint_id = next(self._ids)
+        self.alive = True
+
+    def client_channel(self, client_id: int) -> Channel:
+        if client_id not in self.responses:
+            self.responses[client_id] = Channel(capacity=64)
+        return self.responses[client_id]
+
+
+@register_element("tensor_query_client")
+class TensorQueryClient(Element):
+    """Behaves exactly like tensor_filter, but remote.
+
+    Properties: operation (service name = topic), transport, codec (payload
+    compression — beyond-paper extension: the paper compresses pub/sub
+    streams, we extend it to the query path), require-* spec filters ("server
+    workload status", "model and version" in the paper).
+    """
+
+    _ids = itertools.count(1)
+
+    def __init__(self, name=None, operation="", transport="hybrid",
+                 codec="none", broker: Optional[Broker] = None, **props):
+        super().__init__(name=name, **props)
+        self.operation = props.get("operation", operation)
+        self.transport = (QueryTransport.MQTT_HYBRID if transport in ("hybrid", "mqtt")
+                          else QueryTransport.TCP_RAW)
+        self.codec = codec
+        self.broker = broker
+        self.client_id = next(self._ids)
+        self.binding = None
+        self._direct: Optional[QueryServerEndpoint] = None
+        self.require = {k[8:]: v for k, v in props.items() if k.startswith("require_")}
+
+    def connect(self, broker: Broker):
+        self.broker = broker
+        return self
+
+    def connect_direct(self, endpoint: QueryServerEndpoint):
+        """TCP-raw: explicit server endpoint (the IP:port config R3 removes)."""
+        self._direct = endpoint
+        return self
+
+    def _endpoint(self) -> QueryServerEndpoint:
+        if self.transport == QueryTransport.TCP_RAW:
+            if self._direct is None or not self._direct.alive:
+                raise BrokerError(f"{self.name}: TCP-raw endpoint gone; no failover "
+                                  f"in raw transport (R4 unmet by design)")
+            return self._direct
+        if self.binding is None:
+            if self.broker is None:
+                raise BrokerError(f"{self.name}: MQTT-hybrid requires a broker")
+            self.binding = self.broker.subscribe(
+                f"query/{self.operation}", **self.require)
+        ep = self.binding.endpoint
+        if not ep.alive:
+            self.binding._rebind()  # liveness re-check on use
+            ep = self.binding.endpoint
+        return ep
+
+    # -- host-level request/answer (runtime scheduler & tests) ------------------
+    def send_query(self, buf: StreamBuffer):
+        ep = self._endpoint()
+        payload, nbytes = comp.encode(buf, self.codec)
+        payload = payload.with_(meta={**payload.meta, "client_id": self.client_id,
+                                      "codec": self.codec})
+        if self.transport == QueryTransport.MQTT_HYBRID and self.broker is not None:
+            # control message (topic resolution ping) — tiny, broker-borne
+            self.broker.relay_msgs += 0  # control msgs are not data-relayed
+        ep.requests.push(payload, nbytes)
+
+    def recv_answer(self) -> Optional[StreamBuffer]:
+        ep = self._endpoint()
+        raw = ep.client_channel(self.client_id).pop()
+        if raw is None:
+            return None
+        return comp.decode(raw, self.codec)
+
+    def apply(self, params, inputs, ctx=None):
+        """Synchronous round-trip (compiled-pipeline semantics): the runtime
+        scheduler interleaves server pipelines between send/recv; in a single
+        process we call the server's pending step inline."""
+        self.send_query(inputs[0])
+        srv = self._endpoint()
+        runner = srv.spec.get("inline_runner")
+        if runner is not None:
+            runner()
+        out = self.recv_answer()
+        if out is None:
+            raise BrokerError(f"{self.name}: no answer from {self.operation!r}")
+        return [out]
+
+
+@register_element("tensor_query_serversrc")
+class TensorQueryServerSrc(Element):
+    """Receives queries; tags client_id into meta for the paired serversink."""
+
+    n_sink_pads = 0
+
+    def __init__(self, name=None, operation="", broker: Optional[Broker] = None,
+                 **props):
+        super().__init__(name=name, **props)
+        self.operation = props.get("operation", operation)
+        self.endpoint = QueryServerEndpoint(self.operation)
+        self.broker = broker
+        self.registration = None
+        self.specs = {k: v for k, v in props.items() if not k.startswith("_")}
+
+    def connect(self, broker: Broker, **extra_specs):
+        self.broker = broker
+        self.endpoint.spec.update(extra_specs)
+        self.registration = broker.register(
+            f"query/{self.operation}", Caps.ANY, self.endpoint,
+            **{**self.specs, **extra_specs})
+        return self
+
+    def pull(self) -> Optional[StreamBuffer]:
+        return self.endpoint.requests.pop()
+
+    def apply(self, params, inputs, ctx=None):
+        buf = self.pull()
+        if buf is None:
+            raise BrokerError(f"{self.name}: no pending query")
+        codec = buf.meta.get("codec", "none")
+        return [comp.decode(buf, codec)]
+
+
+@register_element("tensor_query_serversink")
+class TensorQueryServerSink(Element):
+    """Routes the inference answer back to the tagged client connection."""
+
+    n_src_pads = 0
+
+    def __init__(self, name=None, serversrc: Optional[TensorQueryServerSrc] = None,
+                 **props):
+        super().__init__(name=name, **props)
+        self.serversrc = serversrc
+
+    def pair_with(self, serversrc: TensorQueryServerSrc):
+        self.serversrc = serversrc
+        return self
+
+    def apply(self, params, inputs, ctx=None):
+        buf = inputs[0]
+        client_id = buf.meta.get("client_id")
+        if client_id is None:
+            raise BrokerError(f"{self.name}: answer buffer lost its client_id tag")
+        codec = buf.meta.get("codec", "none")
+        payload, nbytes = comp.encode(buf, codec)
+        self.serversrc.endpoint.client_channel(client_id).push(payload, nbytes)
+        return []

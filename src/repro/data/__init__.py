@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLM, TokenBatcher, make_train_iterator

@@ -1,0 +1,1 @@
+from .edge import EdgeSensor, EdgeOutput, EdgeQueryClient, pack_buffer, unpack_buffer

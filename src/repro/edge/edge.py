@@ -1,0 +1,122 @@
+"""NNStreamer-Edge analogue: a minimal, numpy-only client library.
+
+The paper ships NNStreamer-Edge so devices that cannot afford GStreamer (or
+any heavy runtime) still interoperate: RTOS sensors publish tensor streams,
+third-party frameworks join the pipeline mesh.  Here the analogue is a
+module that deliberately imports ONLY numpy + stdlib — no jax — and speaks
+the same wire format (packed header + raw bytes) and broker protocol, so a
+plain python process can act as a remote sensor ("edge_sensor"), a display
+("edge_output"), or an offloading client ("edge_query_client").
+
+Wire format (little-endian):
+  magic 'NNSE' | version u16 | num_tensors u16 | pts i64
+  per tensor: dtype_tag u16 | ndim u16 | dims u32[ndim] | nbytes u64 | raw
+"""
+from __future__ import annotations
+
+import struct
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_MAGIC = b"NNSE"
+_VERSION = 1
+
+_DTYPES = ("int8", "uint8", "int16", "uint16", "int32", "uint32",
+           "int64", "uint64", "float16", "float32", "float64")
+
+
+def pack_buffer(tensors: Sequence[np.ndarray], pts: int = 0) -> bytes:
+    parts = [_MAGIC, struct.pack("<HHq", _VERSION, len(tensors), pts)]
+    for t in tensors:
+        t = np.ascontiguousarray(t)
+        tag = _DTYPES.index(t.dtype.name)
+        parts.append(struct.pack("<HH", tag, t.ndim))
+        parts.append(struct.pack(f"<{t.ndim}I", *t.shape) if t.ndim else b"")
+        raw = t.tobytes()
+        parts.append(struct.pack("<Q", len(raw)))
+        parts.append(raw)
+    return b"".join(parts)
+
+
+def unpack_buffer(data: bytes) -> Tuple[List[np.ndarray], int]:
+    if data[:4] != _MAGIC:
+        raise ValueError("bad magic")
+    ver, n, pts = struct.unpack_from("<HHq", data, 4)
+    off = 4 + 12
+    tensors = []
+    for _ in range(n):
+        tag, ndim = struct.unpack_from("<HH", data, off)
+        off += 4
+        shape = struct.unpack_from(f"<{ndim}I", data, off) if ndim else ()
+        off += 4 * ndim
+        (nbytes,) = struct.unpack_from("<Q", data, off)
+        off += 8
+        arr = np.frombuffer(data, dtype=_DTYPES[tag], count=-1, offset=off)
+        arr = arr[: nbytes // np.dtype(_DTYPES[tag]).itemsize].reshape(shape)
+        tensors.append(arr.copy())
+        off += nbytes
+    return tensors, pts
+
+
+class _BrokerPort:
+    """Adapter hiding the in-process broker behind a socket-like API, so this
+    module keeps zero jax/repro.core imports at module scope."""
+
+    def __init__(self, broker):
+        self.broker = broker
+
+
+class EdgeSensor:
+    """edge_sensor: publish tensor frames under a topic (mqttsink-compatible)."""
+
+    def __init__(self, broker, topic: str):
+        from ..core.formats import Caps
+        from ..core.pubsub import Channel
+        self.channel = Channel()
+        self.registration = broker.register(topic, Caps(media="other/tensors"),
+                                            self.channel, element="edge_sensor")
+
+    def publish(self, tensors: Sequence[np.ndarray], pts: int = 0):
+        from ..core.buffers import StreamBuffer
+        wire = pack_buffer(tensors, pts)
+        buf = StreamBuffer(tensors=tuple(np.asarray(t) for t in tensors),
+                           pts=np.int64(pts), meta={"wire_nbytes": len(wire)})
+        self.channel.push(buf, nbytes=len(wire))
+
+
+class EdgeOutput:
+    """edge_output: subscribe to a topic and hand frames to a callback."""
+
+    def __init__(self, broker, topic_filter: str):
+        self.binding = broker.subscribe(topic_filter)
+        self._rx = self.binding.endpoint.attach_consumer()
+
+    def poll(self) -> Optional[Tuple[List[np.ndarray], int]]:
+        buf = self._rx.pop()
+        if buf is None:
+            return None
+        return [np.asarray(t) for t in buf.tensors], int(buf.pts)
+
+
+class EdgeQueryClient:
+    """edge_query_client: offload inference without running a pipeline."""
+
+    def __init__(self, broker, operation: str):
+        self.binding = broker.subscribe(f"query/{operation}")
+        self.client_id = 1 << 16  # edge namespace, avoids pipeline client ids
+
+    def infer(self, tensors: Sequence[np.ndarray]) -> List[np.ndarray]:
+        from ..core.buffers import StreamBuffer
+        ep = self.binding.endpoint
+        buf = StreamBuffer(tensors=tuple(np.asarray(t) for t in tensors),
+                           pts=np.int64(0),
+                           meta={"client_id": self.client_id, "codec": "none"})
+        ep.requests.push(buf)
+        runner = ep.spec.get("inline_runner")
+        if runner is not None:
+            runner()
+        out = ep.client_channel(self.client_id).pop()
+        if out is None:
+            raise RuntimeError("no answer from query server")
+        return [np.asarray(t) for t in out.tensors]

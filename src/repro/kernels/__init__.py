@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the stream-codec hot spots the paper optimizes on
+# the transmission path: block-COO sparse encode/decode (tensor_sparse_enc/
+# dec) and per-tile int8 quantization (gst-gz analogue).  Validated against
+# ref.py oracles in interpret mode on CPU; compiled BlockSpec tiling on TPU.
+from . import ops, ref

@@ -1,0 +1,79 @@
+"""jit'd public wrappers over the Pallas stream-codec kernels.
+
+Handles shape canonicalization (padding to tile multiples), the
+interpret-mode switch (Pallas executes the kernel body in Python on CPU;
+compiled on TPU), and the block-COO capacity bookkeeping.  ``ref.py`` holds
+the pure-jnp oracles the kernels are tested against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .quant8 import dequantize8_pallas, quantize8_pallas
+from .ref import QUANT_BM, QUANT_BN, SPARSE_B, _sparse_dims
+from .sparse_dec import sparse_dec_pallas
+from .sparse_enc import sparse_enc_pallas
+
+__all__ = ["quantize8", "dequantize8", "sparse_enc", "sparse_dec", "use_interpret"]
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def _as2d(x: jnp.ndarray):
+    if x.ndim == 0:
+        x = x.reshape(1, 1)
+    elif x.ndim == 1:
+        x = x.reshape(1, -1)
+    elif x.ndim > 2:
+        x = x.reshape(-1, x.shape[-1])
+    return x
+
+
+def quantize8(x: jnp.ndarray):
+    """Any-shape float array -> (q int8 [Mp,Np], scales f32 [Mp/BM, Np/BN]).
+
+    The original shape is the caller's to remember (compression.py keeps it
+    in the codec header, like any wire format)."""
+    x2 = _as2d(x.astype(jnp.float32))
+    m, n = x2.shape
+    pm, pn = (-m) % QUANT_BM, (-n) % QUANT_BN
+    if pm or pn:
+        x2 = jnp.pad(x2, ((0, pm), (0, pn)))
+    return quantize8_pallas(x2, interpret=use_interpret())
+
+
+def dequantize8(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    return dequantize8_pallas(q, scales, interpret=use_interpret())
+
+
+def sparse_enc(flat: jnp.ndarray, cap: int, threshold: float = 0.0):
+    """flat [N] -> (values [nb*kb], indices [nb*kb], nnz scalar int32).
+
+    Block-COO semantics of ref.sparse_enc_ref; kb is lane-aligned from cap."""
+    n = int(flat.shape[0])
+    nb, kb = _sparse_dims(n, cap)
+    pad = nb * SPARSE_B - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    vals, idxs, cnts = sparse_enc_pallas(
+        flat, kb=kb, threshold=float(threshold), interpret=use_interpret())
+    return vals, idxs, jnp.sum(cnts).astype(jnp.int32)
+
+
+def sparse_dec(values: jnp.ndarray, indices: jnp.ndarray, nnz, n: int) -> jnp.ndarray:
+    """Block-COO -> dense flat [n]."""
+    del nnz
+    total = int(values.shape[0])
+    nb = -(-n // SPARSE_B)
+    kb = total // nb
+    dense = sparse_dec_pallas(values.reshape(nb, kb), indices.reshape(nb, kb),
+                              interpret=use_interpret())
+    return dense[:n]

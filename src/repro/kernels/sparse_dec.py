@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: block-COO sparse decode (``tensor_sparse_dec``).
+
+Inverse of sparse_enc: each grid step reconstructs one B=512 dense block from
+its KB coordinate slots.  GPU would scatter with atomics; TPU has no scatter
+in VMEM, so we again use a one-hot MXU matmul:
+
+    local   = indices - block_base                 # [KB]
+    onehot  = (local[:,None] == arange(B)[None,:]) # [KB, B]
+    dense   = values @ onehot                      # MXU   [B]
+
+Empty slots carry (value=0, index=block_base): their one-hot row is real but
+the zero value contributes nothing — the "no-op scatter" trick that keeps
+the framing fixed-capacity and the kernel branch-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import SPARSE_B
+
+
+def _dec_kernel(vals_ref, idx_ref, out_ref):
+    kb = vals_ref.shape[1]
+    b = out_ref.shape[1]
+    v = vals_ref[0, :].astype(jnp.float32)                    # [KB]
+    local = idx_ref[0, :] - pl.program_id(0) * b              # [KB]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (kb, b), 1)
+    onehot = (jnp.broadcast_to(local[:, None], (kb, b)) == cols).astype(jnp.float32)
+    out_ref[0, :] = (v @ onehot).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_dec_pallas(v2: jnp.ndarray, i2: jnp.ndarray, *, interpret: bool = True):
+    """v2/i2: [nb, kb] block-COO -> dense [nb*B] (block b owns indices
+    [b*B, (b+1)*B))."""
+    nb, kb = v2.shape
+    out = pl.pallas_call(
+        _dec_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, kb), lambda i: (i, 0)),
+            pl.BlockSpec((1, kb), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, SPARSE_B), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, SPARSE_B), v2.dtype)],
+        interpret=interpret,
+    )(v2, i2)[0]
+    return out.reshape(-1)

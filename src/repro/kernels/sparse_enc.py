@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: block-COO sparse encoding (``tensor_sparse_enc``).
+
+GPU stream-compaction uses warp ballots + shared-memory prefix sums — none of
+which exist on TPU.  The TPU-native adaptation reformulates compaction as a
+**one-hot matmul on the MXU**:
+
+    mask    = |x| > threshold                      # [B]   VPU compare
+    rank    = cumsum(mask) - 1                     # [B]   VPU scan
+    onehot  = (rank[None,:] == slots[:,None]) & mask   # [KB, B]
+    values  = onehot @ x                           # MXU   [KB]
+    indices = onehot @ arange(B) + block_base      # MXU   [KB]
+
+Each grid step compacts one B=512-element block into its KB capacity slots;
+empty slots produce (0, block_base) which decode treats as a no-op.  All
+operands are VMEM-resident (B*KB one-hot = 512×512 f32 = 1 MiB worst case,
+well under the ~16 MiB VMEM budget), and both matmul dims are 128-multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import SPARSE_B
+
+
+def _enc_kernel(x_ref, vals_ref, idx_ref, cnt_ref, *, kb: int, threshold: float):
+    b = x_ref.shape[1]
+    x = x_ref[0, :].astype(jnp.float32)
+    mask = jnp.abs(x) > threshold
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1            # [B]
+    slots = jax.lax.broadcasted_iota(jnp.int32, (kb, b), 0)
+    ranks = jnp.broadcast_to(rank[None, :], (kb, b))
+    onehot = ((ranks == slots) & mask[None, :]).astype(jnp.float32)  # [KB, B]
+    vals_ref[0, :] = (onehot @ x).astype(vals_ref.dtype)
+    base = pl.program_id(0) * b
+    local = jax.lax.broadcasted_iota(jnp.float32, (b, 1), 0)  # exact ints < 2^24
+    idx_ref[0, :] = (onehot @ local)[:, 0].astype(jnp.int32) + base
+    cnt_ref[0, 0] = jnp.minimum(jnp.sum(mask.astype(jnp.int32)), kb)
+
+
+@functools.partial(jax.jit, static_argnames=("kb", "threshold", "interpret"))
+def sparse_enc_pallas(flat: jnp.ndarray, *, kb: int, threshold: float = 0.0,
+                      interpret: bool = True):
+    """flat: [nb*B] -> (values [nb*kb], indices int32 [nb*kb], counts int32 [nb])."""
+    n = flat.shape[0]
+    nb = n // SPARSE_B
+    x2 = flat.reshape(nb, SPARSE_B)
+    vals, idxs, cnts = pl.pallas_call(
+        functools.partial(_enc_kernel, kb=kb, threshold=threshold),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, SPARSE_B), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, kb), lambda i: (i, 0)),
+            pl.BlockSpec((1, kb), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, kb), flat.dtype),
+            jax.ShapeDtypeStruct((nb, kb), jnp.int32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x2)
+    return vals.reshape(-1), idxs.reshape(-1), cnts.reshape(-1)

@@ -1,0 +1,94 @@
+"""HLO-level analysis for the roofline report: collective byte counting and
+the three roofline terms (cost_analysis has FLOPs/bytes; collective traffic
+must be parsed out of the lowered/compiled HLO text).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+from .mesh import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,512,1024]{2,1,0}
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\(?)([a-z0-9\[\],{}\- ()]*?)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.MULTILINE)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op in (compiled) HLO text.
+    '-start' variants are counted once ('-done' carries no shape payload of
+    its own in the result position we match)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("ROOT "):
+            s = s[5:]
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for coll in _COLLECTIVES:
+            # match `<shape> <coll>(` or `(<tuple shapes>) <coll>-start(`
+            idx = rhs.find(f" {coll}(")
+            sidx = rhs.find(f" {coll}-start(")
+            use = idx if idx >= 0 else sidx
+            if use < 0:
+                continue
+            shape_part = rhs[:use]
+            out[coll] += _shape_bytes(shape_part)
+            break
+    return out
+
+
+def roofline_terms(cost: Dict, colls: Dict[str, int], n_chips: int,
+                   per_device: bool = True) -> Dict[str, float]:
+    """Three roofline terms in seconds.
+
+    cost: compiled.cost_analysis() (flops + bytes accessed are PER DEVICE for
+    an SPMD executable). colls: collective_bytes() of the compiled module
+    (also per device)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    coll_total = float(sum(colls.values()))
+    if not per_device:
+        flops /= n_chips
+        bytes_hbm /= n_chips
+        coll_total /= n_chips
+    return {
+        "compute_s": flops / V5E_PEAK_FLOPS,
+        "memory_s": bytes_hbm / V5E_HBM_BW,
+        "collective_s": coll_total / V5E_ICI_BW,
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": bytes_hbm,
+        "collective_bytes_per_device": coll_total,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    three = {k: terms[k] for k in ("compute_s", "memory_s", "collective_s")}
+    return max(three, key=three.get)

@@ -1,0 +1,42 @@
+"""Production mesh definitions.
+
+Single pod = one TPU v5e pod slice, 16×16 = 256 chips, axes (data, model).
+Multi-pod = 2 pods = 512 chips, axes (pod, data, model): the ``pod`` axis is
+the *among-device* axis — the paper's device boundary.  Training replicates
+across it (gradient all-reduce = the only pod-crossing collective); serving
+crosses it with query offloading (client pod -> server pod ppermute).
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+V5E_PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+V5E_HBM_BW = 819e9           # bytes/s per chip
+V5E_ICI_BW = 50e9            # bytes/s per link (~per-direction)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever fits the local devices — CPU tests and the e2e example."""
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Axes carrying the batch dimension (pod + data when multi-pod)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,237 @@
+"""Sharding rules: parameter PartitionSpecs by pytree path + logical
+activation rules for models.sharding.
+
+Strategy (see DESIGN.md §5):
+* tensor-parallel over ``model``: attention q/o on the flattened head dim,
+  ff hidden, MoE experts (expert-parallel when E % model == 0, else
+  per-expert ff TP), vocab for embed/head;
+* data-parallel over ``data`` (+ ``pod``): batch dim of activations, KV
+  caches, token streams;
+* long-context decode: KV sequence sharded over ``data`` (flash-decoding
+  style) — enabled by the ``kv_seq`` logical rule;
+* divisibility-guarded: any rule whose dim doesn't divide the mesh axis
+  falls back to replication (e.g. gemma3's 8 heads on a 16-way model axis —
+  its ff/vocab still shard).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from .mesh import data_axes, mesh_axis_sizes
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def activation_rules(cfg: ModelConfig, mesh: Mesh,
+                     shard_kv_seq: bool = False) -> Dict[str, Any]:
+    ax = mesh_axis_sizes(mesh)
+    model = ax.get("model", 1)
+    dp = data_axes(mesh)
+    rules: Dict[str, Any] = {
+        # long-context mode (shard_kv_seq) is batch=1 by construction: the
+        # data axis carries the KV sequence instead of the batch
+        "batch": None if shard_kv_seq else (
+            dp if len(dp) > 1 else (dp[0] if dp else None)),
+        # attention-free archs under sequence-parallel SSD keep the WHOLE
+        # residual stream sequence-sharded on `model` (norms/MLP/embed are
+        # position-local), so shard_map boundaries don't reshard
+        "seq": "model" if (cfg.ssm_seq_parallel and cfg.attention_free)
+        else None,
+        "vocab": "model" if _div(cfg.vocab, model) else None,
+        "ff": "model",
+        "experts": "model" if _div(cfg.n_experts or model, model) else None,
+        "heads": "model" if _div(cfg.n_heads or model, model) else None,
+        "kv_heads": "model" if _div(cfg.n_kv_heads or model, model) else None,
+        # decode KV sequence: long-context mode shards it on data; otherwise,
+        # when kv heads can't cover the model axis (GQA kv < model, or MLA's
+        # headless latent), the cache sequence shards on model instead
+        "kv_seq": ("data" if shard_kv_seq else
+                   ("model" if (cfg.mla or not _div(cfg.n_kv_heads or model,
+                                                    model)) else None)),
+    }
+    return rules
+
+
+# --- parameter specs by path --------------------------------------------------
+
+def _param_spec(cfg: ModelConfig, path: str, shape: Tuple[int, ...],
+                model: int) -> P:
+    def ok(dim_idx: int) -> bool:
+        return _div(shape[dim_idx], model)
+
+    # embeddings
+    if path.endswith("embed/tok"):
+        return P("model", None) if ok(0) else P()
+    if path.endswith("embed/head"):
+        return P(None, "model") if ok(1) else P()
+    if "pos_enc" in path or "pos_dec" in path:
+        return P()
+    # norms / scalars
+    if "norm" in path or path.endswith(("A_log", "D", "dt_bias", "lam")):
+        return P()
+    # Mamba-2 mixer: w_in packs [z|x|B|C|dt] whose split boundaries don't
+    # align with a model-axis sharding of the channel dim — GSPMD emits halo
+    # collective-permutes every layer (measured: the only collective-bound
+    # arch in the baseline sweep).  The SSD state dims (d_inner=2·d_model,
+    # N=128) are too small to need TP at 130M scale: replicate the mixer,
+    # keep data parallelism.  (§Perf iteration H3, EXPERIMENTS.md.)
+    if "/ssm/" in "/" + path:
+        return P()
+    # MoE experts
+    if re.search(r"moe/(w_up|w_gate|w_down)$", path):
+        if _div(cfg.n_experts, model):
+            return P("model", None, None)                    # expert parallel
+        # intra-expert TP: hidden (f) dim sharded on BOTH sides — up/gate
+        # col-parallel (out f), down row-parallel (contraction f) — so the
+        # [E,C,f] activation stays f-sharded end-to-end (no f all-gather)
+        if path.endswith("w_down"):
+            return P(None, "model", None) if ok(1) else P()
+        return P(None, None, "model") if ok(2) else P()
+    if path.endswith("moe/router"):
+        return P()
+    # MLA factors
+    if path.endswith(("w_uk", "w_uv", "w_uq", "w_q")):
+        return P(None, "model", None) if ok(1) else P()
+    if path.endswith(("w_dkv", "w_dq")):
+        return P()
+    # attention / generic projections: shard the "wide" dim
+    if re.search(r"(attn|xattn)/w[qkv]$", path) or path.endswith(("w_up", "w_gate", "w_in", "w_rec")):
+        return P(None, "model") if ok(1) else P()
+    if re.search(r"(attn|xattn)/wo$", path) or path.endswith(("w_down", "w_out")):
+        return P("model", None) if ok(0) else P()
+    if path.endswith(("bq", "bk", "bv")):
+        return P("model") if ok(0) else P()
+    if path.endswith(("w_r", "w_i")):                         # rg-lru gates
+        return P(None, "model") if ok(1) else P()
+    if path.endswith("conv"):
+        return P(None, "model") if ok(1) else P()
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    model = mesh_axis_sizes(mesh).get("model", 1)
+
+    def spec(path, leaf):
+        s = _param_spec(cfg, _path_str(path), leaf.shape, model)
+        # stacked (scanned) params have a leading layer dim; shift the spec
+        nd = len(leaf.shape)
+        if len(s) > nd:
+            s = P(*list(s)[:nd])
+        if len(s) < nd:
+            s = P(*([None] * (nd - len(s)) + list(s)))
+        return NamedSharding(mesh, s)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def stacked_param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """Same rules, but leaves carry a leading [layers] stack dim (scan layout):
+    the path-matched spec applies to dims 1..n."""
+    model = mesh_axis_sizes(mesh).get("model", 1)
+
+    def spec(path, leaf):
+        pstr = _path_str(path)
+        # embed/final_norm are not stacked; leaves under stack/ carry a
+        # leading [repeats] dim (prefix/ and tail/ do not)
+        stacked = pstr.startswith("stack/") or "/stack/" in pstr
+        base_shape = leaf.shape[1:] if stacked else leaf.shape
+        s = _param_spec(cfg, pstr, base_shape, model)
+        s_list = list(s)[: len(base_shape)]
+        s_list += [None] * (len(base_shape) - len(s_list))
+        if stacked:
+            s_list = [None] + s_list
+        return NamedSharding(mesh, P(*s_list))
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+# --- batch / cache specs --------------------------------------------------------
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_shape) -> Any:
+    ax = mesh_axis_sizes(mesh)
+    dp = data_axes(mesh)
+    dsize = int(np.prod([ax[a] for a in dp])) if dp else 1
+    dspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec(path, leaf):
+        if not leaf.shape or not _div(leaf.shape[0], dsize):
+            return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+        s = [dspec] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape,
+                    shard_kv_seq: bool = False) -> Any:
+    """KV caches: [.., B, S, kv, hd] batch on data (if divisible), kv heads on
+    model; long-context mode shards S on data instead of batch."""
+    ax = mesh_axis_sizes(mesh)
+    model, data = ax.get("model", 1), ax.get("data", 1)
+    dp = data_axes(mesh)
+    dsize = int(np.prod([ax[a] for a in dp])) if dp else 1
+    dspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        name = pstr.rsplit("/", 1)[-1]
+        if name.isdigit() and "/" in pstr:  # list leaves: cross_k/0 etc.
+            name = pstr.split("/")[-2]
+        name = {"cross_k": "k", "cross_v": "v"}.get(name, name)
+        if name == "pos" or nd == 0:
+            return NamedSharding(mesh, P())
+        s = [None] * nd
+        b = 1 if "groups" in pstr else 0          # stacked caches: [L, B, ...]
+        if b >= nd:
+            return NamedSharding(mesh, P())
+        if _div(shape[b], dsize):
+            s[b] = dspec
+        elif shard_kv_seq and name in ("k", "v", "c_kv", "k_rope") \
+                and nd > b + 1 and _div(shape[b + 1], data):
+            s[b + 1] = "data"                      # flash-decoding KV shard
+        if name in ("k", "v") and nd > b + 2:
+            if _div(shape[b + 2], model):
+                s[b + 2] = "model"                 # kv heads
+            elif s[b + 1] is None and _div(shape[b + 1], model):
+                # kv heads don't divide the model axis (GQA kv < 16): shard
+                # the cache SEQUENCE over model instead — attention reduces
+                # over partial-seq shards (flash-decoding style); without
+                # this, a 110B 128x32k decode cache is 99 GB/device.
+                s[b + 1] = "model"
+        if name in ("c_kv", "k_rope") and nd > b + 1 and s[b + 1] is None \
+                and _div(shape[b + 1], model):
+            s[b + 1] = "model"                     # MLA latent: seq on model
+        if name == "h" and nd > b + 1 and _div(shape[b + 1], model):
+            s[b + 1] = "model"                     # recurrent state width/heads
+        if name == "conv" and nd > b + 2 and _div(shape[b + 2], model):
+            s[b + 2] = "model"
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def replicated(mesh: Mesh, tree) -> Any:
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)

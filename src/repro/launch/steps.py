@@ -1,0 +1,137 @@
+"""Step builders: jitted train/prefill/decode steps with production
+shardings.  These are what both the real launcher (train.py/serve.py) and
+the dry-run lower.
+
+All steps consume the *stacked* (scan) parameter layout for decoder-only
+archs — an 80-layer model lowers as one scanned pattern-unit — and the list
+layout for enc-dec (whisper: 32+32 unrolled blocks of a small d_model).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.model import Model
+from ..models.sharding import sharding_rules
+from ..optim import adamw_init, adamw_update, linear_warmup_cosine
+from . import shardings as SH
+from .mesh import data_axes
+
+# input shapes assigned to this paper (brief):
+SHAPES: Dict[str, Dict] = {
+    "train_4k": {"mode": "train", "seq": 4096, "global_batch": 256},
+    "prefill_32k": {"mode": "prefill", "seq": 32_768, "global_batch": 32},
+    "decode_32k": {"mode": "decode", "seq": 32_768, "global_batch": 128},
+    "long_500k": {"mode": "decode", "seq": 524_288, "global_batch": 1},
+}
+
+# archs allowed to run long_500k (sub-quadratic decode state; DESIGN.md §4)
+LONG_OK = {"mamba2-130m", "recurrentgemma-9b", "gemma3-4b", "mixtral-8x22b"}
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.name not in LONG_OK:
+        return False, "full-attention KV at 500k context (DESIGN.md §4 skip)"
+    return True, ""
+
+
+def make_train_step(model: Model, mesh, lr: float = 3e-4,
+                    total_steps: int = 1000, stacked: bool = True
+                    ) -> Callable:
+    cfg = model.cfg
+    rules = {**SH.activation_rules(cfg, mesh), "__mesh__": mesh}
+    schedule = linear_warmup_cosine(lr, warmup=min(100, total_steps // 10 + 1),
+                                    total_steps=total_steps)
+    if stacked and model.supports_stacked:
+        loss_fn = model.loss_stacked
+    else:
+        # per-layer remat to match the scanned production program's profile
+        loss_fn = functools.partial(model.loss,
+                                    remat=not model.cfg.enc_dec)
+
+    def train_step(params, opt_state, batch):
+        with sharding_rules(**rules):
+            (loss, parts), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch), has_aux=True)(params)
+            new_params, new_opt, info = adamw_update(
+                params, grads, opt_state, lr=schedule(opt_state.step))
+        metrics = {"loss": loss, **parts, **info,
+                   "lr": schedule(opt_state.step)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, mesh, max_seq: Optional[int] = None,
+                      stacked: bool = True) -> Callable:
+    cfg = model.cfg
+    rules = {**SH.activation_rules(cfg, mesh), "__mesh__": mesh}
+    fn = model.prefill_stacked if (stacked and model.supports_stacked) \
+        else model.prefill
+
+    def prefill_step(params, batch):
+        with sharding_rules(**rules):
+            logits, cache = fn(params, batch, max_seq or batch["tokens"].shape[1])
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, mesh, shard_kv_seq: bool = False,
+                     stacked: bool = True) -> Callable:
+    cfg = model.cfg
+    rules = {**SH.activation_rules(cfg, mesh, shard_kv_seq=shard_kv_seq),
+             "__mesh__": mesh}
+    fn = model.decode_step_stacked if (stacked and model.supports_stacked) \
+        else model.decode_step
+
+    def serve_step(params, token, cache):
+        """ONE new token against a seq_len KV cache (the brief's decode)."""
+        with sharding_rules(**rules):
+            logits, cache = fn(params, token, cache)
+            next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shape/sharding plumbing shared by dryrun + launchers
+# ---------------------------------------------------------------------------
+
+def eval_params_shape(model: Model, stacked: bool = True):
+    init = model.init_stacked if (stacked and model.supports_stacked) else model.init
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(0)))
+
+
+def eval_cache_shape(model: Model, batch: int, seq: int, stacked: bool = True):
+    init = model.init_cache_stacked if (stacked and model.supports_stacked) \
+        else model.init_cache
+    return jax.eval_shape(lambda: init(batch, seq))
+
+
+def eval_opt_shape(params_shape):
+    return jax.eval_shape(adamw_init, params_shape)
+
+
+def opt_shardings(mesh, params_sharding, opt_shape):
+    """OptState(step scalar, m, v) — m/v mirror params specs (they have the
+    same tree shape; dtype differs)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return type(opt_shape)(
+        step=NamedSharding(mesh, P()),
+        m=params_sharding,
+        v=params_sharding,
+    )
+
+
+def input_specs(model: Model, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a named shape —
+    weak-type-correct, shardable, no device allocation."""
+    info = SHAPES[shape_name]
+    seq = model.clamp_seq(info["seq"])
+    return model.input_specs(info["mode"], info["global_batch"], seq)

@@ -1,0 +1,102 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --smoke \
+        --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+On this CPU box you train the reduced (--smoke) variants; on a TPU slice the
+same entry point runs the full config on the production mesh (the step
+builder and shardings are identical to the dry-run's).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import latest_step, load_checkpoint, save_checkpoint
+from ..configs import ARCH_IDS, get_config
+from ..data import make_train_iterator
+from ..models.model import build_model
+from ..optim import adamw_init
+from . import steps as ST
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="stablelm-1.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced variant of the same family (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 pod mesh (requires 256 devices)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = build_model(cfg)
+    mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
+
+    stacked = model.supports_stacked
+    step_fn = ST.make_train_step(model, mesh, lr=args.lr,
+                                 total_steps=args.steps, stacked=stacked)
+    jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    rng = jax.random.PRNGKey(0)
+    init = model.init_stacked if stacked else model.init
+    params = init(rng)
+    opt = adamw_init(params)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        start, restored = load_checkpoint(args.ckpt_dir,
+                                          like={"params": params, "opt": opt})
+        params, opt = restored["params"], restored["opt"]
+        print(f"[train] resumed from step {start}")
+
+    n_params = model.param_count(params)
+    print(f"[train] {cfg.name} ({'smoke' if args.smoke else 'full'}) "
+          f"params={n_params / 1e6:.1f}M mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    it = make_train_iterator(vocab=cfg.vocab, global_batch=args.batch,
+                             seq=args.seq)
+    losses = []
+    t0 = time.time()
+    for i in range(start, args.steps):
+        raw = next(it)
+        batch = {"tokens": jnp.asarray(raw["tokens"])}
+        if cfg.enc_dec:
+            batch["frames"] = jax.random.normal(
+                jax.random.PRNGKey(i), (args.batch, cfg.enc_seq, cfg.d_model))
+        if cfg.frontend == "vision":
+            batch["patches"] = jax.random.normal(
+                jax.random.PRNGKey(i), (args.batch, cfg.n_patches, cfg.d_model))
+        params, opt, metrics = jstep(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % args.log_every == 0:
+            dt = (time.time() - t0) / args.log_every
+            tok_s = args.batch * args.seq / dt
+            print(f"[train] step {i + 1:5d} loss={losses[-1]:.4f} "
+                  f"ce={float(metrics['ce']):.4f} gnorm={float(metrics['grad_norm']):.3f} "
+                  f"{dt * 1e3:.0f} ms/step {tok_s:.0f} tok/s", flush=True)
+            t0 = time.time()
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, i + 1,
+                            {"params": params, "opt": opt})
+    if losses:
+        print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+              f"over {len(losses)} steps")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

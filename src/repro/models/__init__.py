@@ -1,0 +1,6 @@
+# Model zoo: pure-JAX implementations of every assigned architecture family
+# (dense GQA/MQA, sliding-window + local:global, MoE with shared experts,
+# MLA, Mamba-2 SSD, RG-LRU hybrid, encoder-decoder, VLM) behind one
+# ModelConfig + Model facade.
+from .config import ModelConfig
+from .model import Model, build_model, cross_entropy

@@ -1,0 +1,218 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356).
+
+The mel-spectrogram + conv2 frontend is the allowed STUB: ``input_specs``
+supplies precomputed frame embeddings [B, enc_seq, d_model] (enc_seq = 1500
+for 30 s audio).  Everything downstream — sinusoidal-free learned positions,
+pre-norm encoder blocks (bidirectional attention), decoder blocks with
+causal self-attention + cross-attention — is implemented here.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from .sharding import shard
+
+
+def _xattn_init(rng, cfg: ModelConfig) -> Dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    return {"wq": L.dense_init(ks[0], d, h * hd, dt),
+            "wk": L.dense_init(ks[1], d, h * hd, dt),
+            "wv": L.dense_init(ks[2], d, h * hd, dt),
+            "wo": L.dense_init(ks[3], h * hd, d, dt)}
+
+
+def enc_block_init(rng, cfg: ModelConfig) -> Dict:
+    k1, k2 = jax.random.split(rng)
+    return {"norm1": L.norm_init(cfg.d_model, cfg),
+            "attn": L.attn_init(k1, cfg),
+            "norm2": L.norm_init(cfg.d_model, cfg),
+            "mlp": L.mlp_init(k2, cfg)}
+
+
+def dec_block_init(rng, cfg: ModelConfig) -> Dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {"norm1": L.norm_init(cfg.d_model, cfg),
+            "attn": L.attn_init(k1, cfg),
+            "norm_x": L.norm_init(cfg.d_model, cfg),
+            "xattn": _xattn_init(k2, cfg),
+            "norm2": L.norm_init(cfg.d_model, cfg),
+            "mlp": L.mlp_init(k3, cfg)}
+
+
+def init_params(rng, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(rng, cfg.n_enc_layers + cfg.n_layers + 3)
+    dt = jnp.dtype(cfg.dtype)
+    max_dec = cfg.max_seq or 448
+    return {
+        "embed": L.embed_init(ks[0], cfg),
+        "pos_enc": (jax.random.normal(ks[1], (cfg.enc_seq, cfg.d_model)) * 0.01).astype(dt),
+        "pos_dec": (jax.random.normal(ks[2], (max_dec, cfg.d_model)) * 0.01).astype(dt),
+        "enc_layers": [enc_block_init(ks[3 + i], cfg)
+                       for i in range(cfg.n_enc_layers)],
+        "dec_layers": [dec_block_init(ks[3 + cfg.n_enc_layers + i], cfg)
+                       for i in range(cfg.n_layers)],
+        "enc_final": L.norm_init(cfg.d_model, cfg),
+        "dec_final": L.norm_init(cfg.d_model, cfg),
+    }
+
+
+def _bidir_attn(p, cfg: ModelConfig, x):
+    """Encoder self-attention: no mask, no RoPE (whisper uses learned pos)."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, h, hd)
+    v = (x @ p["wv"]).reshape(b, s, h, hd)
+    q = shard(q, "batch", "seq", "heads", None)
+    out = L._sdpa(q, k, v, None, None, h, h)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def encode(params, cfg: ModelConfig, frames) -> jnp.ndarray:
+    """frames: [B, enc_seq, d_model] precomputed conv-frontend embeddings."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) + params["pos_enc"][None]
+    x = shard(x, "batch", "seq", None)
+    for p in params["enc_layers"]:
+        h = L.apply_norm(p["norm1"], x, cfg)
+        x = x + _bidir_attn(p["attn"], cfg, h)
+        h = L.apply_norm(p["norm2"], x, cfg)
+        x = x + L.apply_mlp(p["mlp"], cfg, h)
+    return L.apply_norm(params["enc_final"], x, cfg)
+
+
+def _cross_attn(p, cfg: ModelConfig, x, enc_k, enc_v):
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    out = L._sdpa(q, enc_k, enc_v, None, None, h, h)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def _enc_kv(p, cfg: ModelConfig, enc_out):
+    b, t, _ = enc_out.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    k = (enc_out @ p["wk"]).reshape(b, t, h, hd)
+    v = (enc_out @ p["wv"]).reshape(b, t, h, hd)
+    return k, v
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_out
+                 ) -> jnp.ndarray:
+    """Teacher-forced decoder pass. tokens: [B,S]."""
+    b, s = tokens.shape
+    x = L.embed(params["embed"], cfg, tokens) + params["pos_dec"][None, :s]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    for p in params["dec_layers"]:
+        h = L.apply_norm(p["norm1"], x, cfg)
+        # causal self-attn (no RoPE: learned positions already added)
+        q, k, v = L._qkv({**p["attn"]}, _norope(cfg), h, pos)
+        mask = L.causal_mask(s, s, pos, pos, None)
+        sa = L._sdpa(q, k, v, mask, None, cfg.n_heads, cfg.n_kv_heads)
+        x = x + sa.reshape(b, s, -1) @ p["attn"]["wo"]
+        h = L.apply_norm(p["norm_x"], x, cfg)
+        enc_k, enc_v = _enc_kv(p["xattn"], cfg, enc_out)
+        x = x + _cross_attn(p["xattn"], cfg, h, enc_k, enc_v)
+        h = L.apply_norm(p["norm2"], x, cfg)
+        x = x + L.apply_mlp(p["mlp"], cfg, h)
+    x = L.apply_norm(params["dec_final"], x, cfg)
+    return L.unembed(params["embed"], cfg, x)
+
+
+_NOROPE_CACHE: Dict[int, ModelConfig] = {}
+
+
+def _norope(cfg: ModelConfig) -> ModelConfig:
+    from dataclasses import replace
+    key = id(cfg)
+    if key not in _NOROPE_CACHE:
+        _NOROPE_CACHE[key] = replace(cfg, rope_frac=0.0)
+    return _NOROPE_CACHE[key]
+
+
+def train(params, cfg: ModelConfig, frames, tokens) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    enc_out = encode(params, cfg, frames)
+    logits = decode_train(params, cfg, tokens, enc_out)
+    return logits, jnp.float32(0)
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    max_dec = min(max_seq, cfg.max_seq or 448)
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "pos": jnp.int32(0),
+        "self": [{"k": jnp.zeros((batch, max_dec, cfg.n_kv_heads, hd), dt),
+                  "v": jnp.zeros((batch, max_dec, cfg.n_kv_heads, hd), dt)}
+                 for _ in range(cfg.n_layers)],
+        "cross_k": [jnp.zeros((batch, cfg.enc_seq, h, hd), dt)
+                    for _ in range(cfg.n_layers)],
+        "cross_v": [jnp.zeros((batch, cfg.enc_seq, h, hd), dt)
+                    for _ in range(cfg.n_layers)],
+    }
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens, max_seq: int
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Encode audio + teacher-force the prompt, building the decode cache."""
+    b, s = tokens.shape
+    enc_out = encode(params, cfg, frames)
+    cache = cache_init(cfg, b, max_seq)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = L.embed(params["embed"], cfg, tokens) + params["pos_dec"][None, :s]
+    for i, p in enumerate(params["dec_layers"]):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        q, k, v = L._qkv(p["attn"], _norope(cfg), h, pos)
+        cache["self"][i]["k"] = jax.lax.dynamic_update_slice(
+            cache["self"][i]["k"], k, (0, 0, 0, 0))
+        cache["self"][i]["v"] = jax.lax.dynamic_update_slice(
+            cache["self"][i]["v"], v, (0, 0, 0, 0))
+        mask = L.causal_mask(s, s, pos, pos, None)
+        sa = L._sdpa(q, k, v, mask, None, cfg.n_heads, cfg.n_kv_heads)
+        x = x + sa.reshape(b, s, -1) @ p["attn"]["wo"]
+        h = L.apply_norm(p["norm_x"], x, cfg)
+        enc_k, enc_v = _enc_kv(p["xattn"], cfg, enc_out)
+        cache["cross_k"][i] = enc_k
+        cache["cross_v"][i] = enc_v
+        x = x + _cross_attn(p["xattn"], cfg, h, enc_k, enc_v)
+        h = L.apply_norm(p["norm2"], x, cfg)
+        x = x + L.apply_mlp(p["mlp"], cfg, h)
+    x = L.apply_norm(params["dec_final"], x, cfg)
+    logits = L.unembed(params["embed"], cfg, x[:, -1:])[:, 0]
+    cache["pos"] = jnp.int32(s)
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache) -> Tuple[jnp.ndarray, Dict]:
+    b = token.shape[0]
+    pos = cache["pos"]
+    x = L.embed(params["embed"], cfg, token[:, None]) \
+        + jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1, 0)[None]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    new_self = []
+    for i, p in enumerate(params["dec_layers"]):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        q, k1, v1 = L._qkv(p["attn"], _norope(cfg), h, positions)
+        ck = jax.lax.dynamic_update_slice(cache["self"][i]["k"], k1, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["self"][i]["v"], v1, (0, pos, 0, 0))
+        size = ck.shape[1]
+        valid = jnp.arange(size, dtype=jnp.int32) <= pos
+        mask = jnp.broadcast_to(valid[None, None, :], (b, 1, size))
+        sa = L._sdpa(q, ck, cv, mask, None, cfg.n_heads, cfg.n_kv_heads)
+        x = x + sa.reshape(b, 1, -1) @ p["attn"]["wo"]
+        h = L.apply_norm(p["norm_x"], x, cfg)
+        x = x + _cross_attn(p["xattn"], cfg, h, cache["cross_k"][i],
+                            cache["cross_v"][i])
+        h = L.apply_norm(p["norm2"], x, cfg)
+        x = x + L.apply_mlp(p["mlp"], cfg, h)
+        new_self.append({"k": ck, "v": cv})
+    x = L.apply_norm(params["dec_final"], x, cfg)
+    logits = L.unembed(params["embed"], cfg, x)[:, 0]
+    return logits, {"pos": pos + 1, "self": new_self,
+                    "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}

@@ -1,0 +1,234 @@
+"""Model facade: one object per architecture config exposing
+
+    init(rng) -> params
+    loss(params, batch) -> (scalar, aux)           # train_step payload
+    prefill(params, batch, max_seq) -> (logits, cache)
+    decode_step(params, token, cache) -> (logits, cache)
+    init_cache(batch, max_seq) -> cache
+    input_specs(mode, batch, seq) -> dict of ShapeDtypeStruct
+
+Batches are dicts: tokens/labels always; + patches (vlm) or frames (audio)
+from the stubbed modality frontends.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import encdec as ED
+from . import transformer as T
+from . import vlm as V
+from .sharding import shard
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """logits [B,S,V] predicting labels [B,S] (already shifted by caller)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- params ---------------------------------------------------------------
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return ED.init_params(rng, cfg)
+        if cfg.frontend == "vision":
+            return V.init_params(rng, cfg)
+        return T.init_params(rng, cfg)
+
+    # -- train ------------------------------------------------------------------
+    def train_logits(self, params, batch,
+                     remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return ED.train(params, cfg, batch["frames"], batch["tokens"])
+        if cfg.frontend == "vision":
+            return V.train(params, cfg, batch["patches"], batch["tokens"],
+                           remat=remat)
+        return T.lm_train(params, cfg, batch["tokens"], remat=remat)
+
+    def loss(self, params, batch, remat: bool = False) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        logits, aux = self.train_logits(params, batch, remat=remat)
+        tokens = batch["tokens"]
+        if cfg.frontend == "vision":
+            # loss over text positions only: text token i sits at P+i and is
+            # predicted by position P+i-1
+            p_len = logits.shape[1] - tokens.shape[1]
+            pred = logits[:, p_len - 1:-1]
+            ce = cross_entropy(pred, tokens[:, :] if p_len == 0 else tokens)
+        else:
+            ce = cross_entropy(logits[:, :-1], tokens[:, 1:])
+        total = ce + aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -- serve ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return ED.cache_init(cfg, batch, max_seq)
+        return T.cache_init(cfg, batch, max_seq)
+
+    def prefill(self, params, batch, max_seq: int) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return ED.prefill(params, cfg, batch["frames"], batch["tokens"], max_seq)
+        if cfg.frontend == "vision":
+            return V.prefill(params, cfg, batch["patches"], batch["tokens"], max_seq)
+        return T.lm_prefill(params, cfg, batch["tokens"], max_seq)
+
+    def decode_step(self, params, token, cache) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return ED.decode_step(params, cfg, token, cache)
+        return T.lm_decode(params, cfg, token, cache)
+
+    # -- stacked (scanned) layout: what the production launcher lowers -----------
+    @property
+    def supports_stacked(self) -> bool:
+        return not self.cfg.enc_dec
+
+    def init_stacked(self, rng) -> Dict:
+        params = self.init(rng)
+        return self.stack_params(params)
+
+    def stack_params(self, params) -> Dict:
+        if not self.supports_stacked:
+            return params
+        return T.stack_params(self.cfg, params)
+
+    def loss_stacked(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return self.loss(params, batch)
+        tokens = batch["tokens"]
+        if cfg.frontend == "vision":
+            import jax.numpy as _j
+            from . import layers as _L
+            pe = _L.apply_norm(params["vis_norm"],
+                               batch["patches"].astype(_j.dtype(cfg.dtype)), cfg)
+            te = _L.embed(params["embed"], cfg, tokens)
+            x = _j.concatenate([pe, te], axis=1)
+            h, aux = T.backbone_train_stacked(params, cfg, x)
+            logits = _L.unembed(params["embed"], cfg, h)
+            p_len = logits.shape[1] - tokens.shape[1]
+            ce = cross_entropy(logits[:, p_len - 1:-1], tokens)
+        else:
+            logits, aux = T.lm_train_stacked(params, cfg, tokens)
+            ce = cross_entropy(logits[:, :-1], tokens[:, 1:])
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def init_cache_stacked(self, batch: int, max_seq: int) -> Dict:
+        if self.cfg.enc_dec:
+            return self.init_cache(batch, max_seq)
+        return T.cache_init_stacked(self.cfg, batch, max_seq)
+
+    def prefill_stacked(self, params, batch, max_seq: int):
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return self.prefill(params, batch, max_seq)
+        if cfg.frontend == "vision":
+            import jax.numpy as _j
+            from . import layers as _L
+            pe = _L.apply_norm(params["vis_norm"],
+                               batch["patches"].astype(_j.dtype(cfg.dtype)), cfg)
+            te = _L.embed(params["embed"], cfg, batch["tokens"])
+            x = _j.concatenate([pe, te], axis=1)
+            return T.lm_prefill_stacked(params, cfg, None, max_seq, x=x)
+        return T.lm_prefill_stacked(params, cfg, batch["tokens"], max_seq)
+
+    def decode_step_stacked(self, params, token, cache):
+        if self.cfg.enc_dec:
+            return self.decode_step(params, token, cache)
+        return T.lm_decode_stacked(params, self.cfg, token, cache)
+
+    # -- shape plumbing ------------------------------------------------------------
+    def clamp_seq(self, seq: int) -> int:
+        return min(seq, self.cfg.max_seq) if self.cfg.max_seq else seq
+
+    def input_specs(self, mode: str, batch: int, seq: int) -> Dict:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation).
+        mode: train | prefill | decode."""
+        cfg = self.cfg
+        seq = self.clamp_seq(seq)
+        i32 = jnp.int32
+        emb = jnp.dtype(cfg.dtype)
+        S = jax.ShapeDtypeStruct
+        if mode == "decode":
+            return {"token": S((batch,), i32)}
+        specs = {"tokens": S((batch, seq), i32)}
+        if cfg.enc_dec:
+            specs["frames"] = S((batch, cfg.enc_seq, cfg.d_model), emb)
+        if cfg.frontend == "vision":
+            specs["patches"] = S((batch, cfg.n_patches, cfg.d_model), emb)
+        return specs
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+    def model_flops_per_token(self) -> float:
+        """6·N (dense) or 6·N_active (MoE) — the §Roofline MODEL_FLOPS term
+        (per token, times seq·batch for a step, ×3 for fwd+bwd? no: 6N·D
+        already counts fwd+bwd; serve uses 2N·D)."""
+        n = self.active_param_count()
+        return 6.0 * n
+
+    def active_param_count(self) -> int:
+        """Analytic parameter count, MoE counted at top_k + shared."""
+        cfg = self.cfg
+        d, hd = cfg.d_model, cfg.resolved_head_dim
+        if cfg.mla:
+            attn = (d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                    + cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+                    + (d * cfg.q_lora_rank
+                       + cfg.q_lora_rank * cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+                       if cfg.q_lora_rank else d * cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim))
+                    + cfg.n_heads * cfg.v_head_dim * d)
+        else:
+            attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+        glu = 3 if cfg.mlp_glu else 2
+        per_layer = {}
+        total = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+        for i in range(cfg.n_layers):
+            kind = cfg.kind(i)
+            if kind in ("G", "L"):
+                mix = attn
+            elif kind == "R":
+                w = cfg.lru_width or d
+                mix = d * w * 2 + w * w * 2 + w * d
+            elif kind == "S":
+                d_inner = cfg.ssm_expand * d
+                n = cfg.ssm_state
+                mix = d * (2 * d_inner + 2 * n + d_inner // cfg.ssm_head_dim) \
+                    + d_inner * d
+            total += mix
+            if kind == "S":
+                continue
+            if cfg.is_moe_layer(i):
+                f = cfg.d_ff_expert or cfg.d_ff
+                total += glu * d * f * cfg.top_k
+                total += glu * d * f * cfg.n_shared_experts
+                total += d * cfg.n_experts  # router
+            else:
+                total += glu * d * cfg.d_ff
+        if cfg.enc_dec:
+            total += cfg.n_enc_layers * (attn + glu * d * cfg.d_ff)
+            total += cfg.n_layers * (4 * d * cfg.n_heads * hd)  # cross-attn
+        return total
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

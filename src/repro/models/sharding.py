@@ -1,0 +1,61 @@
+"""Logical-axis sharding annotations for model code.
+
+Model code tags activations with *logical* axis names; the launcher installs
+rules mapping logical names to mesh axes.  With no rules installed (CPU
+tests), every annotation is a no-op — the same model code runs single-device
+and on the production mesh.
+
+    with sharding_rules(batch=("pod", "data"), heads="model", ...):
+        lowered = jax.jit(step).lower(...)
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Dict[str, Union[str, Tuple[str, ...], None]]:
+    return getattr(_state, "rules", None) or {}
+
+
+def current_rules() -> Dict[str, Union[str, Tuple[str, ...], None]]:
+    """Installed logical-axis rules (empty dict when none).  The launcher
+    additionally stashes the live Mesh under key "__mesh__" so modules that
+    need explicit collectives (shard_map MoE) can reach it."""
+    return _rules()
+
+
+@contextmanager
+def sharding_rules(**rules):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def logical_spec(*names: Optional[str]) -> P:
+    rules = _rules()
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def shard(x, *names: Optional[str]):
+    """Annotate array x (rank == len(names)) with logical axes.  No-op when no
+    rules are installed or the annotation refers to axes absent from the
+    ambient mesh."""
+    rules = _rules()
+    if not rules:
+        return x
+    if x.ndim != len(names):
+        raise ValueError(f"shard({x.shape}) got {len(names)} names {names}")
+    try:
+        return jax.lax.with_sharding_constraint(x, logical_spec(*names))
+    except Exception:
+        return x  # no mesh in context / inapplicable spec for this shape

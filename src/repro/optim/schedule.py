@@ -1,0 +1,22 @@
+"""LR schedules as jnp-safe callables (traced step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def lr(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         min_frac: float = 0.05):
+    cos = cosine_schedule(base_lr, max(1, total_steps - warmup), min_frac)
+
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(1, warmup)
+        return jnp.where(s < warmup, warm, cos(jnp.maximum(s - warmup, 0)))
+    return lr

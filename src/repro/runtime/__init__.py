@@ -1,0 +1,1 @@
+from .scheduler import Device, Runtime

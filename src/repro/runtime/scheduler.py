@@ -1,0 +1,152 @@
+"""Multi-pipeline runtime: simulates an among-device deployment in-process.
+
+Each Device owns a clock (with skew/jitter — real consumer devices disagree
+about time) and a set of pipelines.  The Runtime drives everything with a
+global tick (default 60 Hz frame cadence, matching the paper's evaluation):
+
+  * per tick, every device advances its clock and runs each pipeline whose
+    inputs are ready (mqttsrc with an empty channel = not ready, like a
+    GStreamer src blocking on no data);
+  * mqttsink pushes into its Channel; Channels can carry latency (the
+    paper's queue2 latency-injection experiment) and bounded capacity with
+    leaky-drop semantics;
+  * query clients run synchronously against their server pipeline (the
+    runtime wires ``inline_runner`` so a client step triggers the remote
+    inference — one round-trip per frame, as in Fig. 2).
+
+Statistics (frames, drops, bytes, per-sink pts) feed the Fig. 7 benchmark.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from ..core.broker import Broker, BrokerError
+from ..core.buffers import StreamBuffer
+from ..core.element import Element
+from ..core.pipeline import Pipeline
+from ..core.pubsub import Channel, MqttSink, MqttSrc
+from ..core.query import TensorQueryClient, TensorQueryServerSrc
+from ..core.sync import PipelineClock, SimClock
+
+TICK_NS = 16_666_667  # 60 Hz
+
+
+@dataclass
+class _PipeRun:
+    pipe: Pipeline
+    params: dict
+    state: dict
+    step_fn: Callable
+    frames: int = 0
+    skipped: int = 0
+    last_outputs: Dict[str, StreamBuffer] = field(default_factory=dict)
+    sink_log: Dict[str, list] = field(default_factory=dict)
+
+
+class Device:
+    def __init__(self, name: str, clock: Optional[SimClock] = None):
+        self.name = name
+        self.clock = clock or SimClock()
+        self.pipeline_clock = PipelineClock(self.clock)
+        self.runs: List[_PipeRun] = []
+
+    def add_pipeline(self, pipe: Pipeline, rng=None, jit: bool = True) -> _PipeRun:
+        pipe.realize()
+        # wire pipeline clock into pub/sub elements for §4.2.3 sync
+        for e in pipe.elements.values():
+            if isinstance(e, (MqttSink, MqttSrc)) and e.sync_clock is None:
+                e.sync_clock = self.pipeline_clock
+        params = pipe.init(rng if rng is not None else jax.random.PRNGKey(0))
+        state = pipe.init_state()
+        fn = jax.jit(pipe.step) if jit else pipe.step
+        run = _PipeRun(pipe=pipe, params=params, state=state, step_fn=fn)
+        self.runs.append(run)
+        return run
+
+
+class Runtime:
+    def __init__(self, broker: Optional[Broker] = None, tick_ns: int = TICK_NS):
+        self.broker = broker or Broker()
+        self.devices: List[Device] = []
+        self.tick_ns = tick_ns
+        self.ticks = 0
+
+    def add_device(self, device: Device) -> Device:
+        self.devices.append(device)
+        # connect broker-facing elements & calibrate NTP against the broker's
+        # reference clock (a fresh zero-skew SimClock)
+        if not hasattr(self, "_ntp_ref"):
+            self._ntp_ref = SimClock()
+        for run in device.runs:
+            self._wire(device, run)
+        device.pipeline_clock.calibrate(self._ntp_ref)
+        device.pipeline_clock.start()
+        return device
+
+    def _wire(self, device: Device, run: _PipeRun):
+        for e in run.pipe.elements.values():
+            if isinstance(e, (MqttSink, MqttSrc, TensorQueryClient)) and e.broker is None:
+                e.connect(self.broker)
+            if isinstance(e, TensorQueryServerSrc) and e.registration is None:
+                e.connect(self.broker, inline_runner=lambda r=run: self._run_once(r))
+        # (re)negotiate with broker wiring in place so mqttsink registers
+        run.pipe._realized = False
+        run.pipe.realize()
+
+    # -- readiness ---------------------------------------------------------------
+    def _ready(self, run: _PipeRun) -> bool:
+        for e in run.pipe.elements.values():
+            if isinstance(e, MqttSrc):
+                try:
+                    if len(e._resolve()) == 0:
+                        return False
+                except BrokerError:
+                    return False
+            if isinstance(e, TensorQueryServerSrc):
+                if len(e.endpoint.requests) == 0:
+                    return False
+        return True
+
+    def _run_once(self, run: _PipeRun):
+        # host-level elements (mqttsrc pull / query send) are impure, so
+        # pipelines containing them run un-jitted; pure pipelines run jitted.
+        outputs, run.state = run.pipe.step(run.params, run.state)
+        run.frames += 1
+        run.last_outputs = outputs
+        for name, buf in outputs.items():
+            run.sink_log.setdefault(name, []).append(buf)
+        return outputs
+
+    def tick(self):
+        self.ticks += 1
+        self._ntp_ref.advance(self.tick_ns)
+        for dev in self.devices:
+            dev.clock.advance(self.tick_ns)
+        for dev in self.devices:
+            for run in dev.runs:
+                if any(isinstance(e, TensorQueryServerSrc)
+                       for e in run.pipe.elements.values()):
+                    continue  # servers run inline, driven by clients
+                if self._ready(run):
+                    self._run_once(run)
+                else:
+                    run.skipped += 1
+
+    def run(self, n_ticks: int):
+        for _ in range(n_ticks):
+            self.tick()
+        return self
+
+    # -- stats --------------------------------------------------------------------
+    def stats(self) -> Dict[str, Dict]:
+        out = {}
+        for dev in self.devices:
+            for i, run in enumerate(dev.runs):
+                key = f"{dev.name}/p{i}"
+                out[key] = {"frames": run.frames, "skipped": run.skipped}
+        out["broker"] = {"relay_msgs": self.broker.relay_msgs,
+                         "relay_bytes": self.broker.relay_bytes}
+        return out

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# src-layout import path (tests run as `PYTHONPATH=src pytest tests/`, this
+# makes plain `pytest` work too).  NOTE: no XLA_FLAGS here — smoke tests and
+# benches must see 1 device; only launch/dryrun.py forges 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,69 @@
+"""Per-assigned-architecture smoke tests: a REDUCED variant of the same
+family (<=3 layers, d_model<=256, <=4 experts) runs one forward and one
+train step on CPU, asserting output shapes and no NaNs.  The FULL configs
+are exercised only via launch/dryrun.py (ShapeDtypeStruct, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.optim import adamw_init, adamw_update
+
+SEQ = 16
+BATCH = 2
+
+
+def _smoke_batch(cfg, rng):
+    batch = {"tokens": jax.random.randint(rng, (BATCH, SEQ), 0, cfg.vocab)}
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(rng, (BATCH, cfg.enc_seq, cfg.d_model))
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.random.normal(rng, (BATCH, cfg.n_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).smoke()
+    assert cfg.n_layers <= 3 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+
+    logits, aux = m.train_logits(params, batch)
+    assert logits.shape[0] == BATCH and logits.shape[-1] == cfg.vocab
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    # one real optimizer step
+    opt = adamw_init(params)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: m.loss(p, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    new_params, opt, info = adamw_update(params, grads, opt, lr=1e-3)
+    assert np.isfinite(float(info["grad_norm"]))
+    # params actually moved
+    moved = jax.tree_util.tree_reduce(
+        lambda a, l: a + float(jnp.sum(jnp.abs(l[0] - l[1]))),
+        jax.tree_util.tree_map(lambda a, b: (a, b), new_params, params), 0.0)
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_serve_step(arch):
+    cfg = get_config(arch).smoke()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+    total = SEQ + (cfg.n_patches if cfg.frontend == "vision" else 0)
+    logits, cache = m.prefill(params, batch, max_seq=total + 4)
+    assert logits.shape == (BATCH, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    nxt = jnp.argmax(logits, -1)
+    logits2, cache = m.decode_step(params, nxt, cache)
+    assert logits2.shape == (BATCH, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits2)))
+    assert int(cache["pos"]) == total + 1

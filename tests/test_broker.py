@@ -1,0 +1,81 @@
+"""Broker: MQTT-style discovery (R3) and failover (R4)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Broker, BrokerError, Caps, topic_matches
+
+
+class TestTopicMatching:
+    def test_exact(self):
+        assert topic_matches("/objdetect/mobilev3", "/objdetect/mobilev3")
+        assert not topic_matches("/objdetect/mobilev3", "/objdetect/yolov2")
+
+    def test_hash_wildcard(self):
+        # the paper's example: subscribe "/objdetect/#"
+        assert topic_matches("/objdetect/#", "/objdetect/mobilev3")
+        assert topic_matches("/objdetect/#", "/objdetect/yolov2")
+        assert topic_matches("/objdetect/#", "/objdetect/a/b/c")
+        assert not topic_matches("/objdetect/#", "/posestim/x")
+
+    def test_plus_wildcard(self):
+        assert topic_matches("cam/+/rgb", "cam/left/rgb")
+        assert not topic_matches("cam/+/rgb", "cam/left/depth")
+        assert not topic_matches("cam/+", "cam/left/rgb")
+
+    topic_seg = st.text(alphabet="abcz09", min_size=1, max_size=4)
+
+    @given(st.lists(topic_seg, min_size=1, max_size=4))
+    @settings(max_examples=50, deadline=None)
+    def test_self_match_and_hash(self, segs):
+        topic = "/".join(segs)
+        assert topic_matches(topic, topic)
+        assert topic_matches("#", topic)
+        assert topic_matches("/".join(segs[:-1] + ["+"]), topic)
+
+
+class TestDiscovery:
+    def test_capability_based_connection(self):
+        b = Broker()
+        b.register("/objdetect/mobilev3", Caps.ANY, "ep1", model="mobilenetv3")
+        b.register("/objdetect/yolov2", Caps.ANY, "ep2", model="yolov2")
+        found = b.discover("/objdetect/#")
+        assert [r.endpoint for r in found] == ["ep1", "ep2"]
+
+    def test_spec_filters(self):
+        # servers may declare extra specs ("model and version") for clients
+        b = Broker()
+        b.register("query/det", Caps.ANY, "a", version=1)
+        b.register("query/det", Caps.ANY, "b", version=2)
+        assert b.subscribe("query/det", version=2).endpoint == "b"
+
+    def test_no_publisher_raises(self):
+        b = Broker()
+        with pytest.raises(BrokerError):
+            _ = b.subscribe("nothing/here").endpoint
+
+
+class TestFailover:
+    def test_rebind_on_down(self):
+        b = Broker()
+        r1 = b.register("svc/x", Caps.ANY, "primary")
+        r2 = b.register("svc/x", Caps.ANY, "backup")
+        sub = b.subscribe("svc/#")
+        assert sub.endpoint == "primary"
+        b.mark_down(r1)
+        assert sub.endpoint == "backup"
+        assert sub.failovers == 1
+
+    def test_late_publisher_binds(self):
+        b = Broker()
+        sub = b.subscribe("svc/#")
+        assert sub.current is None
+        b.register("svc/x", Caps.ANY, "late")
+        assert sub.endpoint == "late"
+
+    def test_unregister_then_empty(self):
+        b = Broker()
+        r = b.register("svc/x", Caps.ANY, "only")
+        sub = b.subscribe("svc/x")
+        b.unregister(r)
+        with pytest.raises(BrokerError):
+            _ = sub.endpoint

@@ -1,0 +1,87 @@
+"""Stream data types (paper §4.1): static/flexible/sparse formats + caps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Caps, CapsError, TensorFormat, TensorSpec,
+                        flex_unwrap, flex_wrap)
+from repro.core.pipeline import parse_caps
+
+
+class TestTensorSpec:
+    def test_static_compat_exact(self):
+        a = TensorSpec((3, 4), "float32")
+        assert a.compatible(TensorSpec((3, 4), "float32"))
+        assert not a.compatible(TensorSpec((4, 3), "float32"))
+        assert not a.compatible(TensorSpec((3, 4), "int32"))
+
+    def test_flexible_capacity(self):
+        small = TensorSpec((16,), "float32", TensorFormat.FLEXIBLE)
+        big = TensorSpec((64,), "float32", TensorFormat.FLEXIBLE)
+        assert small.compatible(big)
+        assert not big.compatible(small)
+
+    def test_sparse_needs_nnz_bound(self):
+        sp = TensorSpec((8, 8), "float32", TensorFormat.SPARSE)
+        assert sp.max_nnz == 64  # defaults to dense size
+
+    def test_rank_limit(self):
+        with pytest.raises(CapsError):
+            TensorSpec((1, 2, 3, 4, 5))
+
+    def test_bad_dtype(self):
+        with pytest.raises(CapsError):
+            TensorSpec((2,), "complex64")
+
+
+class TestCaps:
+    def test_any_intersection(self):
+        c = Caps(media="other/tensors", tensors=(TensorSpec((2, 2)),))
+        assert Caps.ANY.intersect(c) is c
+        assert c.intersect(Caps.ANY) is c
+
+    def test_media_mismatch(self):
+        with pytest.raises(CapsError):
+            Caps(media="video/x-raw").intersect(Caps(media="other/tensors"))
+
+    def test_num_tensors_mismatch(self):
+        a = Caps(tensors=(TensorSpec((2,)),))
+        b = Caps(tensors=(TensorSpec((2,)), TensorSpec((3,))))
+        with pytest.raises(CapsError):
+            a.intersect(b)
+
+
+class TestParseCaps:
+    def test_video(self):
+        c = parse_caps("video/x-raw,width=300,height=300,format=RGB")
+        assert c.tensors[0].shape == (300, 300, 3)
+
+    def test_nnstreamer_dims(self):
+        # NNStreamer dims are innermost-first (Listing 2 of the paper)
+        c = parse_caps('other/tensors,num_tensors=4,dimensions=4:20:1:1,'
+                       '20:1:1:1,20:1:1:1,1:1:1:1,types=float32,float32,'
+                       'float32,float32')
+        assert c.num_tensors == 4
+        assert c.tensors[0].shape == (20, 4)
+        assert c.tensors[1].shape == (20,)
+
+    def test_flexible_format(self):
+        c = parse_caps("other/tensors,format=flexible,dimensions=8:1:1:1,types=float32")
+        assert c.tensors[0].format == TensorFormat.FLEXIBLE
+
+
+class TestFlexible:
+    @given(st.integers(1, 6), st.integers(1, 6))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip(self, h, w):
+        x = jnp.arange(h * w, dtype=jnp.float32).reshape(h, w)
+        payload, hdr = flex_wrap(x, capacity=64)
+        assert payload.shape == (64,)
+        assert int(hdr.valid) == h * w
+        y = flex_unwrap(payload, hdr, static_shape=(h, w))
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+    def test_capacity_overflow(self):
+        with pytest.raises(ValueError):
+            flex_wrap(jnp.zeros((100,)), capacity=10)

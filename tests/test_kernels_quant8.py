@@ -1,0 +1,50 @@
+"""Pallas quant8 kernel vs pure-jnp oracle: shape/dtype sweeps (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _check(x):
+    q, s = ops.quantize8(x)
+    qr, sr = ref.quantize8_ref(x.reshape(1, -1) if x.ndim == 1 else x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    xd = ops.dequantize8(q, s)
+    x2 = np.asarray(x, np.float32).reshape(q.shape[0] and (-1, x.shape[-1]) or x.shape)
+    m, n = (1, x.shape[0]) if x.ndim == 1 else x.shape
+    err = np.abs(np.asarray(xd)[:m, :n] - np.asarray(x, np.float32).reshape(m, n))
+    tol = np.abs(np.asarray(x)).max(initial=0) / 127 + 1e-7
+    assert err.max(initial=0) <= tol + 1e-6
+
+
+@given(st.integers(1, 70), st.integers(1, 300),
+       st.sampled_from(["float32", "bfloat16"]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_quant_roundtrip_sweep(m, n, dtype, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, n),
+                          dtype=jnp.dtype(dtype)) * 5
+    _check(x.astype(jnp.float32))
+
+
+def test_zero_tile_scale_is_one():
+    q, s = ops.quantize8(jnp.zeros((32, 128)))
+    assert np.all(np.asarray(s) == 1.0)
+    assert np.all(np.asarray(q) == 0)
+
+
+def test_quant_error_bound_random():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 256)) * 3
+    q, s = ops.quantize8(x)
+    xd = ops.dequantize8(q, s)[:64, :256]
+    # per-tile absmax/127 bound
+    assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(jnp.abs(x))) / 127 + 1e-6
+
+
+def test_3d_input_flattens():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 96))
+    q, s = ops.quantize8(x)
+    assert q.shape[1] % 128 == 0

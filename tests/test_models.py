@@ -1,0 +1,182 @@
+"""Model-family correctness: every mixer family's decode path must match the
+teacher-forced oracle, and stacked (scanned) layout must equal list layout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, build_model
+
+SEQ = 16
+
+
+def _roundtrip(cfg, extra=None, cache_extra=8):
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, SEQ), 0,
+                                          cfg.vocab)}
+    if extra:
+        batch.update(extra)
+    loss, _ = jax.jit(m.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    total = SEQ + (cfg.n_patches if cfg.frontend == "vision" else 0)
+    logits_pf, cache = m.prefill(params, batch, max_seq=total + cache_extra)
+    nxt = jnp.argmax(logits_pf, -1)
+    logits_d, _ = m.decode_step(params, nxt, cache)
+    b2 = dict(batch)
+    b2["tokens"] = jnp.concatenate([batch["tokens"], nxt[:, None]], 1)
+    logits_t, _ = m.train_logits(params, b2)
+    scale = float(jnp.max(jnp.abs(logits_t[:, -1]))) + 1e-6
+    err = float(jnp.max(jnp.abs(logits_d - logits_t[:, -1]))) / scale
+    assert err < 1e-2, f"decode vs oracle rel err {err}"
+    return m, params, batch
+
+
+FAMILIES = {
+    "dense_gqa_bias": ModelConfig(
+        name="t", arch_type="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=97, qkv_bias=True, layer_pattern="LG",
+        window=8, dtype="float32"),
+    "moe_swa": ModelConfig(
+        name="t", arch_type="moe", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=97, n_experts=4, top_k=2,
+        d_ff_expert=64, layer_pattern="L", window=8, capacity_factor=2.0,
+        dtype="float32"),
+    "mla_moe_shared": ModelConfig(
+        name="t", arch_type="moe", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=97, mla=True, kv_lora_rank=32,
+        q_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+        n_experts=4, top_k=2, n_shared_experts=1, d_ff_expert=32,
+        first_dense=1, capacity_factor=2.0, dtype="float32"),
+    "ssm_mamba2": ModelConfig(
+        name="t", arch_type="ssm", n_layers=2, d_model=64, n_heads=0,
+        n_kv_heads=0, d_ff=0, vocab=97, layer_pattern="S", ssm_state=16,
+        ssm_head_dim=16, ssm_chunk=8, dtype="float32"),
+    "hybrid_rglru": ModelConfig(
+        name="t", arch_type="hybrid", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=1, d_ff=128, vocab=97, layer_pattern="RRL", window=8,
+        lru_width=64, dtype="float32"),
+    "partial_rope_layernorm": ModelConfig(
+        name="t", arch_type="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=97, rope_frac=0.25, norm="layernorm",
+        dtype="float32"),
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_family_decode_oracle(family):
+    _roundtrip(FAMILIES[family])
+
+
+def test_whisper_encdec():
+    cfg = ModelConfig(name="t", arch_type="audio", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab=97,
+                      enc_dec=True, n_enc_layers=2, enc_seq=12, max_seq=40,
+                      mlp_glu=False, act="gelu", norm="layernorm",
+                      dtype="float32")
+    frames = jax.random.normal(jax.random.PRNGKey(3), (2, 12, 64))
+    _roundtrip(cfg, extra={"frames": frames})
+
+
+def test_vlm_patch_prefix():
+    cfg = ModelConfig(name="t", arch_type="vlm", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=97,
+                      frontend="vision", n_patches=8, dtype="float32")
+    patches = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 64))
+    _roundtrip(cfg, extra={"patches": patches})
+
+
+@pytest.mark.parametrize("family", ["dense_gqa_bias", "mla_moe_shared",
+                                    "hybrid_rglru", "ssm_mamba2"])
+def test_stacked_equals_list(family):
+    cfg = FAMILIES[family]
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    sp = m.stack_params(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, SEQ), 0, cfg.vocab)
+    l1, _ = m.loss(params, {"tokens": toks})
+    l2, _ = m.loss_stacked(sp, {"tokens": toks})
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    # prefill+decode parity
+    lp, cache = m.prefill_stacked(sp, {"tokens": toks}, max_seq=SEQ + 8)
+    lp2, _ = m.prefill(params, {"tokens": toks}, max_seq=SEQ + 8)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lp2), rtol=1e-4,
+                               atol=1e-4)
+    nxt = jnp.argmax(lp, -1)
+    ld, _ = m.decode_step_stacked(sp, nxt, cache)
+    toks2 = jnp.concatenate([toks, nxt[:, None]], 1)
+    lt, _ = m.train_logits(params, {"tokens": toks2})
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lt[:, -1]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_remat_does_not_change_loss():
+    cfg = FAMILIES["dense_gqa_bias"]
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, SEQ), 0, cfg.vocab)
+    l1, _ = m.loss(params, {"tokens": toks})
+    l2, _ = m.loss(params, {"tokens": toks}, remat=True)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_sliding_window_masks_history():
+    """A window-L model must ignore tokens older than the window."""
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=13,
+                      layer_pattern="L", window=4, dtype="float32")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, 13)
+    t2 = t1.at[:, 0].set((t1[0, 0] + 1) % 13)  # mutate far-history token
+    l1, _ = m.train_logits(params, {"tokens": t1})
+    l2, _ = m.train_logits(params, {"tokens": t2})
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               atol=1e-5)
+
+
+def test_int8_kv_cache_decode_close_to_exact():
+    """kv_cache_quant: pure-decode path with int8 cache tracks the exact
+    teacher-forced logits within quantization noise."""
+    from dataclasses import replace
+    cfg = FAMILIES["dense_gqa_bias"]
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, cfg.vocab)
+    mq = build_model(replace(cfg, kv_cache_quant=True))
+    cq = mq.init_cache(2, 24)
+    for i in range(17):
+        lq, cq = mq.decode_step(params, toks[:, i], cq)
+    lt, _ = m.train_logits(params, {"tokens": toks})
+    scale = float(jnp.max(jnp.abs(lt[:, -1]))) + 1e-9
+    err = float(jnp.max(jnp.abs(lq - lt[:, -1]))) / scale
+    assert err < 0.05, err
+
+
+def test_flash_attn_production_path_matches_einsum():
+    from dataclasses import replace
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=97,
+                      dtype="float32")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, 97)
+    l1, _ = m.train_logits(params, {"tokens": toks})
+    m2 = build_model(replace(cfg, use_flash_attn=True))
+    l2, _ = m2.train_logits(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_perf_variant_numerics_mla():
+    """mla_fused_qk + attn_additive_mask preserve MLA numerics."""
+    from dataclasses import replace
+    cfg = FAMILIES["mla_moe_shared"]
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, SEQ), 0, cfg.vocab)
+    l1, _ = m.train_logits(params, {"tokens": toks})
+    m2 = build_model(replace(cfg, mla_fused_qk=True, attn_additive_mask=True))
+    l2, _ = m2.train_logits(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=1e-4, rtol=1e-4)

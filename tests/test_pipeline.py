@@ -1,0 +1,148 @@
+"""Pipeline graph + parse_launch: the paper's Listing-1/2 style descriptions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Caps, CapsError, Pipeline, TensorSpec, parse_launch
+from repro.core.elements import register_model
+
+
+@pytest.fixture(scope="module", autouse=True)
+def models():
+    def init(rng):
+        return {"w": jax.random.normal(rng, (3, 10)) * 0.1}
+
+    def apply(p, x):
+        return jnp.mean(x.reshape(-1, 3), 0) @ p["w"]
+
+    register_model("tinycls", init, apply,
+                   out_specs=(TensorSpec((10,), "float32"),))
+    # SSD-style two-output detector for the bounding_boxes decoder
+    def init_det(rng):
+        return {}
+
+    def apply_det(p, x):
+        boxes = jnp.array([[0.1, 0.1, 0.5, 0.6], [0.2, 0.3, 0.4, 0.5]])
+        scores = jnp.array([0.9, 0.1])
+        return boxes, scores
+
+    register_model("tinydet", init_det, apply_det,
+                   out_specs=(TensorSpec((2, 4), "float32"),
+                              TensorSpec((2,), "float32")))
+
+
+def _run(pipe, n=1):
+    pipe.realize()
+    params = pipe.init(jax.random.PRNGKey(0))
+    state = pipe.init_state()
+    step = jax.jit(pipe.step)
+    outs = None
+    for _ in range(n):
+        outs, state = step(params, state)
+    return outs
+
+
+class TestParseLaunch:
+    def test_listing1_style(self):
+        """The paper's Listing 1 client pipeline, with a local filter instead
+        of the query client (R1: they are drop-in interchangeable)."""
+        pipe = parse_launch("""
+            v4l2src name=cam ! tee name=ts
+            ts. queue leaky=2 ! videoconvert ! mix.sink_1
+            ts. videoconvert ! videoscale !
+              video/x-raw,width=16,height=16,format=RGB !
+              tensor_converter !
+              tensor_transform mode=arithmetic option=typecast:float32,add:-127.5,div:127.5 !
+              tensor_filter model=tinydet !
+              tensor_decoder mode=bounding_boxes option4=64:48 ! queue ! mix.sink_0
+            compositor name=mix sink_0::zorder=2 sink_1::zorder=1 ! videoconvert !
+              appsink name=display
+        """)
+        outs = _run(pipe, n=2)
+        assert outs["display"].tensor.shape[-1] in (3, 4)
+
+    def test_forward_reference(self):
+        pipe = parse_launch("""
+            testsrc ! tensor_converter ! mux.sink_0
+            testsrc ! tensor_converter ! mux.sink_1
+            tensor_mux name=mux ! appsink name=o
+        """)
+        outs = _run(pipe)
+        assert len(outs["o"].tensors) == 2
+
+    def test_caps_mismatch_fails_at_link_time(self):
+        pipe = parse_launch("""
+            testsrc width=8 height=8 !
+            video/x-raw,width=32,height=32,format=RGB ! appsink
+        """)
+        with pytest.raises(CapsError):
+            pipe.realize()
+
+    def test_unknown_factory(self):
+        with pytest.raises(KeyError):
+            parse_launch("nosuchelement ! appsink")
+
+    def test_demux_src_pads(self):
+        pipe = parse_launch("""
+            testsrc ! tensor_converter ! mux.sink_0
+            testsrc ! tensor_converter ! mux.sink_1
+            tensor_mux name=mux ! tensor_demux name=d
+            d.src_0 ! appsink name=a
+            d.src_1 ! appsink name=b
+        """)
+        outs = _run(pipe)
+        assert outs["a"].tensor.shape == outs["b"].tensor.shape
+
+
+class TestPipelineSemantics:
+    def test_jit_purity_and_state(self):
+        pipe = parse_launch("testsrc name=s width=8 height=8 ! appsink name=o")
+        pipe.realize()
+        params, state = pipe.init(jax.random.PRNGKey(0)), pipe.init_state()
+        step = jax.jit(pipe.step)
+        o1, state = step(params, state)
+        o2, state = step(params, state)
+        # deterministic source advances with state
+        assert int(o1["o"].pts) != int(o2["o"].pts)
+
+    def test_tensor_transform_arithmetic(self):
+        pipe = parse_launch("""
+            testsrc width=8 height=8 ! tensor_converter !
+            tensor_transform mode=arithmetic option=typecast:float32,add:-127.5,div:127.5 !
+            appsink name=o
+        """)
+        outs = _run(pipe)
+        x = np.asarray(outs["o"].tensor)
+        assert x.dtype == np.float32
+        assert x.min() >= -1.0 and x.max() <= 1.0
+
+    def test_sparse_enc_dec_elements(self):
+        pipe = parse_launch("""
+            testsrc width=8 height=8 ! tensor_converter !
+            tensor_transform mode=arithmetic option=typecast:float32 !
+            tensor_sparse_enc max_nnz=256 ! tensor_sparse_dec ! appsink name=o
+        """)
+        outs = _run(pipe)
+        assert outs["o"].tensor.shape == (8, 8, 3)
+
+    def test_tensor_if_gates(self):
+        pipe = parse_launch("""
+            testsrc width=4 height=4 ! tensor_converter !
+            tensor_transform mode=arithmetic option=typecast:float32,div:255.0 !
+            tensor_if threshold=2.0 operator=GE ! appsink name=o
+        """)
+        outs = _run(pipe)
+        # normalized frame max < 2.0 -> gate closed -> zeros + flag 0
+        assert float(jnp.max(outs["o"].tensors[0])) == 0.0
+        assert int(outs["o"].tensors[-1]) == 0
+
+    def test_cycle_detection(self):
+        from repro.core.element import element_factory
+        p = Pipeline()
+        a = element_factory("videoconvert", name="a")
+        b = element_factory("videoconvert", name="b")
+        p.link(a, b)
+        p.link(b, a)
+        with pytest.raises(CapsError):
+            p.realize()

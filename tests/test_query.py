@@ -1,0 +1,124 @@
+"""Query protocol (paper §4.2.2): transparent offloading, multi-client
+routing, MQTT-hybrid failover vs TCP-raw none."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Broker, BrokerError, StreamBuffer, TensorSpec,
+                        parse_launch)
+from repro.core.elements import register_model
+from repro.core.query import (QueryTransport, TensorQueryClient,
+                              TensorQueryServerSink, TensorQueryServerSrc)
+from repro.runtime import Device, Runtime
+
+
+@pytest.fixture(scope="module", autouse=True)
+def models():
+    def init(rng):
+        return {"w": jnp.full((12, 4), 0.5)}
+
+    def apply(p, x):
+        return x.astype(jnp.float32).reshape(1, -1) @ p["w"]
+
+    register_model("svc", init, apply, out_specs=(TensorSpec((1, 4), "float32"),))
+
+
+def _server(rt, name="hub", operation="op"):
+    dev = Device(name)
+    ps = parse_launch(
+        f"tensor_query_serversrc operation={operation} name=ssrc ! "
+        f"tensor_filter model=svc ! tensor_query_serversink name=ssink")
+    ps.elements["ssink"].pair_with(ps.elements["ssrc"])
+    dev.add_pipeline(ps, jit=False)
+    rt.add_device(dev)
+    return dev, ps.elements["ssrc"]
+
+
+def _client(rt, name="tv", operation="op", transport="hybrid"):
+    dev = Device(name)
+    pc = parse_launch(
+        f"testsrc width=2 height=2 ! tensor_converter ! "
+        f"tensor_query_client operation={operation} transport={transport} name=qc ! "
+        f"appsink name=res")
+    dev.add_pipeline(pc, jit=False)
+    rt.add_device(dev)
+    return dev, pc.elements["qc"]
+
+
+class TestOffloading:
+    def test_roundtrip(self):
+        rt = Runtime()
+        _server(rt)
+        cdev, _ = _client(rt)
+        rt.run(2)
+        run = cdev.runs[0]
+        assert run.frames == 2
+        assert run.last_outputs["res"].tensor.shape == (1, 4)
+
+    def test_multi_client_routing(self):
+        """serversrc tags client ids; serversink routes answers back (paper:
+        'tensor_query_serversrc tags a client ID to the stream metadata')."""
+        rt = Runtime()
+        _server(rt)
+        c1, q1 = _client(rt, name="tv1")
+        c2, q2 = _client(rt, name="tv2")
+        rt.run(3)
+        assert c1.runs[0].frames == 3
+        assert c2.runs[0].frames == 3
+        assert q1.client_id != q2.client_id
+
+    def test_results_match_local_filter(self):
+        """R1: query client is a drop-in replacement for tensor_filter."""
+        rt = Runtime()
+        _server(rt)
+        cdev, _ = _client(rt)
+        rt.run(1)
+        remote = np.asarray(cdev.runs[0].last_outputs["res"].tensor)
+
+        local = parse_launch(
+            "testsrc width=2 height=2 ! tensor_converter ! "
+            "tensor_filter model=svc ! appsink name=res")
+        local.realize()
+        params, state = local.init(jax.random.PRNGKey(0)), local.init_state()
+        outs, _ = local.step(params, state)
+        np.testing.assert_allclose(remote, np.asarray(outs["res"].tensor),
+                                   rtol=1e-6)
+
+
+class TestFailover:
+    def test_hybrid_fails_over_to_second_server(self):
+        rt = Runtime()
+        d1, ssrc1 = _server(rt, name="hub1")
+        d2, ssrc2 = _server(rt, name="hub2")
+        cdev, qc = _client(rt)
+        rt.run(1)
+        assert qc.binding.endpoint is ssrc1.endpoint
+        # hub1 dies mid-stream
+        ssrc1.endpoint.alive = False
+        rt.broker.mark_down(ssrc1.registration)
+        rt.run(2)
+        assert qc.binding.endpoint is ssrc2.endpoint
+        assert cdev.runs[0].frames == 3
+
+    def test_tcp_raw_has_no_failover(self):
+        """The paper keeps TCP-raw as the fast-but-fragile baseline (fails
+        R3/R4)."""
+        broker = Broker()
+        ssrc = TensorQueryServerSrc(operation="op")
+        client = TensorQueryClient(operation="op", transport="tcp")
+        client.connect_direct(ssrc.endpoint)
+        ssrc.endpoint.alive = False
+        with pytest.raises(BrokerError):
+            client.send_query(StreamBuffer(tensors=(jnp.zeros((2, 2)),)))
+
+    def test_spec_selection(self):
+        """Clients choose by declared server specs ('model and version')."""
+        broker = Broker()
+        s1 = TensorQueryServerSrc(operation="det", model="mobilenetv3")
+        s1.connect(broker)
+        s2 = TensorQueryServerSrc(operation="det", model="yolov2")
+        s2.connect(broker)
+        c = TensorQueryClient(operation="det", require_model="yolov2")
+        c.connect(broker)
+        assert c._endpoint() is s2.endpoint

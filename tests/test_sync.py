@@ -1,0 +1,78 @@
+"""Timestamp synchronization (paper §4.2.3 / Fig. 4): NTP offset estimation
+and cross-pipeline rebasing minimize inter-source timestamp deltas."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Broker, SimClock, StreamBuffer, ntp_offset, parse_launch
+from repro.core.sync import PipelineClock
+from repro.runtime import Device, Runtime
+
+
+class TestNTP:
+    @given(st.integers(-10 ** 9, 10 ** 9))
+    @settings(max_examples=30, deadline=None)
+    def test_offset_estimation_no_jitter(self, skew):
+        client = SimClock(skew_ns=0)
+        server = SimClock(skew_ns=skew)
+        est = ntp_offset(client, server, network_delay_ns=300_000)
+        assert abs(est - skew) <= 1
+
+    def test_offset_with_jitter_bounded(self):
+        client = SimClock(skew_ns=0, jitter_ns=50_000, seed=1)
+        server = SimClock(skew_ns=7_000_000, jitter_ns=50_000, seed=2)
+        est = ntp_offset(client, server, network_delay_ns=300_000, rounds=16)
+        assert abs(est - 7_000_000) < 200_000  # min-delay filtering bounds err
+
+
+class TestRebase:
+    def test_rebase_aligns_remote_pts(self):
+        # publisher started 5ms after subscriber, clock skewed +2ms
+        sub_clock = PipelineClock(SimClock(skew_ns=0)).start()
+        pub_clock = PipelineClock(SimClock(skew_ns=2_000_000),
+                                  utc_offset_ns=-2_000_000)
+        pub_clock.clock.advance(5_000_000)
+        pub_clock.start()
+        buf = StreamBuffer(tensors=(np.zeros(1),), pts=np.int64(1_000_000),
+                           meta={"base_time_utc": pub_clock.base_time_utc()})
+        rebased = sub_clock.rebase(buf)
+        # frame created 5ms (pub start) + 1ms (pts) after sub start
+        assert int(rebased.pts) == 6_000_000
+
+
+class TestEndToEndSync:
+    def _run(self, latency_ticks: int, skew_ns: int):
+        rt = Runtime()
+        cams = []
+        for i, (skew, lat) in enumerate([(0, 0), (skew_ns, latency_ticks)]):
+            dev = Device(f"cam{i}", clock=SimClock(skew_ns=skew, seed=i))
+            p = parse_launch(
+                f"testsrc width=4 height=4 ! tensor_converter ! "
+                f"mqttsink pub-topic=cam/{i}")
+            dev.add_pipeline(p, jit=False)
+            # inject latency (the paper uses queue2 to delay a publisher)
+            p_sink = [e for e in p.elements.values()
+                      if e.factory_name == "mqttsink"][0]
+            p_sink.channel.latency_ns = lat * 16_666_667
+            rt.add_device(dev)
+            cams.append(dev)
+        disp = Device("display", clock=SimClock(skew_ns=123_456, seed=9))
+        pd = parse_launch("""
+            mqttsrc sub-topic=cam/0 ! queue ! mux.sink_0
+            mqttsrc sub-topic=cam/1 ! queue ! mux.sink_1
+            tensor_mux name=mux ! appsink name=out
+        """)
+        disp.add_pipeline(pd, jit=False)
+        rt.add_device(disp)
+        rt.run(6)
+        return disp.runs[0]
+
+    def test_skewed_clocks_still_align(self):
+        """With NTP-corrected base times, frames from a device with 50ms
+        clock skew mux with ~frame-period deltas, not 50ms errors."""
+        run = self._run(latency_ticks=0, skew_ns=50_000_000)
+        assert run.frames >= 4
+        last = run.sink_log["out"][-1]
+        # both tensors in the muxed buffer came from the same frame index:
+        # pts_min over inputs is taken; check buffer pts sane (not off by skew)
+        assert abs(int(last.pts)) < 40_000_000  # << 50ms skew
