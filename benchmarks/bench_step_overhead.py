@@ -1,0 +1,136 @@
+"""Host-side dispatch overhead: seed per-frame interpreter vs the compiled
+execution plan vs scan-batched bursts (the ISSUE-1 tentpole win).
+
+The paper's Fig. 6/7 "CPU usage" axis is host work per frame; NNStreamer
+keeps it near zero by compiling the pipeline graph once and streaming
+buffers through it.  This benchmark measures µs/frame on a 9-element
+pipeline (the Listing-1 shape: src ! tee ! 2 branches ! compositor-free
+linear tail) under four regimes:
+
+  * ``seed_interp``   — the seed ``Pipeline.step`` loop: un-jitted, re-sorts
+                        links and rebuilds dicts every frame (what the seed
+                        Runtime actually executed per tick);
+  * ``seed_jit``      — ``jax.jit`` around the seed loop: one dispatch per
+                        frame, tracing cost amortized;
+  * ``plan_jit``      — the cached compiled plan executable, one dispatch
+                        per frame;
+  * ``plan_burst8``   — ``step_n`` with burst 8: ONE dispatch per 8 frames
+                        via ``lax.scan``.
+
+Acceptance: plan_burst8 must be ≥2× lower µs/frame than the seed per-frame
+loop (both baselines reported; the jitted one is the harder target).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TensorSpec, parse_launch
+from repro.core.elements import register_model
+
+from .common import emit, time_us
+
+BURST = 8
+
+PIPELINE = """
+    testsrc name=cam width=32 height=32 ! videoconvert ! videoscale !
+      video/x-raw,width=16,height=16,format=RGB !
+      tensor_converter !
+      tensor_transform mode=arithmetic option=typecast:float32,add:-127.5,div:127.5 !
+      tensor_filter model=benchcls ! tensor_decoder mode=classification !
+      appsink name=out
+"""
+
+
+def _register():
+    def init(rng):
+        return {"w": jax.random.normal(rng, (768, 16)) * 0.05}
+
+    def apply(p, x):
+        return x.reshape(1, -1) @ p["w"]
+
+    register_model("benchcls", init, apply,
+                   out_specs=(TensorSpec((1, 16), "float32"),))
+
+
+def _block(tree):
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, tree)
+
+
+def run(frames: int = 60):
+    _register()
+    pipe = parse_launch(PIPELINE).realize()
+    n_elems = len(pipe.elements)
+    assert n_elems >= 6, f"need a ≥6-element pipeline, got {n_elems}"
+    params = pipe.init(jax.random.PRNGKey(0))
+    s0 = pipe.init_state()
+
+    results = {}
+
+    # -- seed interpreter, un-jitted (what the seed Runtime ran per tick) ----
+    state = dict(s0)
+
+    def seed_interp():
+        nonlocal state
+        outs, state = pipe.step_interpreted(params, state)
+        _block(outs)
+
+    results["seed_interp"] = time_us(seed_interp, n=frames)
+
+    # -- seed loop under jit: per-frame dispatch --------------------------------
+    state = dict(s0)
+    jit_seed = jax.jit(pipe.step_interpreted)
+
+    def seed_jit():
+        nonlocal state
+        outs, state = jit_seed(params, state)
+        _block(outs)
+
+    results["seed_jit"] = time_us(seed_jit, n=frames)
+
+    # -- compiled plan: per-frame dispatch --------------------------------------
+    state = dict(s0)
+    compiled = pipe.compiled_step()
+
+    def plan_jit():
+        nonlocal state
+        outs, state = compiled(params, state)
+        _block(outs)
+
+    results["plan_jit"] = time_us(plan_jit, n=frames)
+
+    # -- compiled plan, scan-batched burst: one dispatch per BURST frames -------
+    state = dict(s0)
+    step_n = pipe.compiled_step_n()
+
+    def plan_burst():
+        nonlocal state
+        outs, state = step_n(params, state, n=BURST)
+        _block(outs)
+
+    results["plan_burst8"] = time_us(plan_burst, n=max(1, frames // BURST)) / BURST
+
+    speed_interp = results["seed_interp"] / results["plan_burst8"]
+    speed_jit = results["seed_jit"] / results["plan_burst8"]
+    for name, us in results.items():
+        extra = {"elements": n_elems, "burst": BURST if "burst" in name else 1}
+        if name == "plan_burst8":
+            extra.update(speedup_vs_seed_interp=round(speed_interp, 2),
+                         speedup_vs_seed_jit=round(speed_jit, 2))
+        emit(f"step_overhead/{name}", us,
+             f"us_per_frame={us:.1f};elements={n_elems}", **extra)
+    emit("step_overhead/speedup", speed_interp,
+         f"burst8_vs_seed_interp={speed_interp:.1f}x;"
+         f"burst8_vs_seed_jit={speed_jit:.1f}x;target>=2x",
+         speedup_vs_seed_interp=round(speed_interp, 2),
+         speedup_vs_seed_jit=round(speed_jit, 2), target=2.0)
+    assert speed_interp >= 2.0, (
+        f"compiled burst-8 must be ≥2× faster than the seed per-frame loop; "
+        f"got {speed_interp:.2f}×")
+    return results
+
+
+if __name__ == "__main__":
+    run()

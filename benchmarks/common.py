@@ -10,7 +10,7 @@ the relay hop twice, which is exactly the effect Fig. 7 shows.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, List, Tuple
 
 LINK_BYTES_PER_S = 125e6        # 1 Gbps Ethernet (RPi4)
 TARGET_FPS = 60.0
@@ -41,5 +41,22 @@ def sustainable_fps(bytes_per_frame: float, relay_hops: int,
     return min(net_fps, cpu_fps)
 
 
-def emit(name: str, us_per_call: float, derived: str):
+# Machine-readable result collection: every emit() lands here as a dict so
+# benchmarks/run.py can dump BENCH_PR<k>.json and the perf trajectory is
+# tracked across PRs instead of living only in stdout CSV.
+ROWS: List[Dict] = []
+
+
+def reset_rows():
+    ROWS.clear()
+
+
+def emit(name: str, us_per_call: float, derived: str, **fields):
+    """Print the legacy CSV line AND record a structured row.
+
+    ``derived`` stays the human-readable summary; ``fields`` carries any
+    machine-readable extras (fps, speedups, byte counts, ...).
+    """
     print(f"{name},{us_per_call:.1f},{derived}")
+    ROWS.append({"name": name, "us_per_call": round(float(us_per_call), 3),
+                 "derived": derived, **fields})

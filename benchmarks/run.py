@@ -1,19 +1,30 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV on stdout AND dumps every row as machine-readable JSON (BENCH_PR1.json
+# at the repo root) so the perf trajectory is tracked across PRs.
 #
-#   Fig. 7 pub/sub  -> bench_pubsub      (RELAY vs HYBRID vs DIRECT, 3 bands)
-#   Fig. 7 query    -> bench_query       (MQTT-hybrid vs TCP + failover)
-#   §4.2.3 sync     -> bench_sync        (NTP rebase vs raw clocks)
-#   §3/§4.1 codecs  -> bench_compression (sparse/quant8 wire bytes)
-#   kernels         -> bench_kernels     (Pallas codec kernels, interpret)
-#   §Roofline       -> bench_roofline    (reads results/dryrun.json)
+#   Fig. 7 pub/sub  -> bench_pubsub        (RELAY vs HYBRID vs DIRECT, 3 bands)
+#   Fig. 7 query    -> bench_query         (MQTT-hybrid vs TCP + failover)
+#   §4.2.3 sync     -> bench_sync          (NTP rebase vs raw clocks)
+#   §3/§4.1 codecs  -> bench_compression   (sparse/quant8 wire bytes)
+#   kernels         -> bench_kernels       (Pallas codec kernels, interpret)
+#   §Roofline       -> bench_roofline      (reads results/dryrun.json)
+#   engine          -> bench_step_overhead (compiled plan + burst vs seed loop)
+import json
+import os
+import platform
 import sys
 import traceback
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR1.json")
 
 
 def main() -> None:
     from . import (bench_compression, bench_kernels, bench_pubsub,
-                   bench_query, bench_roofline, bench_sync)
+                   bench_query, bench_roofline, bench_step_overhead,
+                   bench_sync)
+    from .common import ROWS, reset_rows
 
+    reset_rows()
     print("name,us_per_call,derived")
     suites = [
         ("pubsub", bench_pubsub.run),
@@ -22,16 +33,31 @@ def main() -> None:
         ("sync", bench_sync.run),
         ("compression", bench_compression.run),
         ("kernels", bench_kernels.run),
+        ("step_overhead", bench_step_overhead.run),
         ("roofline", bench_roofline.run),
     ]
-    failed = 0
+    failed = []
     for name, fn in suites:
         try:
             fn()
         except Exception:
-            failed += 1
+            failed.append(name)
             traceback.print_exc()
             print(f"{name},0.0,SUITE_FAILED")
+
+    import jax
+    payload = {
+        "schema": 1,
+        "pr": 1,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "suites_failed": failed,
+        "rows": ROWS,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {os.path.normpath(BENCH_JSON)} ({len(ROWS)} rows)")
     if failed:
         sys.exit(1)
 

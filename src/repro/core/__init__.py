@@ -4,10 +4,12 @@
 # query (inference offloading) protocols, timestamp synchronization, and
 # compressed stream codecs.
 from .formats import Caps, CapsError, TensorFormat, TensorSpec
-from .buffers import FlexHeader, SparsePayload, StreamBuffer, flex_wrap, flex_unwrap
+from .buffers import (FlexHeader, SparsePayload, StreamBuffer, flex_wrap,
+                      flex_unwrap, stack_buffers, unstack_buffers)
 from .element import Element, element_factory, register_element, FACTORY
 from .elements import register_model, MODEL_REGISTRY
 from .pipeline import Pipeline, parse_launch, parse_caps
+from .plan import ExecutionPlan, clear_executable_cache, executable_cache_info
 from .broker import Broker, BrokerError, topic_matches
 from .pubsub import Channel, MqttSink, MqttSrc, Transport
 from .query import (QueryServerEndpoint, QueryTransport, TensorQueryClient,
@@ -18,9 +20,11 @@ from . import compression
 __all__ = [
     "Caps", "CapsError", "TensorFormat", "TensorSpec",
     "FlexHeader", "SparsePayload", "StreamBuffer", "flex_wrap", "flex_unwrap",
+    "stack_buffers", "unstack_buffers",
     "Element", "element_factory", "register_element", "FACTORY",
     "register_model", "MODEL_REGISTRY",
     "Pipeline", "parse_launch", "parse_caps",
+    "ExecutionPlan", "clear_executable_cache", "executable_cache_info",
     "Broker", "BrokerError", "topic_matches",
     "Channel", "MqttSink", "MqttSrc", "Transport",
     "QueryServerEndpoint", "QueryTransport", "TensorQueryClient",

@@ -19,7 +19,8 @@ import numpy as np
 
 from .formats import MAX_RANK, TensorFormat, TensorSpec, dtype_to_tag, tag_to_dtype
 
-__all__ = ["FlexHeader", "SparsePayload", "StreamBuffer", "flex_wrap", "flex_unwrap"]
+__all__ = ["FlexHeader", "SparsePayload", "StreamBuffer", "flex_wrap",
+           "flex_unwrap", "stack_buffers", "unstack_buffers"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -112,6 +113,38 @@ class StreamBuffer:
             else:
                 n += t.size * t.dtype.itemsize
         return n
+
+
+def stack_buffers(bufs) -> Any:
+    """Stack N structurally identical pytrees (StreamBuffers, outputs dicts)
+    along a new leading axis — the frame axis a burst ``step_n`` scans over.
+
+    All items must share one treedef (same tensor count, headers, *and*
+    static meta); raises ``ValueError`` on mismatch so callers can fall back
+    to per-frame stepping.
+    """
+    bufs = list(bufs)
+    if not bufs:
+        raise ValueError("stack_buffers needs at least one buffer")
+    ref = jax.tree_util.tree_structure(bufs[0])
+    for b in bufs[1:]:
+        td = jax.tree_util.tree_structure(b)
+        if td != ref:
+            raise ValueError(
+                f"cannot stack buffers with differing structure: {ref} vs {td}")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *bufs)
+
+
+def unstack_buffers(stacked, n: Optional[int] = None) -> list:
+    """Inverse of :func:`stack_buffers`: split a leading frame axis back into
+    a list of per-frame pytrees (e.g. to replay captured sink frames)."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    if n is None:
+        if not leaves:
+            raise ValueError("cannot infer burst length from a leafless tree")
+        n = int(leaves[0].shape[0])
+    return [treedef.unflatten([leaf[i] for leaf in leaves])
+            for i in range(n)]
 
 
 def flex_wrap(x: jnp.ndarray, capacity: int) -> Tuple[jnp.ndarray, FlexHeader]:

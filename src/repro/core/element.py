@@ -11,6 +11,7 @@ pipeline is a single jittable function.
 """
 from __future__ import annotations
 
+import enum
 from typing import Callable, Dict, List, Optional, Sequence, Type
 
 import jax
@@ -56,6 +57,16 @@ class Element:
     n_sink_pads: Optional[int] = 1
     n_src_pads: Optional[int] = 1
 
+    #: element performs host-level side effects in ``apply`` (channel I/O,
+    #: broker traffic) and therefore cannot be traced into a compiled plan
+    host_impure = False
+    #: host-impure *source* whose frame the scheduler can pull & inject
+    #: (mqttsrc) — hoistable out of a compiled burst
+    is_host_source = False
+    #: host-impure *terminal sink* whose input frame a compiled burst can
+    #: capture for post-hoc replay (mqttsink)
+    is_host_sink = False
+
     _uid = 0
 
     def __init__(self, name: Optional[str] = None, **props):
@@ -83,6 +94,31 @@ class Element:
             return caps.intersect(tmpl)
         except CapsError as e:
             raise CapsError(f"{self.name}.sink_{pad}: {e}") from e
+
+    # -- plan fingerprinting -------------------------------------------------
+    def plan_signature(self) -> tuple:
+        """Static-config fingerprint used as part of the executable-cache
+        key.  Must cover everything that changes ``apply``'s traced
+        behavior: class, name, scalar/tuple config attributes, props, and
+        negotiated caps.  Subclasses with behavior carried by non-attribute
+        config (callables, registries) extend via ``plan_signature_extra``.
+        """
+        cfg = []
+        for k, v in sorted(vars(self).items()):
+            if k.startswith("_") or k in ("in_caps", "out_caps", "props"):
+                continue
+            if isinstance(v, (str, int, float, bool, type(None))):
+                cfg.append((k, v))
+            elif isinstance(v, (tuple, list, dict, enum.Enum)):
+                cfg.append((k, repr(v)))
+        return (type(self).__name__, self.factory_name, self.name,
+                tuple(cfg), repr(sorted(self.props.items())),
+                tuple(c.describe() for c in self.in_caps),
+                tuple(c.describe() for c in self.out_caps),
+                self.plan_signature_extra())
+
+    def plan_signature_extra(self) -> tuple:
+        return ()
 
     # -- params / state ------------------------------------------------------
     def init_params(self, rng) -> dict:

@@ -288,6 +288,11 @@ class TensorFilter(Element):
             self._init_fn, self._apply_fn, self._out_specs = MODEL_REGISTRY[model]
             self.model_key = model
 
+    def plan_signature_extra(self):
+        # model behavior lives in callables, not attributes; registry models
+        # share function objects so identical keys still share executables
+        return (self.model_key, id(self._apply_fn), id(self._init_fn))
+
     def negotiate(self, in_caps):
         if self._out_specs:
             return [Caps(media="other/tensors", tensors=self._out_specs)]

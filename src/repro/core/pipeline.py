@@ -18,7 +18,7 @@ Grammar subset (sufficient for the paper's examples)::
 from __future__ import annotations
 
 import shlex
-from collections import defaultdict
+from collections import defaultdict, deque
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -111,6 +111,7 @@ class Pipeline:
         self.name = name
         self.elements: Dict[str, Element] = {}
         self.links: List[Link] = []
+        self.plan = None  # ExecutionPlan, built by realize()
         self._realized = False
 
     # -- construction ---------------------------------------------------------
@@ -153,9 +154,11 @@ class Pipeline:
         for l in self.links:
             indeg[l.dst.name] += 1
             succ[l.src.name].append(l.dst.name)
-        order, stack = [], sorted([n for n, d in indeg.items() if d == 0])
+        # deque keeps Kahn's algorithm O(V+E); popleft preserves the exact
+        # FIFO visit order the seed's list.pop(0) produced (deterministic)
+        order, stack = [], deque(sorted(n for n, d in indeg.items() if d == 0))
         while stack:
-            n = stack.pop(0)
+            n = stack.popleft()
             order.append(n)
             for m in succ[n]:
                 indeg[m] -= 1
@@ -197,6 +200,10 @@ class Pipeline:
             elem.out_caps = out
         self._order = order
         self._in_links = in_links
+        # compile the graph once: flatten topo order + wiring into a static
+        # slot-indexed schedule (see core/plan.py) — stepping never re-sorts
+        from .plan import ExecutionPlan
+        self.plan = ExecutionPlan(self)
         self._realized = True
         return self
 
@@ -233,8 +240,19 @@ class Pipeline:
     def step(self, params: dict, state: dict,
              inputs: Optional[Dict[str, StreamBuffer]] = None
              ) -> Tuple[Dict[str, StreamBuffer], dict]:
-        """Run one frame through the pipeline.  Pure — jit with
-        ``jax.jit(pipe.step)``."""
+        """Run one frame through the precompiled plan schedule.  Pure — jit
+        with ``jax.jit(pipe.step)`` or use :meth:`compiled_step` (cached,
+        never retraces across structurally identical pipelines)."""
+        if not self._realized:
+            self.realize()
+        return self.plan.run(params, state, inputs)
+
+    def step_interpreted(self, params: dict, state: dict,
+                         inputs: Optional[Dict[str, StreamBuffer]] = None
+                         ) -> Tuple[Dict[str, StreamBuffer], dict]:
+        """The seed per-frame interpreter (re-sorts links and rebuilds dicts
+        every step).  Kept verbatim as the parity/benchmark baseline for the
+        compiled plan; semantics must match :meth:`step` bitwise."""
         if not self._realized:
             self.realize()
         inputs = inputs or {}
@@ -252,6 +270,32 @@ class Pipeline:
             if isinstance(elem, AppSink) and outs:
                 outputs[elem.name] = outs[0]
         return outputs, ctx.next_state
+
+    def step_n(self, params: dict, state: dict,
+               inputs: Optional[Dict[str, StreamBuffer]] = None,
+               n: Optional[int] = None
+               ) -> Tuple[Dict[str, StreamBuffer], dict]:
+        """N-frame burst: one ``lax.scan`` dispatch through the whole DAG.
+        ``inputs`` holds *stacked* per-source frames (leading axis N) or pass
+        ``n`` for self-driven pipelines.  Frame ``i`` of the stacked outputs
+        is bitwise what the ``i``-th sequential :meth:`step` would return."""
+        if not self._realized:
+            self.realize()
+        return self.plan.step_n(params, state, inputs, n=n)
+
+    def compiled_step(self, donate: Optional[bool] = None):
+        """Cached jitted step, shared process-wide across pipelines with the
+        same topology fingerprint (failover reconnects never retrace)."""
+        if not self._realized:
+            self.realize()
+        return self.plan.compiled_step(donate=donate)
+
+    def compiled_step_n(self, hoist_io: bool = False,
+                        donate: Optional[bool] = None):
+        """Cached jitted burst step (see :meth:`step_n`)."""
+        if not self._realized:
+            self.realize()
+        return self.plan.compiled_step_n(hoist_io=hoist_io, donate=donate)
 
     def describe(self) -> str:
         if not self._realized:

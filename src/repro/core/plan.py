@@ -1,0 +1,262 @@
+"""Compiled pipeline execution engine.
+
+``ExecutionPlan`` turns a realized :class:`~repro.core.pipeline.Pipeline`
+into a *plan*: the topo order and link wiring are flattened once, at
+``realize()`` time, into a static slot-indexed schedule, so stepping a frame
+no longer re-sorts links or rebuilds dicts per step (the host-side dispatch
+cost NNStreamer avoids by compiling the graph once — arXiv 2101.06371).
+
+Three execution tiers, all bitwise-identical to the seed interpreter:
+
+* ``plan.run(params, state, inputs)`` — one frame through the static
+  schedule; pure and jittable.
+* ``plan.compiled_step()`` — a jitted executable, cached in a process-wide
+  registry keyed by the plan's **topology fingerprint** (element configs +
+  link wiring + negotiated caps).  Reconnecting a structurally identical
+  pipeline after failover reuses the executable and never retraces; per
+  fingerprint, XLA's own jit cache covers the (input shapes/dtypes) axis.
+* ``plan.step_n(params, state, inputs, n)`` — an N-frame **burst**: one
+  ``lax.scan`` dispatch runs the whole DAG N times over stacked
+  :class:`StreamBuffer` frames, amortizing Python/jit dispatch to ~1/N per
+  frame.  The runtime scheduler uses this to drain queued Channel frames.
+
+Host-impure elements (mqtt sources/sinks) cannot be traced; ``hoist_io=True``
+runs the plan in *hoisted* mode: host-driven sources must be injected through
+``inputs`` (the scheduler pulls & decodes at host level) and host sinks
+capture their input frame into the outputs dict instead of pushing, so the
+scheduler can replay the captured frames through the real (impure)
+``apply`` after the burst returns.
+
+Donation: compiled executables donate the ``state`` argument when requested
+(``donate=True``) or automatically on gpu/tpu backends (``donate=None``) —
+state buffers are overwritten in place across frames.  Donation stays off on
+CPU where XLA does not implement it (it would only emit warnings).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+from jax import lax
+
+from .buffers import StreamBuffer
+from .element import Element, PipelineContext
+
+__all__ = ["ExecutionPlan", "PlanOp", "clear_executable_cache",
+           "executable_cache_info"]
+
+
+class PlanOp:
+    """One scheduled element: static wiring resolved to value slots."""
+
+    __slots__ = ("elem", "name", "in_slots", "out_slots", "injectable",
+                 "is_sink", "is_host_sink")
+
+    def __init__(self, elem: Element, in_slots: Tuple[int, ...],
+                 out_slots: Tuple[int, ...], injectable: bool,
+                 is_sink: bool, is_host_sink: bool):
+        self.elem = elem
+        self.name = elem.name
+        self.in_slots = in_slots
+        self.out_slots = out_slots
+        self.injectable = injectable
+        self.is_sink = is_sink
+        self.is_host_sink = is_host_sink
+
+
+# Process-wide executable registry: fingerprint -> (owning plan, jitted fns).
+# Two plans with equal fingerprints are behaviorally identical (the
+# fingerprint covers element class, static config, wiring and negotiated
+# caps), so the first plan's jitted functions serve all of them.
+#
+# The jitted fns close over the owning plan's element graph, pinning it
+# alive; to keep a long-running process that churns through many distinct
+# topologies bounded, the registry is LRU-capped — evicting a fingerprint
+# only costs a retrace if that topology ever comes back.
+_EXEC_CACHE: "OrderedDict[Any, Dict[str, Any]]" = OrderedDict()
+_EXEC_CACHE_MAX = 128
+
+
+def clear_executable_cache():
+    _EXEC_CACHE.clear()
+
+
+def executable_cache_info() -> Dict[str, int]:
+    return {"fingerprints": len(_EXEC_CACHE),
+            "executables": sum(len(e["fns"]) for e in _EXEC_CACHE.values())}
+
+
+class ExecutionPlan:
+    """Static schedule + executable cache for one realized pipeline."""
+
+    def __init__(self, pipeline):
+        from .elements import AppSink, AppSrc  # cycle-free: elements<-element
+
+        order: List[Element] = pipeline._order
+        links = pipeline.links
+        # slot assignment: every (producer, src_pad) that any link consumes
+        slot_of: Dict[Tuple[str, int], int] = {}
+        for l in links:
+            key = (l.src.name, l.src_pad)
+            if key not in slot_of:
+                slot_of[key] = len(slot_of)
+        self.n_slots = len(slot_of)
+
+        in_links: Dict[str, list] = {e.name: [] for e in order}
+        for l in links:
+            in_links[l.dst.name].append(l)
+
+        ops: List[PlanOp] = []
+        for elem in order:
+            lk = sorted(in_links[elem.name], key=lambda l: l.dst_pad)
+            in_slots = tuple(slot_of[(l.src.name, l.src_pad)] for l in lk)
+            max_pad = max((l.src_pad for l in links if l.src is elem),
+                          default=-1)
+            out_slots = tuple(slot_of.get((elem.name, p), -1)
+                              for p in range(max_pad + 1))
+            injectable = isinstance(elem, AppSrc) or \
+                getattr(elem, "is_host_source", False)
+            ops.append(PlanOp(elem, in_slots, out_slots,
+                              injectable=injectable,
+                              is_sink=isinstance(elem, AppSink),
+                              is_host_sink=getattr(elem, "is_host_sink",
+                                                   False)))
+        self.ops = ops
+        self.host_sources = [op.elem for op in ops
+                             if getattr(op.elem, "is_host_source", False)]
+        self.host_sinks = [op.elem for op in ops if op.is_host_sink]
+        impure = [op.elem for op in ops
+                  if getattr(op.elem, "host_impure", False)]
+        #: no host-impure elements at all — safe to jit as-is
+        self.pure = not impure
+        #: every impure element is a hoistable source or terminal sink, so
+        #: the DAG between them is traceable and scan-batched bursts apply
+        self.burstable = all(
+            getattr(e, "is_host_source", False) or
+            getattr(e, "is_host_sink", False) for e in impure)
+        #: every graph source is host-driven: a burst replays only queued
+        #: frames.  A self-driven source (testsrc camera) mixed in would be
+        #: fast-forwarded by a burst — fabricating future frames — so the
+        #: scheduler must keep such pipelines on the tick cadence.
+        self.all_sources_host_driven = bool(self.host_sources) and all(
+            getattr(op.elem, "is_host_source", False)
+            for op in ops if not op.in_slots)
+        self.fingerprint = self._fingerprint(order, links)
+
+    @staticmethod
+    def _fingerprint(order: List[Element], links) -> Tuple:
+        elems = tuple(e.plan_signature() for e in order)
+        wiring = tuple((l.src.name, l.src_pad, l.dst.name, l.dst_pad)
+                       for l in links)
+        return (elems, wiring)
+
+    # -- single-frame execution ------------------------------------------------
+    def run(self, params: dict, state: dict,
+            inputs: Optional[Dict[str, StreamBuffer]] = None,
+            hoist_io: bool = False
+            ) -> Tuple[Dict[str, StreamBuffer], dict]:
+        """One frame through the static schedule.  Pure (jittable) when the
+        pipeline is pure or ``hoist_io=True`` with all host sources injected.
+        Semantics match the seed interpreter bitwise."""
+        inputs = inputs or {}
+        ctx = PipelineContext(state)
+        vals: List[Any] = [None] * self.n_slots
+        outputs: Dict[str, StreamBuffer] = {}
+        for op in self.ops:
+            ins = [vals[s] for s in op.in_slots]
+            if op.injectable and op.name in inputs:
+                ins = [inputs[op.name]]
+                if getattr(op.elem, "is_host_source", False):
+                    # host-driven source (mqttsrc): its apply would pull from
+                    # the channel; the injected, already-decoded frame IS the
+                    # pull — emit it directly
+                    if op.out_slots and op.out_slots[0] >= 0:
+                        vals[op.out_slots[0]] = ins[0]
+                    continue
+            elif hoist_io and getattr(op.elem, "is_host_source", False):
+                raise ValueError(
+                    f"{op.name}: hoisted execution requires an injected "
+                    f"input frame for every host-driven source")
+            if hoist_io and op.is_host_sink:
+                # capture instead of the impure push; the caller replays the
+                # captured frame through the element's real apply afterwards
+                outputs[op.name] = ins[0]
+                continue
+            outs = op.elem.apply(params.get(op.name, {}), ins, ctx)
+            for i, o in enumerate(outs):
+                if i < len(op.out_slots) and op.out_slots[i] >= 0:
+                    vals[op.out_slots[i]] = o
+            if op.is_sink and outs:
+                outputs[op.name] = outs[0]
+        return outputs, ctx.next_state
+
+    # -- burst execution -------------------------------------------------------
+    def step_n(self, params: dict, state: dict,
+               inputs: Optional[Dict[str, StreamBuffer]] = None,
+               n: Optional[int] = None, hoist_io: bool = False
+               ) -> Tuple[Dict[str, StreamBuffer], dict]:
+        """Run an N-frame burst with a single ``lax.scan`` dispatch.
+
+        ``inputs`` maps source names to *stacked* StreamBuffers (leading axis
+        N, see :func:`repro.core.buffers.stack_buffers`); self-driven
+        pipelines pass ``n`` instead.  Returns (stacked outputs, final
+        state) — frame ``i`` of the outputs equals what ``run`` would have
+        produced on the ``i``-th sequential call.
+        """
+        if inputs is None and n is None:
+            raise ValueError("step_n needs stacked `inputs` or a length `n`")
+
+        def body(carry, x):
+            outs, nxt = self.run(params, carry, x, hoist_io=hoist_io)
+            return nxt, outs
+
+        final_state, outs = lax.scan(body, state, inputs, length=n)
+        return outs, final_state
+
+    # -- compiled executables --------------------------------------------------
+    def _cache(self) -> Dict[str, Any]:
+        ent = _EXEC_CACHE.get(self.fingerprint)
+        if ent is None:
+            ent = {"fns": {}}
+            _EXEC_CACHE[self.fingerprint] = ent
+            while len(_EXEC_CACHE) > _EXEC_CACHE_MAX:
+                _EXEC_CACHE.popitem(last=False)
+        else:
+            _EXEC_CACHE.move_to_end(self.fingerprint)
+        return ent
+
+    @staticmethod
+    def _resolve_donate(donate: Optional[bool]) -> bool:
+        if donate is None:
+            return jax.default_backend() in ("gpu", "tpu")
+        return bool(donate)
+
+    def compiled_step(self, donate: Optional[bool] = None) -> Callable:
+        """Jitted single-frame step ``(params, state, inputs=None) ->
+        (outputs, next_state)``, shared across all plans with this
+        fingerprint."""
+        donate = self._resolve_donate(donate)
+        fns = self._cache()["fns"]
+        key = ("step", donate)
+        if key not in fns:
+            fns[key] = jax.jit(self.run,
+                               donate_argnums=(1,) if donate else ())
+        return fns[key]
+
+    def compiled_step_n(self, hoist_io: bool = False,
+                        donate: Optional[bool] = None) -> Callable:
+        """Jitted burst step ``(params, state, inputs=None, n=None) ->
+        (stacked outputs, final state)``.  ``n`` and ``hoist_io`` are static;
+        each distinct burst length traces once and is cached thereafter."""
+        donate = self._resolve_donate(donate)
+        fns = self._cache()["fns"]
+        key = ("step_n", hoist_io, donate)
+        if key not in fns:
+            def step_n(params, state, inputs=None, n=None,
+                       _self=self, _hoist=hoist_io):
+                return _self.step_n(params, state, inputs, n=n,
+                                    hoist_io=_hoist)
+            fns[key] = jax.jit(step_n, static_argnames=("n",),
+                               donate_argnums=(1,) if donate else ())
+        return fns[key]

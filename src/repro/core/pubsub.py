@@ -63,9 +63,14 @@ class Channel:
         ch = Channel(capacity=capacity or self.capacity,
                      latency_ns=self.latency_ns)
         self.consumers.append(ch)
-        # late subscriber still sees queued history (MQTT retained-ish)
-        for buf in self.q:
-            ch._enqueue(buf)
+        # late subscriber still sees queued history (MQTT retained-ish), but
+        # only the newest `capacity` frames survive the replay — flooding a
+        # small consumer with the publisher's whole backlog is pointless
+        # copying; the skipped frames are accounted as leaky drops
+        history = list(self.q)
+        survivors = history[-ch.capacity:]
+        ch.drops += len(history) - len(survivors)
+        ch.q.extend(survivors)
         return ch
 
     def _enqueue(self, buf: StreamBuffer):
@@ -102,6 +107,8 @@ class MqttSink(Element):
     """
 
     n_src_pads = 0
+    host_impure = True
+    is_host_sink = True
 
     def __init__(self, name=None, pub_topic="", transport="hybrid",
                  codec="none", broker: Optional[Broker] = None,
@@ -151,6 +158,8 @@ class MqttSrc(Element):
     """
 
     n_sink_pads = 0
+    host_impure = True
+    is_host_source = True
 
     def __init__(self, name=None, sub_topic="", transport="hybrid",
                  codec="none", broker: Optional[Broker] = None,
@@ -164,6 +173,7 @@ class MqttSrc(Element):
         self._direct: Optional[Channel] = None
         self._rx: Optional[Channel] = None      # per-subscriber queue
         self._rx_src: Optional[Channel] = None  # publisher it's attached to
+        self._pushback: Deque = deque()         # decoded frames handed back
         self.sync_clock = sync_clock
 
     def connect(self, broker: Broker):
@@ -201,8 +211,16 @@ class MqttSrc(Element):
                 pass
         return [Caps.ANY]
 
+    def unread(self, bufs) -> None:
+        """Hand already-decoded frames back to the source (front of the
+        line).  Used by the scheduler when a burst pulled more frames than
+        it could run; re-queueing on the raw channel would double-decode."""
+        self._pushback.extendleft(reversed(list(bufs)))
+
     def pull(self) -> Optional[StreamBuffer]:
         """Host-level receive (runtime scheduler path)."""
+        if self._pushback:
+            return self._pushback.popleft()
         chan = self._resolve()
         raw = chan.pop()
         if raw is None:
@@ -212,6 +230,25 @@ class MqttSrc(Element):
             # §4.2.3: rebase the publisher's running-time into ours
             buf = self.sync_clock.rebase(buf)
         return buf
+
+    def queued(self) -> int:
+        """Frames currently waiting (pushed-back + per-subscriber queue; 0
+        when the binding cannot resolve) — the runtime's burst-sizing
+        signal."""
+        try:
+            return len(self._pushback) + len(self._resolve())
+        except BrokerError:
+            return len(self._pushback)
+
+    def pull_burst(self, max_n: int) -> list:
+        """Drain up to ``max_n`` decoded frames (host-level burst path)."""
+        out = []
+        while len(out) < max_n:
+            buf = self.pull()
+            if buf is None:
+                break
+            out.append(buf)
+        return out
 
     def apply(self, params, inputs, ctx=None):
         buf = self.pull()

@@ -70,6 +70,8 @@ class TensorQueryClient(Element):
     workload status", "model and version" in the paper).
     """
 
+    host_impure = True
+
     _ids = itertools.count(1)
 
     def __init__(self, name=None, operation="", transport="hybrid",
@@ -149,6 +151,7 @@ class TensorQueryServerSrc(Element):
     """Receives queries; tags client_id into meta for the paired serversink."""
 
     n_sink_pads = 0
+    host_impure = True
 
     def __init__(self, name=None, operation="", broker: Optional[Broker] = None,
                  **props):
@@ -183,6 +186,7 @@ class TensorQueryServerSink(Element):
     """Routes the inference answer back to the tagged client connection."""
 
     n_src_pads = 0
+    host_impure = True
 
     def __init__(self, name=None, serversrc: Optional[TensorQueryServerSrc] = None,
                  **props):

@@ -1,0 +1,344 @@
+"""Compiled execution plan: parity with the seed interpreter, executable
+caching, burst semantics, and runtime burst draining.
+
+Every pipeline exercised by tests/test_pipeline.py (plus a dedicated
+tee/compositor graph) must produce BITWISE-identical sink outputs and
+next-state under four execution tiers:
+
+  1. the seed per-frame interpreter (``Pipeline.step_interpreted``),
+  2. the plan schedule (``Pipeline.step``),
+  3. the cached compiled executable (``Pipeline.compiled_step``),
+  4. scan-batched bursts (``Pipeline.step_n`` / ``compiled_step_n``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Channel, StreamBuffer, TensorSpec, parse_launch,
+                        stack_buffers, unstack_buffers)
+from repro.core.elements import register_model
+from repro.runtime import Device, Runtime
+
+
+@pytest.fixture(scope="module", autouse=True)
+def models():
+    def init(rng):
+        return {"w": jax.random.normal(rng, (3, 10)) * 0.1}
+
+    def apply(p, x):
+        return jnp.mean(x.reshape(-1, 3), 0) @ p["w"]
+
+    register_model("plancls", init, apply,
+                   out_specs=(TensorSpec((10,), "float32"),))
+
+    def apply_det(p, x):
+        boxes = jnp.array([[0.1, 0.1, 0.5, 0.6], [0.2, 0.3, 0.4, 0.5]])
+        scores = jnp.array([0.9, 0.1])
+        return boxes, scores
+
+    register_model("plandet", lambda rng: {}, apply_det,
+                   out_specs=(TensorSpec((2, 4), "float32"),
+                              TensorSpec((2,), "float32")))
+
+
+LISTING1 = """
+    v4l2src name=cam ! tee name=ts
+    ts. queue leaky=2 ! videoconvert ! mix.sink_1
+    ts. videoconvert ! videoscale !
+      video/x-raw,width=16,height=16,format=RGB !
+      tensor_converter !
+      tensor_transform mode=arithmetic option=typecast:float32,add:-127.5,div:127.5 !
+      tensor_filter model=plandet !
+      tensor_decoder mode=bounding_boxes option4=64:48 ! queue ! mix.sink_0
+    compositor name=mix sink_0::zorder=2 sink_1::zorder=1 ! videoconvert !
+      appsink name=display
+"""
+
+TEE_COMPOSITOR = """
+    testsrc name=s width=12 height=12 ! tee name=t
+    t. queue ! videoconvert ! cmp.sink_0
+    t. videoconvert ! videoscale ! video/x-raw,width=6,height=6,format=RGB !
+      videoconvert ! cmp.sink_1
+    compositor name=cmp sink_0::zorder=1 sink_1::zorder=2 sink_1::xpos=3 !
+      appsink name=out
+"""
+
+PARITY_PIPELINES = {
+    "listing1": LISTING1,
+    "tee_compositor": TEE_COMPOSITOR,
+    "mux_forward_ref": """
+        testsrc ! tensor_converter ! mux.sink_0
+        testsrc ! tensor_converter ! mux.sink_1
+        tensor_mux name=mux ! appsink name=o
+    """,
+    "demux": """
+        testsrc ! tensor_converter ! mux.sink_0
+        testsrc ! tensor_converter ! mux.sink_1
+        tensor_mux name=mux ! tensor_demux name=d
+        d.src_0 ! appsink name=a
+        d.src_1 ! appsink name=b
+    """,
+    "transform": """
+        testsrc width=8 height=8 ! tensor_converter !
+        tensor_transform mode=arithmetic option=typecast:float32,add:-127.5,div:127.5 !
+        appsink name=o
+    """,
+    "filter_cls": """
+        testsrc width=8 height=8 ! tensor_converter !
+        tensor_transform mode=arithmetic option=typecast:float32 !
+        tensor_filter model=plancls ! tensor_decoder mode=classification !
+        appsink name=o
+    """,
+    "sparse_roundtrip": """
+        testsrc width=8 height=8 ! tensor_converter !
+        tensor_transform mode=arithmetic option=typecast:float32 !
+        tensor_sparse_enc max_nnz=256 ! tensor_sparse_dec ! appsink name=o
+    """,
+    "tensor_if": """
+        testsrc width=4 height=4 ! tensor_converter !
+        tensor_transform mode=arithmetic option=typecast:float32,div:255.0 !
+        tensor_if threshold=2.0 operator=GE ! appsink name=o
+    """,
+}
+
+
+def assert_tree_equal(a, b, label=""):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"{label}: treedef mismatch {ta} vs {tb}"
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype, f"{label}: dtype {x.dtype} vs {y.dtype}"
+        assert np.array_equal(x, y), f"{label}: values differ"
+
+
+@pytest.mark.parametrize("name", sorted(PARITY_PIPELINES))
+def test_plan_matches_interpreter_bitwise(name):
+    """Eager plan vs eager seed loop, and compiled/burst vs jitted seed loop
+    (the seed tests always ran ``jax.jit(pipe.step)``).  XLA may legitimately
+    fuse float arithmetic differently between eager and jit, so parity is
+    asserted within each execution mode — bitwise."""
+    n = 3
+    pipe = parse_launch(PARITY_PIPELINES[name]).realize()
+    params = pipe.init(jax.random.PRNGKey(0))
+    s0 = pipe.init_state()
+
+    # tier 1: eager plan schedule vs eager seed interpreter
+    ref_outs, si = [], dict(s0)
+    for _ in range(n):
+        o, si = pipe.step_interpreted(params, si)
+        ref_outs.append(o)
+    sp = dict(s0)
+    for k in range(n):
+        o, sp = pipe.step(params, sp)
+        assert_tree_equal(o, ref_outs[k], f"{name}/plan[{k}]")
+    assert_tree_equal(sp, si, f"{name}/plan-state")
+
+    # tier 2: compiled plan + scan bursts vs the jitted seed step loop
+    jit_ref = jax.jit(pipe.step_interpreted)
+    jref_outs, sj = [], dict(s0)
+    for _ in range(n):
+        o, sj = jit_ref(params, sj)
+        jref_outs.append(o)
+    assert_tree_equal(sj, si, f"{name}/jit-ref-state")
+
+    sc = dict(s0)
+    compiled = pipe.compiled_step()
+    for k in range(n):
+        o, sc = compiled(params, sc)
+        assert_tree_equal(o, jref_outs[k], f"{name}/compiled[{k}]")
+    assert_tree_equal(sc, sj, f"{name}/compiled-state")
+
+    outs_b, sb = pipe.compiled_step_n()(params, dict(s0), n=n)
+    for k, per in enumerate(unstack_buffers(outs_b, n)):
+        assert_tree_equal(per, jref_outs[k], f"{name}/burst[{k}]")
+    assert_tree_equal(sb, sj, f"{name}/burst-state")
+
+
+def test_schedule_is_static_no_per_step_sorting():
+    pipe = parse_launch(PARITY_PIPELINES["demux"]).realize()
+    plan = pipe.plan
+    # flattened: every op's wiring is resolved to integer slots up front
+    assert all(isinstance(op.in_slots, tuple) for op in plan.ops)
+    assert len(plan.ops) == len(pipe.elements)
+    names = [op.name for op in plan.ops]
+    assert names == [e.name for e in pipe._order]
+
+
+def test_executable_cache_shared_across_identical_pipelines():
+    desc = """
+        testsrc name=s width=8 height=8 ! tensor_converter name=c !
+        tensor_transform name=t mode=arithmetic option=typecast:float32 !
+        appsink name=o
+    """
+    p1 = parse_launch(desc).realize()
+    p2 = parse_launch(desc).realize()
+    assert p1.plan.fingerprint == p2.plan.fingerprint
+    assert p1.compiled_step() is p2.compiled_step()
+    # and re-realizing (failover re-wire path) keeps the fingerprint stable
+    fp = p1.plan.fingerprint
+    p1._realized = False
+    p1.realize()
+    assert p1.plan.fingerprint == fp
+    assert p1.compiled_step() is p2.compiled_step()
+
+
+def test_different_config_gets_different_fingerprint():
+    a = parse_launch("testsrc name=s width=8 height=8 ! appsink name=o").realize()
+    b = parse_launch("testsrc name=s width=4 height=4 ! appsink name=o").realize()
+    assert a.plan.fingerprint != b.plan.fingerprint
+
+
+def test_step_n_with_injected_inputs_matches_sequential():
+    """appsrc-fed pipeline: stacked injected frames through one scan."""
+    n = 4
+    desc = """
+        appsrc name=in ! tensor_transform mode=arithmetic
+          option=typecast:float32,mul:2.0 ! appsink name=o
+    """
+    pipe = parse_launch(desc).realize()
+    params, s0 = pipe.init(jax.random.PRNGKey(0)), pipe.init_state()
+    frames = [StreamBuffer(tensors=(jnp.full((3, 3), i, jnp.float32),),
+                           pts=jnp.int32(i)) for i in range(n)]
+
+    ref, si = [], dict(s0)
+    for f in frames:
+        o, si = pipe.step_interpreted(params, si, {"in": f})
+        ref.append(o)
+
+    stacked = {"in": stack_buffers(frames)}
+    outs, sb = pipe.step_n(params, dict(s0), stacked)
+    for k, per in enumerate(unstack_buffers(outs, n)):
+        assert_tree_equal(per, ref[k], f"inject[{k}]")
+    assert_tree_equal(sb, si, "inject-state")
+
+
+class TestChannelReplayCap:
+    def test_late_subscriber_replay_capped_at_capacity(self):
+        pub = Channel(capacity=64)
+        for i in range(10):
+            pub.push(StreamBuffer(tensors=(jnp.full((1,), i),)))
+        sub = pub.attach_consumer(capacity=4)
+        assert len(sub) == 4
+        assert sub.drops == 6  # skipped history accounted as leaky drops
+        # newest-first survivors: frames 6..9
+        got = [float(sub.pop().tensor[0]) for _ in range(4)]
+        assert got == [6.0, 7.0, 8.0, 9.0]
+
+    def test_replay_within_capacity_is_lossless(self):
+        pub = Channel(capacity=16)
+        for i in range(3):
+            pub.push(StreamBuffer(tensors=(jnp.full((1,), i),)))
+        sub = pub.attach_consumer()
+        assert len(sub) == 3 and sub.drops == 0
+
+
+class TestRuntimeBurstDraining:
+    def _backlogged_runtime(self, burst):
+        rt = Runtime(burst=burst)
+        pub = Device("cam")
+        p = parse_launch("testsrc width=8 height=8 ! tensor_converter ! "
+                         "mqttsink pub-topic=live name=snk")
+        pub.add_pipeline(p, jit=False)
+        rt.add_device(pub)
+        # build a 5-frame backlog before the subscriber joins
+        rt.run(5)
+        sub = Device("screen")
+        s = parse_launch("mqttsrc sub-topic=live name=src ! appsink name=o")
+        run = sub.add_pipeline(s, jit=False)
+        rt.add_device(sub)
+        return rt, run
+
+    def test_burst_drains_backlog_in_one_tick(self):
+        rt, run = self._backlogged_runtime(burst=8)
+        rt.tick()  # publisher emits frame 6, subscriber drains all 6
+        assert run.frames == 6
+        assert run.bursts == 1 and run.burst_frames == 6
+        # frames arrive in order, bitwise identical to per-frame pulls
+        pts = [int(b.pts) for b in run.sink_log["o"]]
+        assert pts == sorted(pts) and len(set(pts)) == 6
+
+    def test_burst_cap_respected(self):
+        rt, run = self._backlogged_runtime(burst=4)
+        rt.tick()
+        assert run.frames == 4  # capped at burst, remainder stays queued
+        rt.tick()
+        assert run.frames == 7  # 2 leftover + 2 fresh publisher frames
+
+    def test_burst_disabled_matches_seed_cadence(self):
+        rt, run = self._backlogged_runtime(burst=1)
+        rt.tick()
+        assert run.frames == 1 and run.bursts == 0
+
+    def test_burst_vs_per_frame_outputs_identical(self):
+        rt1, run1 = self._backlogged_runtime(burst=8)
+        rt1.tick()
+        rt2, run2 = self._backlogged_runtime(burst=1)
+        for _ in range(6):
+            rt2.tick()
+        n = min(len(run1.sink_log["o"]), len(run2.sink_log["o"]))
+        assert n >= 5
+        for a, b in zip(run1.sink_log["o"][:n], run2.sink_log["o"][:n]):
+            assert_tree_equal(a, b, "burst-vs-seed")
+
+    def test_query_pipelines_never_burst(self):
+        """Query round-trips are not hoistable; plan must refuse bursts."""
+        srv = parse_launch(
+            "tensor_query_serversrc operation=op name=ssrc ! "
+            "tensor_query_serversink name=ssink")
+        srv.elements["ssink"].pair_with(srv.elements["ssrc"])
+        srv.realize()
+        assert not srv.plan.burstable and not srv.plan.pure
+
+    def test_pure_pipeline_flags(self):
+        p = parse_launch("testsrc ! tensor_converter ! appsink name=o").realize()
+        assert p.plan.pure and p.plan.burstable
+        assert not p.plan.all_sources_host_driven  # live source: never burst
+        q = parse_launch("mqttsrc sub-topic=x ! appsink name=o").realize()
+        assert not q.plan.pure and q.plan.burstable
+        assert q.plan.all_sources_host_driven
+
+    def test_mixed_live_source_stays_on_tick_cadence(self):
+        """A live testsrc muxed with an mqttsrc must NOT be fast-forwarded
+        by burst draining — the camera would fabricate future frames."""
+        rt = Runtime(burst=8)
+        pub = Device("cam")
+        p = parse_launch("testsrc width=4 height=4 ! tensor_converter ! "
+                         "mqttsink pub-topic=live name=snk")
+        pub.add_pipeline(p, jit=False)
+        rt.add_device(pub)
+        rt.run(5)  # 5-frame backlog
+        mixer = Device("mixer")
+        m = parse_launch("""
+            mqttsrc sub-topic=live name=src ! queue ! mux.sink_0
+            testsrc name=local width=4 height=4 ! tensor_converter ! mux.sink_1
+            tensor_mux name=mux ! appsink name=o
+        """)
+        run = mixer.add_pipeline(m, jit=False)
+        rt.add_device(mixer)
+        assert not m.plan.all_sources_host_driven
+        rt.tick()
+        assert run.frames == 1 and run.bursts == 0
+
+    def test_unread_frames_survive_and_replay_in_order(self):
+        """Frames handed back to an mqttsrc re-emerge first and decoded
+        exactly once (no raw re-queue)."""
+        rt, run = self._backlogged_runtime(burst=1)
+        src = run.pipe.elements["src"]
+        first = src.pull()
+        second = src.pull()
+        src.unread([first, second])
+        assert src.queued() >= 2
+        got = src.pull_burst(2)
+        assert [int(b.pts) for b in got] == [int(first.pts), int(second.pts)]
+
+
+def test_executable_cache_is_bounded():
+    from repro.core.plan import _EXEC_CACHE, _EXEC_CACHE_MAX
+    assert _EXEC_CACHE_MAX >= 1
+    for i in range(3):
+        p = parse_launch(
+            f"testsrc name=s width={4 + i} height=4 ! appsink name=o").realize()
+        p.compiled_step()
+    assert len(_EXEC_CACHE) <= _EXEC_CACHE_MAX
