@@ -1,27 +1,28 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV on stdout AND dumps every row as machine-readable JSON (BENCH_PR1.json
+# CSV on stdout AND dumps every row as machine-readable JSON (BENCH_PR2.json
 # at the repo root) so the perf trajectory is tracked across PRs.
 #
-#   Fig. 7 pub/sub  -> bench_pubsub        (RELAY vs HYBRID vs DIRECT, 3 bands)
-#   Fig. 7 query    -> bench_query         (MQTT-hybrid vs TCP + failover)
-#   §4.2.3 sync     -> bench_sync          (NTP rebase vs raw clocks)
-#   §3/§4.1 codecs  -> bench_compression   (sparse/quant8 wire bytes)
-#   kernels         -> bench_kernels       (Pallas codec kernels, interpret)
-#   §Roofline       -> bench_roofline      (reads results/dryrun.json)
-#   engine          -> bench_step_overhead (compiled plan + burst vs seed loop)
+#   Fig. 7 pub/sub  -> bench_pubsub         (RELAY vs HYBRID vs DIRECT, 3 bands)
+#   Fig. 7 query    -> bench_query          (MQTT-hybrid vs TCP + failover)
+#   §4.2.3 sync     -> bench_sync           (NTP rebase vs raw clocks)
+#   §3/§4.1 codecs  -> bench_compression    (sparse/quant8 wire bytes)
+#   kernels         -> bench_kernels        (Pallas codec kernels, interpret)
+#   §Roofline       -> bench_roofline       (reads results/dryrun.json)
+#   engine          -> bench_step_overhead  (compiled plan + burst vs seed loop)
+#   serving         -> bench_query_batching (micro-batched offloading, >=2x gate)
 import json
 import os
 import platform
 import sys
 import traceback
 
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR1.json")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR2.json")
 
 
 def main() -> None:
     from . import (bench_compression, bench_kernels, bench_pubsub,
-                   bench_query, bench_roofline, bench_step_overhead,
-                   bench_sync)
+                   bench_query, bench_query_batching, bench_roofline,
+                   bench_step_overhead, bench_sync)
     from .common import ROWS, reset_rows
 
     reset_rows()
@@ -30,6 +31,7 @@ def main() -> None:
         ("pubsub", bench_pubsub.run),
         ("query", bench_query.run),
         ("query_failover", bench_query.run_failover),
+        ("query_batching", bench_query_batching.run),
         ("sync", bench_sync.run),
         ("compression", bench_compression.run),
         ("kernels", bench_kernels.run),
@@ -48,7 +50,7 @@ def main() -> None:
     import jax
     payload = {
         "schema": 1,
-        "pr": 1,
+        "pr": 2,
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "suites_failed": failed,

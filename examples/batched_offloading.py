@@ -1,0 +1,83 @@
+"""Micro-batched inference offloading: one capable hub serving many weak
+clients (paper §4.2.2 scaled up — DESIGN.md §2).
+
+Eight TVs offload the same object-detection service to a single phone.
+With query batching (default, ``query_batch=8``) the phone gathers the
+eight concurrent requests that arrive each tick and serves them in ONE
+compiled scan dispatch; each answer routes back by client id.  Setting
+``query_batch=0`` restores the paper's one-round-trip-per-frame serving.
+
+    PYTHONPATH=src python examples/batched_offloading.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TensorSpec, parse_launch
+from repro.core.elements import register_model
+from repro.runtime import Device, Runtime
+
+N_CLIENTS = 8
+TICKS = 12
+
+
+def init(rng):
+    return {"w": jax.random.normal(rng, (48 * 48 * 3, 8)) * 0.01}
+
+
+def apply(p, x):
+    logits = x.astype(jnp.float32).reshape(1, -1) @ p["w"]
+    boxes = jax.nn.sigmoid(logits[:, :4])
+    scores = jax.nn.softmax(logits[:, 4:])[0]
+    return boxes.reshape(1, 4), scores
+
+
+register_model("ssd_tiny", init, apply,
+               out_specs=(TensorSpec((1, 4), "float32"),
+                          TensorSpec((4,), "float32")))
+
+SERVER = """
+tensor_query_serversrc operation=objdetect name=ssrc !
+  tensor_filter framework=jax model=ssd_tiny !
+  tensor_query_serversink name=ssink
+"""
+
+CLIENT = """
+testsrc width=48 height=48 ! tensor_converter !
+  tensor_query_client operation=objdetect name=qc ! appsink name=boxes
+"""
+
+
+def build(query_batch: int):
+    rt = Runtime(query_batch=query_batch)
+    phone = Device("phone")
+    srv = parse_launch(SERVER)
+    srv.elements["ssink"].pair_with(srv.elements["ssrc"])
+    srv_run = phone.add_pipeline(srv, jit=False)
+    rt.add_device(phone)
+    tvs = []
+    for i in range(N_CLIENTS):
+        tv = Device(f"tv{i}")
+        tvs.append(tv.add_pipeline(parse_launch(CLIENT), jit=False))
+        rt.add_device(tv)
+    return rt, srv_run, tvs
+
+
+for label, batch in (("batched (batch=8)", 8), ("sequential (batch=0)", 0)):
+    rt, srv_run, tvs = build(batch)
+    rt.run(2)  # warm the executable cache outside the timed window
+    t0 = time.perf_counter()
+    rt.run(TICKS)
+    dt = time.perf_counter() - t0
+    qb = rt.stats()["query_batching"]
+    assert all(run.frames == TICKS + 2 for run in tvs)
+    print(f"{label}: {N_CLIENTS} clients x {TICKS} ticks in {dt * 1e3:.0f}ms"
+          f" — server dispatches: {qb['batches'] or qb['sequential_frames']}"
+          f" ({qb['batched_frames']} frames batched,"
+          f" {qb['sequential_frames']} sequential)")
+    boxes = tvs[0].last_outputs["boxes"].tensors[0]
+    print(f"  tv0 last boxes: {['%.2f' % float(v) for v in boxes[0]]}")
+
+print("OK — every client answered every tick; batching only changed "
+      "how many dispatches the phone paid")

@@ -9,7 +9,9 @@ from .buffers import (FlexHeader, SparsePayload, StreamBuffer, flex_wrap,
 from .element import Element, element_factory, register_element, FACTORY
 from .elements import register_model, MODEL_REGISTRY
 from .pipeline import Pipeline, parse_launch, parse_caps
-from .plan import ExecutionPlan, clear_executable_cache, executable_cache_info
+from .plan import (ExecutionPlan, PendingQuery, clear_executable_cache,
+                   executable_cache_info)
+from .batching import BatchingPolicy, QueryBatcher
 from .broker import Broker, BrokerError, topic_matches
 from .pubsub import Channel, MqttSink, MqttSrc, Transport
 from .query import (QueryServerEndpoint, QueryTransport, TensorQueryClient,
@@ -24,7 +26,9 @@ __all__ = [
     "Element", "element_factory", "register_element", "FACTORY",
     "register_model", "MODEL_REGISTRY",
     "Pipeline", "parse_launch", "parse_caps",
-    "ExecutionPlan", "clear_executable_cache", "executable_cache_info",
+    "ExecutionPlan", "PendingQuery", "clear_executable_cache",
+    "executable_cache_info",
+    "BatchingPolicy", "QueryBatcher",
     "Broker", "BrokerError", "topic_matches",
     "Channel", "MqttSink", "MqttSrc", "Transport",
     "QueryServerEndpoint", "QueryTransport", "TensorQueryClient",

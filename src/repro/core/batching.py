@@ -1,0 +1,232 @@
+"""Server-side micro-batching for the query protocol (paper §4.2.2, Fig. 2).
+
+The paper's offloading protocol answers one round-trip per frame.  On edge
+silicon the per-dispatch host cost dominates long before the model does
+(arXiv 2210.10514) — the same amortize-the-dispatch argument behind the
+PR-1 burst engine.  This module batches *across clients*: concurrent
+``tensor_query_client`` requests that land on one ``QueryServerEndpoint``
+within a scheduler tick are gathered, decoded, stacked along a leading
+frame axis, and served by ONE hoisted ``step_n`` scan dispatch through the
+server pipeline's compiled plan; the stacked answers are unstacked and
+routed back per ``client_id`` through the real serversink ``apply``.
+
+Semantics are preserved relative to sequential serving:
+
+* requests are served in channel FIFO order (= arrival order), and the
+  server state threads through the scan in that order — frame ``i`` of a
+  batch is exactly the ``i``-th sequential serve;
+* per-request codecs survive: decode happens at gather time, encode at
+  routing time, both through the unchanged ``compression`` code paths;
+* routing meta (``client_id``, ``codec``) is hoisted out of the buffers
+  before stacking (meta is static pytree aux — differing client ids would
+  otherwise make frames structurally unstackable) and re-attached to each
+  answer before the serversink replay.
+
+Fallback rules (automatic, per flush):
+
+* server plans that are not :attr:`ExecutionPlan.query_batchable` (extra
+  impure elements, multiple serversrcs) serve sequentially through the
+  runtime's interpreted per-request step — the pre-batching behavior;
+* requests whose decoded frames differ in pytree structure or tensor
+  shapes/dtypes (mixed caps across clients) are split into consecutive
+  same-structure groups; a group of one is still served through the
+  compiled hoisted path, so every answer leaves through the same execution
+  mode and batch composition never changes numerics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from .buffers import StreamBuffer
+from .query import QueryServerEndpoint
+from . import compression as comp
+
+__all__ = ["BatchingPolicy", "QueryBatcher", "DEFAULT_QUERY_BATCH"]
+
+DEFAULT_QUERY_BATCH = 8
+
+#: buffer meta keys that carry per-request routing, not payload semantics —
+#: hoisted out before stacking and re-attached to the routed answer
+_ROUTING_KEYS = ("client_id", "codec")
+
+
+@dataclass(frozen=True)
+class BatchingPolicy:
+    """How a runtime gathers and flushes query requests.
+
+    * ``max_batch <= 0`` disables batching entirely: clients keep the
+      legacy synchronous round-trip inside ``tensor_query_client.apply``
+      (one interpreted server step per request).
+    * ``max_batch >= 1`` turns on queue-gather-flush: the scheduler defers
+      query clients, gathers their requests, and flushes every endpoint at
+      the tick deadline — or as soon as ``flush_on_full`` sees ``max_batch``
+      requests pending.  Each flush serves in chunks of ``max_batch``
+      through the compiled hoisted plan.
+    """
+
+    max_batch: int = DEFAULT_QUERY_BATCH
+    flush_on_full: bool = True
+
+    @classmethod
+    def of(cls, value) -> "BatchingPolicy":
+        if isinstance(value, cls):
+            return value
+        return cls(max_batch=int(value))
+
+    @property
+    def enabled(self) -> bool:
+        return self.max_batch >= 1
+
+
+class QueryBatcher:
+    """Gather-decode-stack-dispatch-route loop for one server endpoint.
+
+    ``run`` is the scheduler's pipeline-run record for the server pipeline
+    (duck-typed: ``pipe``, ``params``, ``state``, ``frames``, ``bursts``,
+    ``burst_frames``, ``last_outputs``, ``sink_log``); ``inline_step`` is a
+    zero-arg callable performing one legacy interpreted server step
+    (serversrc pull → … → serversink route) — the sequential fallback.
+    """
+
+    def __init__(self, endpoint: QueryServerEndpoint, run: Any,
+                 policy: BatchingPolicy,
+                 inline_step: Optional[Callable[[], Any]] = None):
+        self.endpoint = endpoint
+        self.run = run
+        self.policy = policy
+        self.inline_step = inline_step
+        # stats for Runtime.stats() / the batching benchmark
+        self.flushes = 0
+        self.batches = 0
+        self.batched_frames = 0
+        self.sequential_frames = 0
+
+    # -- public API ------------------------------------------------------------
+    def pending(self) -> int:
+        return len(self.endpoint.requests)
+
+    def full(self) -> bool:
+        pending = self.pending()
+        # backpressure floor, independent of policy: the request Channel is
+        # bounded (leaky-drop), so once the gather reaches its capacity we
+        # MUST serve — one more send would silently drop a client's request
+        # and its frame would then die with 'no answer' at the deadline
+        if pending >= self.endpoint.requests.capacity:
+            return True
+        return self.policy.flush_on_full and \
+            pending >= max(1, self.policy.max_batch)
+
+    def flush(self) -> int:
+        """Serve every pending request; returns the number served.
+
+        Also wired as the endpoint's ``inline_runner`` so edge clients
+        (``EdgeQueryClient.infer``) and direct ``pipe.step`` round-trips
+        keep their serve-before-return contract unchanged.
+        """
+        served = 0
+        plan = self.run.pipe.plan
+        batchable = self.policy.max_batch > 1 and plan.query_batchable
+        while self.pending():
+            if not batchable:
+                n = self.pending()
+                for _ in range(n):
+                    self._serve_sequential()
+                served += n
+                continue
+            raws = self.endpoint.requests.pop_n(self.policy.max_batch)
+            for group in self._group(raws):
+                self._serve_batched(group)
+                served += len(group)
+        if served:
+            self.flushes += 1
+        return served
+
+    # -- gather & grouping -----------------------------------------------------
+    def _decode(self, raw: StreamBuffer) -> Tuple[StreamBuffer, Dict]:
+        """Host-level decode + routing-meta hoist: returns the clean frame
+        (payload meta only) and the routing dict to re-attach on the answer."""
+        codec = raw.meta.get("codec", "none")
+        buf = comp.decode(raw, codec)
+        routing = {k: buf.meta[k] for k in _ROUTING_KEYS if k in buf.meta}
+        clean = buf.with_(meta={k: v for k, v in buf.meta.items()
+                                if k not in _ROUTING_KEYS})
+        return clean, routing
+
+    @staticmethod
+    def _structure(buf: StreamBuffer) -> Tuple:
+        leaves, treedef = jax.tree_util.tree_flatten(buf)
+        return (treedef, tuple((getattr(l, "shape", ()),
+                                str(getattr(l, "dtype", type(l))))
+                               for l in leaves))
+
+    def _group(self, raws: List[StreamBuffer]):
+        """Split decoded requests into consecutive same-structure groups,
+        preserving arrival order (so server state still threads through in
+        FIFO order even when client caps are mixed)."""
+        groups: List[List[Tuple[StreamBuffer, Dict]]] = []
+        last_key = None
+        for raw in raws:
+            clean, routing = self._decode(raw)
+            key = self._structure(clean)
+            if groups and key == last_key:
+                groups[-1].append((clean, routing))
+            else:
+                groups.append([(clean, routing)])
+                last_key = key
+        return groups
+
+    # -- serving ---------------------------------------------------------------
+    def _serve_sequential(self):
+        """Legacy one-request interpreted step (also the fallback for server
+        plans the hoisted scan cannot express)."""
+        if self.inline_step is None:
+            raise RuntimeError("sequential fallback needs an inline_step")
+        self.inline_step()
+        self.sequential_frames += 1
+
+    def _serve_batched(self, group: List[Tuple[StreamBuffer, Dict]]):
+        """One compiled dispatch over the whole group: stack, hoisted scan
+        (serversrc frames injected, serversink answers captured), and
+        per-frame split all happen INSIDE the jitted serve_batch, so the
+        host pays a single dispatch per batch; the captured answers then
+        replay through the real serversink apply with routing restored."""
+        run = self.run
+        plan = run.pipe.plan
+        n = len(group)
+        src = plan.query_sources[0].name
+        serve = plan.compiled_serve_batch()
+        frames_in = tuple({src: clean} for clean, _ in group)
+        frames_out, run.state = serve(run.params, run.state, frames_in)
+        for (_, routing), frame in zip(group, frames_out):
+            self._route(frame, routing)
+            run.frames += 1
+        self.batched_frames += n
+        if n > 1:
+            self.batches += 1
+            run.bursts += 1
+            run.burst_frames += n
+
+    def _route(self, frame_outs: Dict[str, StreamBuffer], routing: Dict):
+        """Deliver one frame's captured outputs: serversink answers replay
+        through the element's real apply (encode + client-channel push) with
+        the hoisted routing meta restored; any app sinks land in the server
+        run's sink log, matching the sequential bookkeeping."""
+        run = self.run
+        app_outs = {}
+        for name, buf in frame_outs.items():
+            elem = run.pipe.elements[name]
+            if getattr(elem, "is_query_sink", False):
+                answer = buf.with_(meta={**buf.meta, **routing})
+                elem.apply(run.params.get(name, {}), [answer])
+            else:
+                app_outs[name] = buf
+                run.sink_log.setdefault(name, []).append(buf)
+        run.last_outputs = app_outs
+
+    def stats(self) -> Dict[str, int]:
+        return {"flushes": self.flushes, "batches": self.batches,
+                "batched_frames": self.batched_frames,
+                "sequential_frames": self.sequential_frames}

@@ -273,7 +273,7 @@ class Pipeline:
 
     def step_n(self, params: dict, state: dict,
                inputs: Optional[Dict[str, StreamBuffer]] = None,
-               n: Optional[int] = None
+               n: Optional[int] = None, hoist_queries: bool = False
                ) -> Tuple[Dict[str, StreamBuffer], dict]:
         """N-frame burst: one ``lax.scan`` dispatch through the whole DAG.
         ``inputs`` holds *stacked* per-source frames (leading axis N) or pass
@@ -281,7 +281,8 @@ class Pipeline:
         is bitwise what the ``i``-th sequential :meth:`step` would return."""
         if not self._realized:
             self.realize()
-        return self.plan.step_n(params, state, inputs, n=n)
+        return self.plan.step_n(params, state, inputs, n=n,
+                                hoist_queries=hoist_queries)
 
     def compiled_step(self, donate: Optional[bool] = None):
         """Cached jitted step, shared process-wide across pipelines with the
@@ -291,11 +292,14 @@ class Pipeline:
         return self.plan.compiled_step(donate=donate)
 
     def compiled_step_n(self, hoist_io: bool = False,
+                        hoist_queries: bool = False,
                         donate: Optional[bool] = None):
         """Cached jitted burst step (see :meth:`step_n`)."""
         if not self._realized:
             self.realize()
-        return self.plan.compiled_step_n(hoist_io=hoist_io, donate=donate)
+        return self.plan.compiled_step_n(hoist_io=hoist_io,
+                                         hoist_queries=hoist_queries,
+                                         donate=donate)
 
     def describe(self) -> str:
         if not self._realized:

@@ -38,20 +38,22 @@ from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax import lax
 
 from .buffers import StreamBuffer
 from .element import Element, PipelineContext
 
-__all__ = ["ExecutionPlan", "PlanOp", "clear_executable_cache",
-           "executable_cache_info"]
+__all__ = ["ExecutionPlan", "PendingQuery", "PlanOp",
+           "clear_executable_cache", "executable_cache_info"]
 
 
 class PlanOp:
     """One scheduled element: static wiring resolved to value slots."""
 
     __slots__ = ("elem", "name", "in_slots", "out_slots", "injectable",
-                 "is_sink", "is_host_sink")
+                 "is_sink", "is_host_sink", "is_query_src", "is_query_sink",
+                 "is_query_client")
 
     def __init__(self, elem: Element, in_slots: Tuple[int, ...],
                  out_slots: Tuple[int, ...], injectable: bool,
@@ -63,6 +65,9 @@ class PlanOp:
         self.injectable = injectable
         self.is_sink = is_sink
         self.is_host_sink = is_host_sink
+        self.is_query_src = getattr(elem, "is_query_source", False)
+        self.is_query_sink = getattr(elem, "is_query_sink", False)
+        self.is_query_client = getattr(elem, "is_query_client", False)
 
 
 # Process-wide executable registry: fingerprint -> (owning plan, jitted fns).
@@ -142,6 +147,24 @@ class ExecutionPlan:
         self.all_sources_host_driven = bool(self.host_sources) and all(
             getattr(op.elem, "is_host_source", False)
             for op in ops if not op.in_slots)
+        # -- query-protocol topology flags (see core/batching.py) -------------
+        #: serversrc/serversink pairs of a query *server* pipeline
+        self.query_sources = [op.elem for op in ops if op.is_query_src]
+        self.query_sinks = [op.elem for op in ops if op.is_query_sink]
+        #: pipeline contains tensor_query_client elements — the runtime
+        #: scheduler can run it deferred (pause at each client, gather the
+        #: request into a server-side micro-batch, resume with the answer)
+        self.has_query_clients = any(op.is_query_client for op in ops)
+        #: server pipeline whose impure elements are exactly one injectable
+        #: serversrc plus capturable serversinks: N decoded requests can be
+        #: stacked and served in ONE hoisted `step_n` scan dispatch.  Anything
+        #: else (extra impure elements, multiple serversrcs, non-serversrc
+        #: graph sources) keeps the sequential one-request-at-a-time path.
+        self.query_batchable = (
+            len(self.query_sources) == 1 and bool(self.query_sinks)
+            and all(getattr(e, "is_query_source", False)
+                    or getattr(e, "is_query_sink", False) for e in impure)
+            and all(op.is_query_src for op in ops if not op.in_slots))
         self.fingerprint = self._fingerprint(order, links)
 
     @staticmethod
@@ -152,25 +175,29 @@ class ExecutionPlan:
         return (elems, wiring)
 
     # -- single-frame execution ------------------------------------------------
-    def run(self, params: dict, state: dict,
-            inputs: Optional[Dict[str, StreamBuffer]] = None,
-            hoist_io: bool = False
-            ) -> Tuple[Dict[str, StreamBuffer], dict]:
-        """One frame through the static schedule.  Pure (jittable) when the
-        pipeline is pure or ``hoist_io=True`` with all host sources injected.
-        Semantics match the seed interpreter bitwise."""
-        inputs = inputs or {}
-        ctx = PipelineContext(state)
-        vals: List[Any] = [None] * self.n_slots
-        outputs: Dict[str, StreamBuffer] = {}
-        for op in self.ops:
+    def _exec_ops(self, params: dict, ctx: PipelineContext, vals: List[Any],
+                  outputs: Dict[str, StreamBuffer],
+                  inputs: Dict[str, StreamBuffer], start: int,
+                  hoist_io: bool, hoist_queries: bool, defer_queries: bool
+                  ) -> Optional[Tuple[int, StreamBuffer]]:
+        """Walk ``ops[start:]`` mutating ``vals``/``outputs``/``ctx``.
+
+        Returns ``None`` when the schedule completes, or ``(op_idx, request)``
+        when ``defer_queries=True`` and a query client is reached — the
+        caller ships ``request`` to a server batch and later resumes from
+        ``op_idx`` with the answer (see :class:`PendingQuery`).
+        """
+        for idx in range(start, len(self.ops)):
+            op = self.ops[idx]
             ins = [vals[s] for s in op.in_slots]
-            if op.injectable and op.name in inputs:
+            injectable = op.injectable or (hoist_queries and op.is_query_src)
+            if injectable and op.name in inputs:
                 ins = [inputs[op.name]]
-                if getattr(op.elem, "is_host_source", False):
-                    # host-driven source (mqttsrc): its apply would pull from
-                    # the channel; the injected, already-decoded frame IS the
-                    # pull — emit it directly
+                if getattr(op.elem, "is_host_source", False) or \
+                        (hoist_queries and op.is_query_src):
+                    # host-driven source (mqttsrc) or hoisted serversrc: its
+                    # apply would pull from the channel; the injected,
+                    # already-decoded frame IS the pull — emit it directly
                     if op.out_slots and op.out_slots[0] >= 0:
                         vals[op.out_slots[0]] = ins[0]
                     continue
@@ -178,23 +205,68 @@ class ExecutionPlan:
                 raise ValueError(
                     f"{op.name}: hoisted execution requires an injected "
                     f"input frame for every host-driven source")
-            if hoist_io and op.is_host_sink:
+            elif hoist_queries and op.is_query_src:
+                raise ValueError(
+                    f"{op.name}: hoisted query serving requires an injected "
+                    f"request frame for every serversrc")
+            if (hoist_io and op.is_host_sink) or \
+                    (hoist_queries and op.is_query_sink):
                 # capture instead of the impure push; the caller replays the
                 # captured frame through the element's real apply afterwards
                 outputs[op.name] = ins[0]
                 continue
+            if defer_queries and op.is_query_client:
+                return idx, ins[0]
             outs = op.elem.apply(params.get(op.name, {}), ins, ctx)
             for i, o in enumerate(outs):
                 if i < len(op.out_slots) and op.out_slots[i] >= 0:
                     vals[op.out_slots[i]] = o
             if op.is_sink and outs:
                 outputs[op.name] = outs[0]
+        return None
+
+    def run(self, params: dict, state: dict,
+            inputs: Optional[Dict[str, StreamBuffer]] = None,
+            hoist_io: bool = False, hoist_queries: bool = False
+            ) -> Tuple[Dict[str, StreamBuffer], dict]:
+        """One frame through the static schedule.  Pure (jittable) when the
+        pipeline is pure or hoisted (``hoist_io`` with all host sources
+        injected; ``hoist_queries`` with the serversrc request injected).
+        Semantics match the seed interpreter bitwise."""
+        inputs = inputs or {}
+        ctx = PipelineContext(state)
+        vals: List[Any] = [None] * self.n_slots
+        outputs: Dict[str, StreamBuffer] = {}
+        self._exec_ops(params, ctx, vals, outputs, inputs, 0,
+                       hoist_io, hoist_queries, defer_queries=False)
         return outputs, ctx.next_state
+
+    def run_deferred(self, params: dict, state: dict,
+                     inputs: Optional[Dict[str, StreamBuffer]] = None):
+        """Start one frame, pausing at the first un-answered query client.
+
+        Returns ``(outputs, next_state)`` when the pipeline has no query
+        client on this frame's path, or a :class:`PendingQuery` whose
+        ``request`` is the buffer the client was about to send.  The caller
+        performs the send/serve/receive at host level (the runtime
+        scheduler's queue-gather-flush) and calls ``resume(answer)``.
+        Interpreted host-level execution only — never jit this path."""
+        inputs = inputs or {}
+        ctx = PipelineContext(state)
+        vals: List[Any] = [None] * self.n_slots
+        outputs: Dict[str, StreamBuffer] = {}
+        res = self._exec_ops(params, ctx, vals, outputs, inputs, 0,
+                             hoist_io=False, hoist_queries=False,
+                             defer_queries=True)
+        if res is None:
+            return outputs, ctx.next_state
+        return PendingQuery(self, params, inputs, ctx, vals, outputs, *res)
 
     # -- burst execution -------------------------------------------------------
     def step_n(self, params: dict, state: dict,
                inputs: Optional[Dict[str, StreamBuffer]] = None,
-               n: Optional[int] = None, hoist_io: bool = False
+               n: Optional[int] = None, hoist_io: bool = False,
+               hoist_queries: bool = False
                ) -> Tuple[Dict[str, StreamBuffer], dict]:
         """Run an N-frame burst with a single ``lax.scan`` dispatch.
 
@@ -208,11 +280,36 @@ class ExecutionPlan:
             raise ValueError("step_n needs stacked `inputs` or a length `n`")
 
         def body(carry, x):
-            outs, nxt = self.run(params, carry, x, hoist_io=hoist_io)
+            outs, nxt = self.run(params, carry, x, hoist_io=hoist_io,
+                                 hoist_queries=hoist_queries)
             return nxt, outs
 
         final_state, outs = lax.scan(body, state, inputs, length=n)
         return outs, final_state
+
+    def serve_batch(self, params: dict, state: dict, frames: Tuple
+                    ) -> Tuple[Tuple, dict]:
+        """Serve N query requests as one traced unit: stack the per-frame
+        input dicts, scan the hoisted DAG, and split the outputs back into
+        per-frame pytrees — all INSIDE the trace, so a compiled batch costs
+        one host dispatch total (eager stack/unstack would pay one dispatch
+        per leaf per frame, which is the overhead batching exists to kill).
+
+        ``frames`` is a tuple of ``{source_name: StreamBuffer}`` dicts with
+        identical pytree structure.  Returns (tuple of per-frame outputs,
+        final state); frame ``i`` equals the ``i``-th sequential hoisted
+        ``run``."""
+        n = len(frames)
+        if n == 1:
+            outs, final = self.run(params, state, frames[0],
+                                   hoist_io=True, hoist_queries=True)
+            return (outs,), final
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *frames)
+        outs, final = self.step_n(params, state, stacked,
+                                  hoist_io=True, hoist_queries=True)
+        per = tuple(jax.tree_util.tree_map(lambda l, _i=i: l[_i], outs)
+                    for i in range(n))
+        return per, final
 
     # -- compiled executables --------------------------------------------------
     def _cache(self) -> Dict[str, Any]:
@@ -245,18 +342,84 @@ class ExecutionPlan:
         return fns[key]
 
     def compiled_step_n(self, hoist_io: bool = False,
+                        hoist_queries: bool = False,
                         donate: Optional[bool] = None) -> Callable:
         """Jitted burst step ``(params, state, inputs=None, n=None) ->
-        (stacked outputs, final state)``.  ``n`` and ``hoist_io`` are static;
-        each distinct burst length traces once and is cached thereafter."""
+        (stacked outputs, final state)``.  ``n``, ``hoist_io`` and
+        ``hoist_queries`` are static; each distinct burst length (= query
+        batch size in hoisted-query serving) traces once and is cached
+        thereafter in the fingerprint-keyed registry."""
         donate = self._resolve_donate(donate)
         fns = self._cache()["fns"]
-        key = ("step_n", hoist_io, donate)
+        key = ("step_n", hoist_io, hoist_queries, donate)
         if key not in fns:
             def step_n(params, state, inputs=None, n=None,
-                       _self=self, _hoist=hoist_io):
+                       _self=self, _hoist=hoist_io, _hoistq=hoist_queries):
                 return _self.step_n(params, state, inputs, n=n,
-                                    hoist_io=_hoist)
+                                    hoist_io=_hoist, hoist_queries=_hoistq)
             fns[key] = jax.jit(step_n, static_argnames=("n",),
                                donate_argnums=(1,) if donate else ())
         return fns[key]
+
+    def compiled_serve_batch(self, donate: Optional[bool] = None) -> Callable:
+        """Jitted :meth:`serve_batch` ``(params, state, frames_tuple) ->
+        (per-frame outputs tuple, final state)``.  The batch size lives in
+        the input pytree structure, so each distinct size traces once per
+        fingerprint and is cached thereafter (the QueryBatcher caps sizes
+        at ``max_batch``, keeping the trace set tiny)."""
+        donate = self._resolve_donate(donate)
+        fns = self._cache()["fns"]
+        key = ("serve_batch", donate)
+        if key not in fns:
+            fns[key] = jax.jit(self.serve_batch,
+                               donate_argnums=(1,) if donate else ())
+        return fns[key]
+
+
+class PendingQuery:
+    """A frame paused mid-schedule at a query client, awaiting its answer.
+
+    Produced by :meth:`ExecutionPlan.run_deferred`; ``request`` is the
+    StreamBuffer the client was about to ship.  After the host sends the
+    request and the (batched) server answer arrives, ``resume(answer)``
+    continues the walk — returning ``(outputs, next_state)`` on completion
+    or ``self`` again if a later query client pauses the frame once more.
+    """
+
+    __slots__ = ("plan", "params", "inputs", "ctx", "vals", "outputs",
+                 "op_idx", "request")
+
+    def __init__(self, plan: ExecutionPlan, params: dict, inputs: dict,
+                 ctx: PipelineContext, vals: List[Any],
+                 outputs: Dict[str, StreamBuffer], op_idx: int,
+                 request: StreamBuffer):
+        self.plan = plan
+        self.params = params
+        self.inputs = inputs
+        self.ctx = ctx
+        self.vals = vals
+        self.outputs = outputs
+        self.op_idx = op_idx
+        self.request = request
+
+    @property
+    def client(self):
+        """The tensor_query_client element this frame is paused at."""
+        return self.plan.ops[self.op_idx].elem
+
+    def resume(self, answer: StreamBuffer):
+        """Inject the server's answer as the paused client's output and run
+        the rest of the schedule."""
+        op = self.plan.ops[self.op_idx]
+        if op.out_slots and op.out_slots[0] >= 0:
+            self.vals[op.out_slots[0]] = answer
+        if op.is_sink:
+            self.outputs[op.name] = answer
+        res = self.plan._exec_ops(self.params, self.ctx, self.vals,
+                                  self.outputs, self.inputs,
+                                  self.op_idx + 1, hoist_io=False,
+                                  hoist_queries=False, defer_queries=True)
+        if res is None:
+            return self.outputs, self.ctx.next_state
+        self.op_idx, self.request = res
+        return self

@@ -92,6 +92,14 @@ class Channel:
     def pop(self) -> Optional[StreamBuffer]:
         return self.q.popleft() if self.q else None
 
+    def pop_n(self, max_n: int) -> list:
+        """Drain up to ``max_n`` queued buffers in FIFO order (the gather
+        half of the query batcher's queue-gather-flush)."""
+        out = []
+        while len(out) < max_n and self.q:
+            out.append(self.q.popleft())
+        return out
+
     def __len__(self):
         return len(self.q)
 

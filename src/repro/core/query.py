@@ -71,6 +71,10 @@ class TensorQueryClient(Element):
     """
 
     host_impure = True
+    #: the runtime scheduler may pause a frame here (plan.run_deferred),
+    #: gather the request into a server-side micro-batch, and resume with
+    #: the answer — see core/batching.py
+    is_query_client = True
 
     _ids = itertools.count(1)
 
@@ -152,6 +156,9 @@ class TensorQueryServerSrc(Element):
 
     n_sink_pads = 0
     host_impure = True
+    #: hoistable out of a batched serving dispatch: the QueryBatcher pulls &
+    #: decodes queued requests at host level and injects them stacked
+    is_query_source = True
 
     def __init__(self, name=None, operation="", broker: Optional[Broker] = None,
                  **props):
@@ -187,6 +194,9 @@ class TensorQueryServerSink(Element):
 
     n_src_pads = 0
     host_impure = True
+    #: capturable by a batched serving dispatch: the QueryBatcher replays the
+    #: captured answers through the real apply (encode + client_id routing)
+    is_query_sink = True
 
     def __init__(self, name=None, serversrc: Optional[TensorQueryServerSrc] = None,
                  **props):

@@ -29,7 +29,9 @@ _DTYPES = ("int8", "uint8", "int16", "uint16", "int32", "uint32",
 def pack_buffer(tensors: Sequence[np.ndarray], pts: int = 0) -> bytes:
     parts = [_MAGIC, struct.pack("<HHq", _VERSION, len(tensors), pts)]
     for t in tensors:
-        t = np.ascontiguousarray(t)
+        # NOT ascontiguousarray: that promotes 0-dim scalars to shape (1,),
+        # silently changing the tensor's rank on the wire
+        t = np.asarray(t, order="C")
         tag = _DTYPES.index(t.dtype.name)
         parts.append(struct.pack("<HH", tag, t.ndim))
         parts.append(struct.pack(f"<{t.ndim}I", *t.shape) if t.ndim else b"")
@@ -40,22 +42,51 @@ def pack_buffer(tensors: Sequence[np.ndarray], pts: int = 0) -> bytes:
 
 
 def unpack_buffer(data: bytes) -> Tuple[List[np.ndarray], int]:
+    """Strict inverse of :func:`pack_buffer`.
+
+    A sensor on a flaky link can hand us anything: wrong protocol, a future
+    wire version, or a frame cut mid-payload.  Every such case raises
+    ``ValueError`` — silently misparsing tensor bytes is how a corrupt frame
+    becomes a corrupt *inference* three devices later.
+    """
+    data = bytes(data)
+    if len(data) < 16:
+        raise ValueError(f"truncated header: {len(data)} bytes, need 16")
     if data[:4] != _MAGIC:
         raise ValueError("bad magic")
     ver, n, pts = struct.unpack_from("<HHq", data, 4)
-    off = 4 + 12
+    if ver != _VERSION:
+        raise ValueError(f"unsupported wire version {ver} (speaks {_VERSION})")
+    off = 16
     tensors = []
-    for _ in range(n):
+    for i in range(n):
+        if off + 4 > len(data):
+            raise ValueError(f"tensor {i}: truncated tensor header")
         tag, ndim = struct.unpack_from("<HH", data, off)
         off += 4
+        if tag >= len(_DTYPES):
+            raise ValueError(f"tensor {i}: unknown dtype tag {tag}")
+        if off + 4 * ndim + 8 > len(data):
+            raise ValueError(f"tensor {i}: truncated dims/size fields")
         shape = struct.unpack_from(f"<{ndim}I", data, off) if ndim else ()
         off += 4 * ndim
         (nbytes,) = struct.unpack_from("<Q", data, off)
         off += 8
-        arr = np.frombuffer(data, dtype=_DTYPES[tag], count=-1, offset=off)
-        arr = arr[: nbytes // np.dtype(_DTYPES[tag]).itemsize].reshape(shape)
+        dt = np.dtype(_DTYPES[tag])
+        expected = int(np.prod(shape, dtype=np.uint64)) * dt.itemsize
+        if nbytes != expected:
+            raise ValueError(
+                f"tensor {i}: payload size {nbytes} != shape {tuple(shape)} "
+                f"x {dt.name} = {expected}")
+        if off + nbytes > len(data):
+            raise ValueError(f"tensor {i}: truncated payload "
+                             f"({len(data) - off} of {nbytes} bytes)")
+        arr = np.frombuffer(data, dtype=dt, count=nbytes // dt.itemsize,
+                            offset=off).reshape(shape)
         tensors.append(arr.copy())
         off += nbytes
+    if off != len(data):
+        raise ValueError(f"{len(data) - off} trailing bytes after {n} tensors")
     return tensors, pts
 
 

@@ -1,0 +1,51 @@
+"""Version-compat shims for jax APIs that moved between 0.4.x and 0.5+.
+
+The codebase targets current jax naming (``jax.shard_map``,
+``jax.set_mesh``); this module maps those onto the experimental homes they
+had in 0.4.x so the same source runs on both.  Keep every shim tiny and
+delete it when the minimum supported jax passes the new API.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pvary"]
+
+
+def pvary(x, axis_name):
+    """``jax.lax.pvary`` fallback: 0.4.x shard_map has no varying-axis
+    bookkeeping (its ``check_rep`` analysis predates VMA types), so marking
+    a value as varying is simply the identity there."""
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is not None:
+        return fn(x, axis_name)
+    return x
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+              axis_names=None, check_vma=None):
+    """``jax.shard_map`` with graceful fallback to
+    ``jax.experimental.shard_map.shard_map`` (jax 0.4.x).
+
+    Newer-API spellings are translated for the old entry point:
+    ``check_vma`` -> ``check_rep`` and ``axis_names={...}`` (manual axes)
+    -> ``auto=`` (every other mesh axis).
+    """
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # 0.4.x's check_rep analysis predates VMA types and miscounts scan
+    # carries (jax recommends check_rep=False as the workaround), so rep
+    # checking is off unless the caller asked for it explicitly
+    kwargs = {"check_rep": bool(check_vma)}
+    if axis_names is not None:
+        kwargs["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -99,7 +99,8 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
             pltpu.VMEM((bq, 1), jnp.float32),     # running denom l
             pltpu.VMEM((bq, dv), jnp.float32),    # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=getattr(pltpu, "CompilerParams",
+                                getattr(pltpu, "TPUCompilerParams", None))(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

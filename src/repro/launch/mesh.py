@@ -20,6 +20,16 @@ V5E_HBM_BW = 819e9           # bytes/s per chip
 V5E_ICI_BW = 50e9            # bytes/s per link (~per-direction)
 
 
+def set_mesh(mesh):
+    """Ambient-mesh context, version-compatible: ``jax.set_mesh`` landed
+    after 0.4.x; older jax sets the thread-local mesh by entering the Mesh
+    itself.  Both make bare-PartitionSpec constraints resolve."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

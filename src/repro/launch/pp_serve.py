@@ -22,6 +22,8 @@ from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
+
+from ..jaxcompat import pvary, shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..models import layers as L
@@ -69,14 +71,18 @@ def make_pp_serve_step(model: Model, mesh, shard_kv_seq: bool = False
             stack = params["stack"][0]
             groups = cache["groups"][0]
 
-            def body(stack_l, caches_l, x_all):
-                stage = jax.lax.axis_index("pod")
+            def body(stack_l, caches_l, x_all, stage_ids):
+                # stage id arrives as a pod-sharded iota input rather than
+                # jax.lax.axis_index: under a partial-manual submesh the
+                # latter lowers to PartitionId, which the SPMD partitioner
+                # rejects (and old jax cannot express at all)
+                stage = stage_ids[0]
                 d = x_all.shape[-1]
                 mbs = x_all.reshape(n_pods, mb, 1, d)
                 outs = jnp.zeros_like(mbs)
                 buf = jnp.zeros((mb, 1, d), x_all.dtype)
-                buf = jax.lax.pvary(buf, ("pod",))
-                outs = jax.lax.pvary(outs, ("pod",))
+                buf = pvary(buf, ("pod",))
+                outs = pvary(outs, ("pod",))
                 new_caches = caches_l
                 perm = [(i, i + 1) for i in range(n_pods - 1)]
 
@@ -140,12 +146,13 @@ def make_pp_serve_step(model: Model, mesh, shard_kv_seq: bool = False
                 lambda leaf: P("pod", *([None] * (leaf.ndim - 1))), stack)
             cache_specs = jax.tree_util.tree_map(
                 lambda leaf: P("pod", *([None] * (leaf.ndim - 1))), groups)
-            x_out, new_groups = jax.shard_map(
+            x_out, new_groups = shard_map(
                 body, mesh=mesh,
-                in_specs=(stack_specs, cache_specs, P(None, None, None)),
+                in_specs=(stack_specs, cache_specs, P(None, None, None),
+                          P("pod")),
                 out_specs=(P(None, None, None), cache_specs),
                 axis_names={"pod"}, check_vma=False,
-            )(stack, groups, x)
+            )(stack, groups, x, jnp.arange(n_pods, dtype=jnp.int32))
 
             h = L.apply_norm(params["final_norm"], x_out, cfg)
             logits = L.unembed(params["embed"], cfg, h)[:, 0]

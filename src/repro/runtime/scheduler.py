@@ -22,23 +22,33 @@ decodes the queued frames, stacks them (``stack_buffers``), and runs the
 pipeline's compiled plan in hoisted-I/O mode: a single ``lax.scan`` executes
 the whole DAG N times, then captured mqttsink frames are replayed through
 the real (impure) sink ``apply`` in order.  Pipelines whose impure elements
-are not hoistable (query protocol round-trips) fall back to per-frame
-stepping automatically.
+are not hoistable fall back to per-frame stepping automatically.
 
-Statistics (frames, drops, bytes, bursts, per-sink pts) feed the Fig. 7
-benchmark.
+Query micro-batching (default on, ``query_batch=8``, DESIGN.md §2): client
+pipelines run *deferred* — the plan pauses at each ``tensor_query_client``,
+the scheduler ships the request to the server endpoint's ``QueryBatcher``,
+and once every ready pipeline has sent (the tick deadline — or earlier when
+a batcher hits ``max_batch``), each server serves its gathered requests in
+ONE hoisted scan dispatch and the paused frames resume with their routed
+answers.  ``query_batch=0`` restores the legacy synchronous one-round-trip-
+per-frame path inside ``tensor_query_client.apply``.
+
+Statistics (frames, drops, bytes, bursts, batches, per-sink pts) feed the
+Fig. 7 benchmark.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 
+from ..core.batching import BatchingPolicy, QueryBatcher, DEFAULT_QUERY_BATCH
 from ..core.broker import Broker, BrokerError
 from ..core.buffers import StreamBuffer, stack_buffers, unstack_buffers
 from ..core.element import Element
 from ..core.pipeline import Pipeline
+from ..core.plan import PendingQuery
 from ..core.pubsub import Channel, MqttSink, MqttSrc
 from ..core.query import TensorQueryClient, TensorQueryServerSrc
 from ..core.sync import PipelineClock, SimClock
@@ -94,11 +104,17 @@ class Device:
 
 class Runtime:
     def __init__(self, broker: Optional[Broker] = None, tick_ns: int = TICK_NS,
-                 burst: int = DEFAULT_BURST):
+                 burst: int = DEFAULT_BURST,
+                 query_batch=DEFAULT_QUERY_BATCH):
         self.broker = broker or Broker()
         self.devices: List[Device] = []
         self.tick_ns = tick_ns
         self.burst = max(1, int(burst))
+        #: query micro-batching policy (int = max batch; 0 disables —
+        #: legacy synchronous round-trips inside the client's apply)
+        self.batching = BatchingPolicy.of(query_batch)
+        #: endpoint_id -> QueryBatcher for every runtime-wired serversrc
+        self._batchers: Dict[int, QueryBatcher] = {}
         self.ticks = 0
 
     def add_device(self, device: Device) -> Device:
@@ -118,7 +134,15 @@ class Runtime:
             if isinstance(e, (MqttSink, MqttSrc, TensorQueryClient)) and e.broker is None:
                 e.connect(self.broker)
             if isinstance(e, TensorQueryServerSrc) and e.registration is None:
-                e.connect(self.broker, inline_runner=lambda r=run: self._run_once(r))
+                # the endpoint's inline_runner is the batcher's flush: edge
+                # clients and direct pipe.step round-trips keep their
+                # serve-before-return contract, while runtime-driven clients
+                # go through the deferred queue-gather-flush path
+                batcher = QueryBatcher(
+                    e.endpoint, run, self.batching,
+                    inline_step=lambda r=run: self._run_once(r))
+                self._batchers[e.endpoint.endpoint_id] = batcher
+                e.connect(self.broker, inline_runner=batcher.flush)
         # (re)negotiate with broker wiring in place so mqttsink registers;
         # the rebuilt plan keeps its fingerprint, so compiled executables
         # from before the re-wire are reused, not retraced
@@ -136,16 +160,73 @@ class Runtime:
                     return False
         return True
 
-    def _run_once(self, run: _PipeRun):
-        # host-level elements (mqttsrc pull / query send) are impure, so
-        # pipelines containing them run the plan interpreted; pure pipelines
-        # step through the cached compiled executable.
-        outputs, run.state = run.step_fn(run.params, run.state)
+    def _finish_frame(self, run: _PipeRun, outputs: Dict[str, StreamBuffer]):
         run.frames += 1
         run.last_outputs = outputs
         for name, buf in outputs.items():
             run.sink_log.setdefault(name, []).append(buf)
         return outputs
+
+    def _run_once(self, run: _PipeRun):
+        # host-level elements (mqttsrc pull / query send) are impure, so
+        # pipelines containing them run the plan interpreted; pure pipelines
+        # step through the cached compiled executable.
+        outputs, run.state = run.step_fn(run.params, run.state)
+        return self._finish_frame(run, outputs)
+
+    # -- deferred query clients (micro-batched offloading) -----------------------
+    def _start_deferred(self, run: _PipeRun
+                        ) -> Optional[Tuple[_PipeRun, PendingQuery]]:
+        """Begin a frame for a pipeline containing query clients: the plan
+        pauses at the first client, whose request is dispatched to the
+        server's batcher.  Returns the paused frame, or None if the frame
+        completed without pausing."""
+        res = run.pipe.plan.run_deferred(run.params, run.state)
+        if isinstance(res, PendingQuery):
+            self._dispatch_query(res)
+            return run, res
+        outputs, run.state = res
+        self._finish_frame(run, outputs)
+        return None
+
+    def _dispatch_query(self, pq: PendingQuery):
+        """Ship a paused frame's request: encode + client_id tag + push to
+        the resolved endpoint (failover re-binding included), then flush
+        early if the endpoint's batch is full.  Endpoints the runtime does
+        not manage (manually wired servers) serve inline immediately."""
+        qc = pq.client
+        qc.send_query(pq.request)
+        ep = qc._endpoint()
+        batcher = self._batchers.get(ep.endpoint_id)
+        if batcher is None:
+            runner = ep.spec.get("inline_runner")
+            if runner is not None:
+                runner()
+        elif batcher.full():
+            batcher.flush()
+
+    def _drain_queries(self, pending: List[Tuple[_PipeRun, PendingQuery]]):
+        """Tick-deadline flush: serve every gathered request, resume the
+        paused frames with their answers, and repeat for pipelines that
+        pause again at a later query client."""
+        while pending:
+            for batcher in self._batchers.values():
+                batcher.flush()
+            nxt = []
+            for run, pq in pending:
+                answer = pq.client.recv_answer()
+                if answer is None:
+                    raise BrokerError(
+                        f"{pq.client.name}: no answer from "
+                        f"{pq.client.operation!r}")
+                res = pq.resume(answer)
+                if isinstance(res, PendingQuery):
+                    self._dispatch_query(res)
+                    nxt.append((run, res))
+                else:
+                    outputs, run.state = res
+                    self._finish_frame(run, outputs)
+            pending = nxt
 
     # -- burst draining ----------------------------------------------------------
     def _burst_size(self, run: _PipeRun) -> int:
@@ -216,19 +297,26 @@ class Runtime:
         self._ntp_ref.advance(self.tick_ns)
         for dev in self.devices:
             dev.clock.advance(self.tick_ns)
+        pending: List[Tuple[_PipeRun, PendingQuery]] = []
         for dev in self.devices:
             for run in dev.runs:
                 if any(isinstance(e, TensorQueryServerSrc)
                        for e in run.pipe.elements.values()):
-                    continue  # servers run inline, driven by clients
+                    continue  # servers run batched/inline, driven by clients
                 if not self._ready(run):
                     run.skipped += 1
+                    continue
+                if run.pipe.plan.has_query_clients and self.batching.enabled:
+                    paused = self._start_deferred(run)
+                    if paused is not None:
+                        pending.append(paused)
                     continue
                 n = self._burst_size(run)
                 if n > 1:
                     self._run_burst(run, n)
                 else:
                     self._run_once(run)
+        self._drain_queries(pending)
 
     def run(self, n_ticks: int):
         for _ in range(n_ticks):
@@ -246,4 +334,10 @@ class Runtime:
                             "burst_frames": run.burst_frames}
         out["broker"] = {"relay_msgs": self.broker.relay_msgs,
                          "relay_bytes": self.broker.relay_bytes}
+        agg = {"flushes": 0, "batches": 0, "batched_frames": 0,
+               "sequential_frames": 0}
+        for b in self._batchers.values():
+            for k, v in b.stats().items():
+                agg[k] += v
+        out["query_batching"] = {"max_batch": self.batching.max_batch, **agg}
         return out

@@ -1,0 +1,78 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` property-testing
+API, used only when the real package is not installed (tests/conftest.py adds
+this directory to ``sys.path`` as a fallback).
+
+Scope: exactly the subset the test-suite uses — ``@given`` over positional
+strategies, ``@settings(max_examples=..., deadline=...)``, and the strategies
+``integers``, ``floats``, ``sampled_from``, ``text``, ``lists``.
+
+Semantics differ from real hypothesis in two deliberate ways:
+
+* examples are DETERMINISTIC (seeded PRNG + boundary values first), so a
+  failure reproduces identically on every run — no example database, no
+  shrinking; the falsifying example is reported in the failure message;
+* ``deadline`` and any other settings besides ``max_examples`` are ignored.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+from . import strategies  # noqa: F401  (re-export: `from hypothesis import strategies as st`)
+
+__all__ = ["given", "settings", "strategies"]
+
+_SEED = 0x5EED_CAFE
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(**kw):
+    """Decorator recording settings; only ``max_examples`` is honoured."""
+
+    def deco(fn):
+        fn._hyp_settings = dict(kw)
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    """Run the wrapped test over deterministic example draws.
+
+    Boundary values (min/max/etc.) come first, then seeded random draws up
+    to ``max_examples``.  Works above or below ``@settings`` and on both
+    plain functions and methods (extra leading args pass through).
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_hyp_settings", None) or \
+                getattr(fn, "_hyp_settings", None) or {}
+            max_examples = int(conf.get("max_examples", _DEFAULT_MAX_EXAMPLES))
+            rnd = random.Random(_SEED)
+            edge_lists = [s.edges() for s in strats]
+            n_edge = min(max_examples,
+                         max((len(e) for e in edge_lists), default=0))
+            examples = [tuple(e[i % len(e)] for e in edge_lists)
+                        for i in range(n_edge)]
+            while len(examples) < max_examples:
+                examples.append(tuple(s.example(rnd) for s in strats))
+            for ex in examples:
+                try:
+                    fn(*args, *ex, **kwargs)
+                except Exception as e:
+                    argrepr = ", ".join(repr(v) for v in ex)
+                    raise AssertionError(
+                        f"Falsifying example: {fn.__name__}({argrepr})"
+                    ) from e
+
+        # pytest must see the wrapper's (*args) signature, not the wrapped
+        # test's — otherwise strategy parameters look like missing fixtures
+        del wrapper.__wrapped__
+        # mirror real hypothesis's attribute shape: third-party pytest
+        # plugins (e.g. anyio) probe `fn.hypothesis.inner_test`
+        wrapper.hypothesis = type("_Hyp", (), {"inner_test": staticmethod(fn)})()
+        return wrapper
+
+    return deco

@@ -1,0 +1,121 @@
+"""Strategy objects for the vendored hypothesis shim (see __init__.py).
+
+Each strategy exposes ``edges()`` — the deterministic boundary examples run
+first — and ``example(rnd)`` — one seeded random draw.
+"""
+from __future__ import annotations
+
+__all__ = ["integers", "floats", "sampled_from", "text", "lists"]
+
+
+class _Strategy:
+    def edges(self):
+        return []
+
+    def example(self, rnd):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.min_value = int(min_value)
+        self.max_value = int(max_value)
+
+    def edges(self):
+        out = [self.min_value, self.max_value]
+        for probe in (0, 1, -1):
+            if self.min_value < probe < self.max_value:
+                out.append(probe)
+        return list(dict.fromkeys(out))
+
+    def example(self, rnd):
+        return rnd.randint(self.min_value, self.max_value)
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.min_value = float(min_value)
+        self.max_value = float(max_value)
+
+    def edges(self):
+        mid = 0.5 * (self.min_value + self.max_value)
+        return list(dict.fromkeys([self.min_value, self.max_value, mid]))
+
+    def example(self, rnd):
+        return rnd.uniform(self.min_value, self.max_value)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from needs a non-empty collection")
+
+    def edges(self):
+        return list(self.elements)
+
+    def example(self, rnd):
+        return rnd.choice(self.elements)
+
+
+class _Text(_Strategy):
+    def __init__(self, alphabet, min_size, max_size):
+        self.alphabet = list(alphabet)
+        self.min_size = int(min_size)
+        self.max_size = int(max_size)
+        if not self.alphabet and self.min_size > 0:
+            raise ValueError("text() with empty alphabet and min_size > 0")
+
+    def edges(self):
+        out = []
+        if self.alphabet:
+            out.append(self.alphabet[0] * self.min_size)
+            out.append(self.alphabet[-1] * self.max_size)
+        elif self.min_size == 0:
+            out.append("")
+        return list(dict.fromkeys(out))
+
+    def example(self, rnd):
+        size = rnd.randint(self.min_size, self.max_size)
+        return "".join(rnd.choice(self.alphabet) for _ in range(size))
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements, min_size, max_size):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size)
+
+    def edges(self):
+        elem_edges = self.elements.edges() or [None]
+        out = []
+        if elem_edges[0] is not None:
+            out.append([elem_edges[0]] * self.min_size)
+            out.append([elem_edges[-1]] * self.max_size)
+        elif self.min_size == 0:
+            out.append([])
+        return out
+
+    def example(self, rnd):
+        size = rnd.randint(self.min_size, self.max_size)
+        return [self.elements.example(rnd) for _ in range(size)]
+
+
+def integers(min_value, max_value):
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value, max_value):
+    return _Floats(min_value, max_value)
+
+
+def sampled_from(elements):
+    return _SampledFrom(elements)
+
+
+def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=10):
+    return _Text(alphabet, min_size, max_size)
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Lists(elements, min_size, max_size)

@@ -5,3 +5,11 @@ import sys
 # makes plain `pytest` work too).  NOTE: no XLA_FLAGS here — smoke tests and
 # benches must see 1 device; only launch/dryrun.py forges 512.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests use hypothesis; when it isn't installed fall back to the
+# deterministic vendored shim (tests/_vendor/hypothesis) so the suite still
+# collects and runs everywhere.  The real package wins when present.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))

@@ -31,6 +31,7 @@ def _run(script: str) -> str:
 def test_shard_map_moe_matches_dense():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import set_mesh
         from repro.models import ModelConfig
         from repro.models import moe as MOE
         from repro.models.sharding import sharding_rules
@@ -46,7 +47,7 @@ def test_shard_map_moe_matches_dense():
             p = MOE.moe_init(jax.random.PRNGKey(0), cfg)
             x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
             y_ref, aux_ref = MOE._apply_moe_dense(p, cfg, x)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 with sharding_rules(batch="data", __mesh__=mesh):
                     y_sm, aux_sm = jax.jit(
                         lambda p, x: MOE._apply_moe_shard_map(p, cfg, x, mesh)
@@ -66,6 +67,7 @@ def test_mini_dryrun_lowers_on_small_mesh():
     _run("""
         import jax
         from dataclasses import replace
+        from repro.launch.mesh import set_mesh
         from repro.configs import get_config
         from repro.models.model import build_model
         from repro.launch import steps as ST, shardings as SH
@@ -78,7 +80,7 @@ def test_mini_dryrun_lowers_on_small_mesh():
             stacked = model.supports_stacked
             pshape = ST.eval_params_shape(model, stacked)
             pspec = SH.stacked_param_shardings(cfg, mesh, pshape)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 # train
                 step = ST.make_train_step(model, mesh, stacked=stacked)
                 oshape = ST.eval_opt_shape(pshape)
@@ -104,6 +106,7 @@ def test_mini_dryrun_lowers_on_small_mesh():
 def test_seq_parallel_ssd_matches_reference():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import set_mesh
         from dataclasses import replace
         from repro.models import ModelConfig
         from repro.models import ssm as SSM
@@ -119,7 +122,7 @@ def test_seq_parallel_ssd_matches_reference():
         _, cache_ref = SSM.ssm_prefill(p, cfg, x)
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         cfg_sp = replace(cfg, ssm_seq_parallel=True)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             with sharding_rules(batch="data", __mesh__=mesh):
                 y_sp = jax.jit(lambda p, x: SSM.ssm_train(p, cfg_sp, x))(p, x)
                 y_pf, cache_sp = jax.jit(
@@ -137,11 +140,17 @@ def test_seq_parallel_ssd_matches_reference():
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(
+    not hasattr(__import__("jax"), "shard_map"),
+    reason="partial-manual shard_map subgroups CHECK-fail inside jaxlib "
+           "0.4.x's SPMD partitioner (spmd_partitioner.cc:512); needs the "
+           "jax>=0.5 manual-axes path")
 def test_pp_pod_offload_serve():
     """Pipeline-parallel decode across the pod axis (Fig. 2 at pod scale):
     tokens and caches must match the plain stacked decode."""
     _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import set_mesh
         from repro.models import ModelConfig, build_model
         from repro.launch.pp_serve import make_pp_serve_step, pp_applicable
         cfg = ModelConfig(name="t", arch_type="dense", n_layers=4, d_model=64,
@@ -155,7 +164,7 @@ def test_pp_pod_offload_serve():
         ld_ref, cref = m.decode_step_stacked(sp, nxt, cache)
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
         assert pp_applicable(m, mesh)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             tok_out, cpp = jax.jit(make_pp_serve_step(m, mesh))(sp, nxt, cache)
         np.testing.assert_array_equal(np.asarray(tok_out),
                                       np.asarray(jnp.argmax(ld_ref, -1)))

@@ -1,0 +1,105 @@
+"""Edge wire-format round-trip and corruption-rejection tests (edge/edge.py).
+
+The NNSE format is the contract with non-jax devices (RTOS sensors, plain
+python processes).  Round trips must be lossless for every supported dtype
+and degenerate shape; malformed frames — wrong magic, future versions,
+truncation anywhere, inconsistent sizes — must raise, never misparse.
+"""
+import struct
+
+import numpy as np
+import pytest
+
+from repro.edge.edge import _DTYPES, _MAGIC, pack_buffer, unpack_buffer
+
+
+def _arr(dtype: str, shape=(3, 4)) -> np.ndarray:
+    rng = np.random.default_rng(hash(dtype) % 2 ** 31)
+    if dtype.startswith("float"):
+        return rng.standard_normal(shape).astype(dtype)
+    info = np.iinfo(dtype)
+    return rng.integers(info.min, int(info.max) + 1, size=shape,
+                        dtype=np.dtype(dtype))
+
+
+def _assert_roundtrip(tensors, pts=0):
+    got, got_pts = unpack_buffer(pack_buffer(tensors, pts))
+    assert got_pts == pts
+    assert len(got) == len(tensors)
+    for a, b in zip(tensors, got):
+        assert a.dtype == b.dtype
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("dtype", _DTYPES)
+    def test_all_dtypes(self, dtype):
+        _assert_roundtrip([_arr(dtype)])
+
+    @pytest.mark.parametrize("dtype", _DTYPES)
+    def test_zero_dim(self, dtype):
+        _assert_roundtrip([_arr(dtype, shape=())])
+
+    @pytest.mark.parametrize("shape", [(0,), (0, 3), (4, 0, 2)])
+    def test_empty_tensors(self, shape):
+        _assert_roundtrip([np.zeros(shape, np.float32)])
+
+    def test_multi_tensor_mixed_dtypes(self):
+        # deliberately places a float64 tensor at an offset that is not a
+        # multiple of 8 relative to the payload start — the seed parser's
+        # whole-buffer frombuffer choked on exactly this framing
+        _assert_roundtrip([_arr("uint8", (5,)), _arr("float64", (2, 3)),
+                           _arr("int16", ()), _arr("float32", (0, 2))])
+
+    @pytest.mark.parametrize("pts", [0, -1, -(2 ** 62), 2 ** 62])
+    def test_pts_signed_range(self, pts):
+        _assert_roundtrip([_arr("int32", (2,))], pts=pts)
+
+    def test_no_tensors(self):
+        _assert_roundtrip([])
+
+
+class TestRejection:
+    def test_bad_magic(self):
+        wire = bytearray(pack_buffer([_arr("uint8")]))
+        wire[:4] = b"XXSE"
+        with pytest.raises(ValueError, match="magic"):
+            unpack_buffer(bytes(wire))
+
+    def test_unknown_version(self):
+        wire = bytearray(pack_buffer([_arr("uint8")]))
+        struct.pack_into("<H", wire, 4, 99)
+        with pytest.raises(ValueError, match="version 99"):
+            unpack_buffer(bytes(wire))
+
+    def test_unknown_dtype_tag(self):
+        wire = bytearray(pack_buffer([_arr("uint8", (2,))]))
+        struct.pack_into("<H", wire, 16, len(_DTYPES))  # first tensor's tag
+        with pytest.raises(ValueError, match="dtype tag"):
+            unpack_buffer(bytes(wire))
+
+    def test_payload_size_mismatch(self):
+        wire = bytearray(pack_buffer([_arr("float32", (2, 2))]))
+        # nbytes field sits after tag(2)+ndim(2)+dims(2*4) = 12 bytes
+        struct.pack_into("<Q", wire, 16 + 12, 15)
+        with pytest.raises(ValueError, match="payload size"):
+            unpack_buffer(bytes(wire))
+
+    def test_every_truncation_rejected(self):
+        """No prefix of a valid frame may parse: byte-exhaustive sweep."""
+        wire = pack_buffer([_arr("uint8", (3,)), _arr("float64", (2, 2))],
+                           pts=-7)
+        for cut in range(len(wire)):
+            with pytest.raises(ValueError):
+                unpack_buffer(wire[:cut])
+
+    def test_trailing_garbage_rejected(self):
+        wire = pack_buffer([_arr("int32", (2, 2))])
+        with pytest.raises(ValueError, match="trailing"):
+            unpack_buffer(wire + b"\x00")
+
+    def test_memoryview_input_accepted(self):
+        wire = pack_buffer([_arr("uint16", (4,))])
+        got, _ = unpack_buffer(memoryview(wire))
+        assert got[0].dtype == np.uint16

@@ -1,0 +1,115 @@
+"""Executable-registry LRU semantics (core/plan.py, DESIGN.md §1).
+
+DESIGN claims three properties this file pins down:
+
+* the registry is LRU-capped at 128 fingerprints — the 129th distinct
+  topology evicts the least-recently-used entry, not the most recent;
+* an evicted topology that comes back retraces cleanly (fresh entry, same
+  results — eviction is a perf event, never a correctness event);
+* anonymous (auto-named) pipelines get fresh element names per parse and
+  therefore never alias each other's executables.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import parse_launch
+from repro.core.plan import (_EXEC_CACHE, _EXEC_CACHE_MAX,
+                             clear_executable_cache, executable_cache_info)
+
+
+def _pipe(width: int, name: str = "s"):
+    return parse_launch(
+        f"testsrc name={name} width={width} height=2 ! tensor_converter "
+        f"name=c ! appsink name=o").realize()
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    clear_executable_cache()
+    yield
+    clear_executable_cache()
+
+
+class TestLRUEviction:
+    def test_cap_is_128_and_oldest_evicted(self):
+        """Fill past the documented cap with distinct fingerprints; the
+        registry stays bounded and evicts in insertion (LRU) order."""
+        assert _EXEC_CACHE_MAX == 128  # the DESIGN.md §1 contract
+        plans = [_pipe(w + 1).plan for w in range(_EXEC_CACHE_MAX + 2)]
+        for p in plans:
+            p._cache()  # registry insert without paying a trace
+        assert len(_EXEC_CACHE) == _EXEC_CACHE_MAX
+        assert plans[0].fingerprint not in _EXEC_CACHE
+        assert plans[1].fingerprint not in _EXEC_CACHE
+        assert plans[2].fingerprint in _EXEC_CACHE
+        assert plans[-1].fingerprint in _EXEC_CACHE
+
+    def test_touch_refreshes_recency(self):
+        a, b = _pipe(3).plan, _pipe(4).plan
+        a._cache(), b._cache()
+        a._cache()  # a is now most recent
+        order = list(_EXEC_CACHE)
+        assert order == [b.fingerprint, a.fingerprint]
+
+    def test_reencounter_after_eviction_retraces_cleanly(self, monkeypatch):
+        import repro.core.plan as planmod
+        monkeypatch.setattr(planmod, "_EXEC_CACHE_MAX", 2)
+        pipe_a = _pipe(3)
+        params = pipe_a.init(jax.random.PRNGKey(0))
+        s0 = pipe_a.init_state()
+        ref, _ = pipe_a.compiled_step()(params, dict(s0))
+        # churn two other topologies through the size-2 registry → a evicted
+        for w in (5, 6):
+            p = _pipe(w)
+            p.compiled_step()(p.init(jax.random.PRNGKey(0)), p.init_state())
+        assert pipe_a.plan.fingerprint not in _EXEC_CACHE
+        # re-encounter: fresh trace, identical results
+        out, _ = pipe_a.compiled_step()(params, dict(s0))
+        assert pipe_a.plan.fingerprint in _EXEC_CACHE
+        np.testing.assert_array_equal(np.asarray(ref["o"].tensor),
+                                      np.asarray(out["o"].tensor))
+
+    def test_eviction_keeps_executable_count_consistent(self, monkeypatch):
+        import repro.core.plan as planmod
+        monkeypatch.setattr(planmod, "_EXEC_CACHE_MAX", 2)
+        for w in range(3, 8):
+            _pipe(w).compiled_step()
+        info = executable_cache_info()
+        assert info["fingerprints"] == 2
+        assert info["executables"] == 2  # one jitted step per fingerprint
+
+
+class TestAnonymousPipelinesNeverAlias:
+    DESC = ("testsrc width=6 height=2 ! tensor_converter ! "
+            "tensor_transform mode=arithmetic option=typecast:float32 ! "
+            "appsink")
+
+    def test_fresh_names_fresh_fingerprints(self):
+        p1 = parse_launch(self.DESC).realize()
+        p2 = parse_launch(self.DESC).realize()
+        assert p1.plan.fingerprint != p2.plan.fingerprint
+        assert p1.compiled_step() is not p2.compiled_step()
+        assert executable_cache_info()["fingerprints"] == 2
+
+    def test_anonymous_results_still_correct(self):
+        p1 = parse_launch(self.DESC).realize()
+        p2 = parse_launch(self.DESC).realize()
+        o1, _ = p1.compiled_step()(p1.init(jax.random.PRNGKey(0)),
+                                   p1.init_state())
+        o2, _ = p2.compiled_step()(p2.init(jax.random.PRNGKey(0)),
+                                   p2.init_state())
+        (s1,), (s2,) = o1.values(), o2.values()
+        np.testing.assert_array_equal(np.asarray(s1.tensor),
+                                      np.asarray(s2.tensor))
+
+    def test_named_pipelines_do_alias(self):
+        """Control: identical NAMED topologies share one executable — the
+        cross-pipeline sharing the anonymous case must not get."""
+        desc = ("testsrc name=s width=6 height=2 ! tensor_converter name=c ! "
+                "appsink name=o")
+        p1 = parse_launch(desc).realize()
+        p2 = parse_launch(desc).realize()
+        assert p1.plan.fingerprint == p2.plan.fingerprint
+        assert p1.compiled_step() is p2.compiled_step()
