@@ -1,0 +1,160 @@
+"""Failover fabric: ticks-to-recovery and heartbeat steady-state cost
+(DESIGN.md §3 — the PR-3 tentpole gates).
+
+Three measurements:
+
+* **in-flight failover** — a serving device dies mid-batch with requests
+  stranded on it; counts redispatches and asserts zero client-visible loss
+  (every tick answered for every client, fault or not);
+* **ticks-to-recovery** — the ONLY server dies, clients park; after the
+  replacement's register event, how many scheduler ticks until every parked
+  frame has its answer.  GATE: <= 2 ticks;
+* **heartbeat penalty** — steady-state µs/tick of the identical workload
+  with the lease/heartbeat protocol on vs off (fps cost of liveness).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TensorSpec, parse_launch
+from repro.core.elements import register_model
+from repro.runtime import Device, Runtime
+
+from .common import emit
+
+# reuse the deterministic chaos harness's fault primitives (tick-scripted
+# kills/revivals, mid-batch tripwire) so the benchmark gates on exactly the
+# fault semantics the tests exercise — no second copy to drift
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+from chaoslib import Chaos  # noqa: E402
+
+GATE_RECOVERY_TICKS = 2
+N_CLIENTS = 4
+
+
+def _ensure_model():
+    key = "failover_svc"
+
+    def init(rng):
+        return {"w": jax.random.normal(rng, (12, 4)) * 0.3}
+
+    def apply(p, x):
+        return x.astype(jnp.float32).reshape(1, -1) @ p["w"]
+
+    register_model(key, init, apply,
+                   out_specs=(TensorSpec((1, 4), "float32"),))
+    return key
+
+
+def _server(rt, name="hub"):
+    model = _ensure_model()
+    dev = Device(name)
+    ps = parse_launch(
+        f"tensor_query_serversrc operation=svc name=ssrc ! "
+        f"tensor_filter model={model} ! tensor_query_serversink name=ssink")
+    ps.elements["ssink"].pair_with(ps.elements["ssrc"])
+    run = dev.add_pipeline(ps, jit=False)
+    rt.add_device(dev)
+    return dev, run, ps.elements["ssrc"]
+
+
+def _clients(rt, n):
+    runs = []
+    for i in range(n):
+        dev = Device(f"tv{i}")
+        pc = parse_launch(
+            "testsrc width=2 height=2 ! tensor_converter ! "
+            "tensor_query_client operation=svc name=qc ! appsink name=res")
+        runs.append(dev.add_pipeline(pc, jit=False))
+        rt.add_device(dev)
+    return runs
+
+
+def bench_inflight_failover(ticks: int = 10, kill_tick: int = 5):
+    rt = Runtime(query_batch=8)
+    devA, _, ssrcA = _server(rt, "hubA")
+    _server(rt, "hubB")
+    clients = _clients(rt, N_CLIENTS)
+    # die mid-batch: the kill lands after the 2nd request of the kill tick
+    # is already on hubA's queue — the remaining dispatches and the two
+    # orphans must re-route to hubB inside the same tick
+    harness = Chaos(rt)
+    harness.kill_server_mid_batch(kill_tick, devA, ssrcA, after_n=2)
+    harness.run(ticks)
+    lost = sum(ticks - c.frames for c in clients)
+    fo = rt.stats()["failover"]
+    emit("failover/inflight", 0.0,
+         f"redispatches={fo['redispatches']};lost_requests={lost};"
+         f"zero_loss={lost == 0}",
+         redispatches=fo["redispatches"], lost=lost,
+         zero_loss=bool(lost == 0))
+    if lost:
+        raise AssertionError(f"in-flight failover lost {lost} requests")
+
+
+def bench_ticks_to_recovery(kill_tick: int = 4, dead_ticks: int = 3):
+    rt = Runtime(query_batch=8, lease_ticks=3)
+    dev, _, ssrc = _server(rt)
+    clients = _clients(rt, N_CLIENTS)
+    harness = Chaos(rt)
+    harness.kill_server(kill_tick + 1, dev, ssrc, crash=True)
+    harness.run(kill_tick + dead_ticks)      # everything parks
+    parked = rt.stats()["failover"]["parked_now"]
+    harness._revive(dev, ssrc)               # the register event
+    recovery = 0
+    while rt.stats()["failover"]["parked_now"] and \
+            recovery <= GATE_RECOVERY_TICKS + 1:
+        rt.tick()
+        recovery += 1
+    done = rt.stats()["failover"]["parked_now"] == 0
+    emit("failover/ticks_to_recovery", 0.0,
+         f"parked={parked};recovery_ticks={recovery};"
+         f"gate<={GATE_RECOVERY_TICKS};pass={done and recovery <= GATE_RECOVERY_TICKS}",
+         parked=parked, recovery_ticks=recovery,
+         gate=GATE_RECOVERY_TICKS,
+         gate_pass=bool(done and recovery <= GATE_RECOVERY_TICKS))
+    if not done or recovery > GATE_RECOVERY_TICKS:
+        raise AssertionError(
+            f"recovery took {recovery} ticks (> {GATE_RECOVERY_TICKS}) "
+            f"or frames still parked")
+
+
+def bench_heartbeat_penalty(rounds: int = 4, chunk: int = 10):
+    """Interleave timed chunks of two identical workloads (leases on / off)
+    and keep the per-config minimum — back-to-back whole-run timing is
+    dominated by process drift (GC, allocator), not by the heartbeats."""
+    rts = {}
+    for label, lease in (("leased", 2), ("no_lease", None)):
+        rt = Runtime(query_batch=8, lease_ticks=lease)
+        _server(rt)
+        _clients(rt, N_CLIENTS)
+        rt.run(5)                            # warm compile caches
+        rts[label] = rt
+    best = {label: float("inf") for label in rts}
+    for _ in range(rounds):
+        for label, rt in rts.items():
+            t0 = time.perf_counter()
+            rt.run(chunk)
+            best[label] = min(best[label],
+                              (time.perf_counter() - t0) / chunk * 1e6)
+    for label, us in best.items():
+        emit(f"failover/heartbeat/{label}", us, f"us_per_tick={us:.1f}")
+    penalty = best["leased"] / best["no_lease"]
+    emit("failover/heartbeat/penalty", 0.0,
+         f"leased_vs_unleased={penalty:.3f}x",
+         penalty=round(penalty, 4))
+
+
+def run():
+    bench_inflight_failover()
+    bench_ticks_to_recovery()
+    bench_heartbeat_penalty()
+
+
+if __name__ == "__main__":
+    run()

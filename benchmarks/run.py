@@ -1,5 +1,5 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV on stdout AND dumps every row as machine-readable JSON (BENCH_PR2.json
+# CSV on stdout AND dumps every row as machine-readable JSON (BENCH_PR3.json
 # at the repo root) so the perf trajectory is tracked across PRs.
 #
 #   Fig. 7 pub/sub  -> bench_pubsub         (RELAY vs HYBRID vs DIRECT, 3 bands)
@@ -10,19 +10,20 @@
 #   §Roofline       -> bench_roofline       (reads results/dryrun.json)
 #   engine          -> bench_step_overhead  (compiled plan + burst vs seed loop)
 #   serving         -> bench_query_batching (micro-batched offloading, >=2x gate)
+#   failover        -> bench_failover       (ticks-to-recovery <=2 gate, heartbeat cost)
 import json
 import os
 import platform
 import sys
 import traceback
 
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR2.json")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR3.json")
 
 
 def main() -> None:
-    from . import (bench_compression, bench_kernels, bench_pubsub,
-                   bench_query, bench_query_batching, bench_roofline,
-                   bench_step_overhead, bench_sync)
+    from . import (bench_compression, bench_failover, bench_kernels,
+                   bench_pubsub, bench_query, bench_query_batching,
+                   bench_roofline, bench_step_overhead, bench_sync)
     from .common import ROWS, reset_rows
 
     reset_rows()
@@ -32,6 +33,7 @@ def main() -> None:
         ("query", bench_query.run),
         ("query_failover", bench_query.run_failover),
         ("query_batching", bench_query_batching.run),
+        ("failover", bench_failover.run),
         ("sync", bench_sync.run),
         ("compression", bench_compression.run),
         ("kernels", bench_kernels.run),
@@ -50,7 +52,7 @@ def main() -> None:
     import jax
     payload = {
         "schema": 1,
-        "pr": 2,
+        "pr": 3,
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "suites_failed": failed,

@@ -126,6 +126,11 @@ class QueryBatcher:
         (``EdgeQueryClient.infer``) and direct ``pipe.step`` round-trips
         keep their serve-before-return contract unchanged.
         """
+        if not self.endpoint.alive:
+            # dead server: never serve — requests still on the endpoint are
+            # orphans the scheduler re-dispatches from its own PendingQuery
+            # records (the runtime purges the channel on the down event)
+            return 0
         served = 0
         plan = self.run.pipe.plan
         batchable = self.policy.max_batch > 1 and plan.query_batchable

@@ -10,16 +10,33 @@ Topics follow MQTT semantics: '/'-separated levels, subscriptions may use
 example: servers "/objdetect/mobilev3" and "/objdetect/yolov2", client
 subscribes "/objdetect/#" and the broker picks one (R3), failing over to the
 alternative when the connected one dies (R4).
+
+Liveness (DESIGN.md §3): a registration may carry a **lease** — it must be
+refreshed by :meth:`Broker.heartbeat` or it expires ``lease_ticks`` broker
+ticks after the last beat (``Broker.tick`` is the lease clock; the runtime
+scheduler drives it once per scheduler tick and heartbeats on behalf of its
+live devices).  ``mark_down`` (crash notice) and lease expiry both fire a
+single ``"down"`` watch event; a downed registration does NOT come back by
+merely heartbeating again — the device must :meth:`Broker.revive` (or
+re-register), which fires ``"register"``, exactly like an MQTT client
+reconnecting with a fresh CONNECT after its keep-alive lapsed.
+
+Selection (R3) is capability-aware: ``Binding`` ranks matching registrations
+by :meth:`Broker.rank_key` — preferred codec support, declared throughput,
+current load (maintained by the runtime from its stats), registration order
+as the deterministic tiebreak — instead of first-match.  A newly registered
+(or revived) publisher that outranks the bound one wins the binding back.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .formats import Caps
 
-__all__ = ["Broker", "Registration", "topic_matches", "BrokerError"]
+__all__ = ["Broker", "Registration", "Binding", "topic_matches",
+           "BrokerError"]
 
 
 class BrokerError(RuntimeError):
@@ -52,43 +69,111 @@ class Registration:
     specs: Dict[str, Any] = field(default_factory=dict)
     alive: bool = True
     reg_id: int = 0
+    #: missed-heartbeat tolerance in broker ticks; None = no lease (the
+    #: registration never expires on its own)
+    lease_ticks: Optional[int] = None
+    #: broker tick of the last heartbeat (or registration/revival)
+    last_beat: int = 0
+    #: current workload — refreshed by the runtime from its stats; lower
+    #: ranks better (the paper's "server workload status")
+    load: float = 0.0
+    #: why the registration went down ("crash" | "lease-expired"), for
+    #: diagnostics and the chaos harness's assertions
+    down_reason: Optional[str] = None
 
     def describe(self) -> str:
         extra = ", ".join(f"{k}={v}" for k, v in self.specs.items())
         return f"{self.topic} [{self.caps.describe()}] {extra}".strip()
 
 
+def _as_float(v, default: float = 0.0) -> float:
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return default
+
+
 class Broker:
     """In-process MQTT-analogue. Subscribers get *bindings* that auto-fail-over
     across compatible registrations (R4)."""
 
-    def __init__(self, name: str = "broker"):
+    def __init__(self, name: str = "broker",
+                 lease_ticks: Optional[int] = None):
         self.name = name
         self._regs: Dict[int, Registration] = {}
         self._ids = itertools.count(1)
         self._watchers: List[Callable[[str, Registration], None]] = []
+        #: lease applied to registrations that don't declare their own
+        self.default_lease_ticks = lease_ticks
+        #: lease clock (advanced by :meth:`tick`)
+        self.now = 0
+        self.expiries = 0
         # data-plane accounting for RELAY transport benchmarking
         self.relay_bytes = 0
         self.relay_msgs = 0
 
     # -- publish side ----------------------------------------------------------
     def register(self, topic: str, caps: Caps, endpoint: Any,
-                 **specs) -> Registration:
-        reg = Registration(topic=topic, caps=caps, endpoint=endpoint,
-                           specs=specs, reg_id=next(self._ids))
+                 lease_ticks: Optional[int] = None, **specs) -> Registration:
+        reg = Registration(
+            topic=topic, caps=caps, endpoint=endpoint, specs=specs,
+            reg_id=next(self._ids),
+            lease_ticks=(lease_ticks if lease_ticks is not None
+                         else self.default_lease_ticks),
+            last_beat=self.now)
         self._regs[reg.reg_id] = reg
         self._notify("register", reg)
         return reg
 
     def unregister(self, reg: Registration):
+        if reg.reg_id not in self._regs:
+            return  # already gone — never double-deliver the event
         reg.alive = False
         self._regs.pop(reg.reg_id, None)
         self._notify("unregister", reg)
 
-    def mark_down(self, reg: Registration):
-        """Liveness loss without clean unregister (device crash)."""
+    def mark_down(self, reg: Registration, reason: str = "crash"):
+        """Liveness loss without clean unregister (device crash / lease
+        expiry).  Idempotent: a registration already down fires nothing."""
+        if not reg.alive:
+            return
         reg.alive = False
+        reg.down_reason = reason
         self._notify("down", reg)
+
+    # -- liveness: leases & heartbeats -----------------------------------------
+    def heartbeat(self, reg: Registration) -> bool:
+        """Refresh a live registration's lease.  A downed registration stays
+        down (it must :meth:`revive` — the MQTT reconnect) — returns False."""
+        if reg.reg_id not in self._regs or not reg.alive:
+            return False
+        reg.last_beat = self.now
+        return True
+
+    def revive(self, reg: Registration) -> Registration:
+        """Re-register a previously downed registration under its original
+        ``reg_id`` — the device came back and reclaims the rank it held
+        before the outage.  Fires ``"register"``; idempotent on live regs."""
+        self._regs.setdefault(reg.reg_id, reg)
+        if reg.alive:
+            return reg
+        reg.alive = True
+        reg.down_reason = None
+        reg.last_beat = self.now
+        self._notify("register", reg)
+        return reg
+
+    def tick(self, n: int = 1):
+        """Advance the lease clock; expire registrations whose lease lapsed.
+        Expiry is a ``mark_down`` (fires ``"down"``) — bindings fail over
+        exactly as on a crash notice."""
+        for _ in range(n):
+            self.now += 1
+            for reg in list(self._regs.values()):
+                if reg.alive and reg.lease_ticks is not None and \
+                        self.now - reg.last_beat > reg.lease_ticks:
+                    self.expiries += 1
+                    self.mark_down(reg, reason="lease-expired")
 
     # -- discovery -------------------------------------------------------------
     def discover(self, topic_filter: str,
@@ -104,8 +189,29 @@ class Broker:
             out.append(reg)
         return sorted(out, key=lambda r: r.reg_id)
 
-    def subscribe(self, topic_filter: str, **require) -> "Binding":
-        return Binding(self, topic_filter, require or None)
+    def rank_key(self, reg: Registration,
+                 prefer: Optional[Dict[str, Any]] = None) -> Tuple:
+        """Sort key for capability-aware selection — LOWER ranks better.
+
+        Order of importance: (1) preferred-codec support (a server declaring
+        ``codecs=(...)`` that lacks the client's codec ranks behind one that
+        has it — absent declaration means "anything goes"), (2) declared
+        ``throughput`` (higher better), (3) current ``load`` (lower better),
+        (4) registration order — the deterministic tiebreak that preserves
+        the pre-ranking first-match behavior when nobody declares anything.
+        """
+        prefer = prefer or {}
+        codec = prefer.get("codec")
+        declared = reg.specs.get("codecs")
+        codec_miss = 1 if (codec not in (None, "none") and declared is not None
+                           and codec not in declared) else 0
+        return (codec_miss, -_as_float(reg.specs.get("throughput")),
+                _as_float(reg.load), reg.reg_id)
+
+    def subscribe(self, topic_filter: str,
+                  prefer: Optional[Dict[str, Any]] = None,
+                  **require) -> "Binding":
+        return Binding(self, topic_filter, require or None, prefer=prefer)
 
     def _notify(self, event: str, reg: Registration):
         for w in list(self._watchers):
@@ -113,6 +219,12 @@ class Broker:
 
     def watch(self, fn: Callable[[str, Registration], None]):
         self._watchers.append(fn)
+
+    def unwatch(self, fn: Callable[[str, Registration], None]):
+        try:
+            self._watchers.remove(fn)
+        except ValueError:
+            pass
 
     # -- RELAY data plane -------------------------------------------------------
     def relay(self, payload_nbytes: int):
@@ -122,32 +234,63 @@ class Broker:
 
 
 class Binding:
-    """A live subscription that resolves to one concrete registration and
-    transparently fails over (R4)."""
+    """A live subscription that resolves to the best-ranked registration and
+    transparently fails over (R4).
+
+    Candidates are ranked by :meth:`Broker.rank_key` (codec support,
+    throughput, load, registration order) and filtered by data-plane
+    liveness (an endpoint whose ``alive`` flag dropped is skipped even
+    before the broker learns of the death — lease expiry lags a silent
+    crash by up to ``lease_ticks``).  A registration that appears (or
+    revives) and outranks the current one wins the binding back.
+    """
 
     def __init__(self, broker: Broker, topic_filter: str,
-                 require: Optional[Dict[str, Any]]):
+                 require: Optional[Dict[str, Any]],
+                 prefer: Optional[Dict[str, Any]] = None):
         self.broker = broker
         self.topic_filter = topic_filter
         self.require = require
+        self.prefer = prefer
         self.current: Optional[Registration] = None
         self.failovers = 0
+        self.closed = False
         broker.watch(self._on_event)
         self._rebind()
 
-    def _rebind(self):
-        cands = self.broker.discover(self.topic_filter, self.require)
+    def _candidates(self) -> List[Registration]:
+        cands = [r for r in self.broker.discover(self.topic_filter, self.require)
+                 if getattr(r.endpoint, "alive", True)]
+        cands.sort(key=lambda r: self.broker.rank_key(r, self.prefer))
+        return cands
+
+    def _rebind(self) -> Optional[Registration]:
+        cands = self._candidates()
         prev = self.current
         self.current = cands[0] if cands else None
         if prev is not None and self.current is not None and prev is not self.current:
             self.failovers += 1
+        return self.current
 
     def _on_event(self, event: str, reg: Registration):
         if event in ("down", "unregister") and reg is self.current:
             self._rebind()
-        elif event == "register" and self.current is None \
-                and topic_matches(self.topic_filter, reg.topic):
-            self._rebind()
+        elif event == "register" and \
+                topic_matches(self.topic_filter, reg.topic):
+            if self.current is None:
+                self._rebind()
+            elif reg is not self.current and \
+                    self.broker.rank_key(reg, self.prefer) < \
+                    self.broker.rank_key(self.current, self.prefer):
+                # a better publisher appeared (or the preferred one came
+                # back): win the binding over exactly once
+                self._rebind()
+
+    def close(self):
+        """Stop receiving broker events (drop the watcher registration)."""
+        if not self.closed:
+            self.broker.unwatch(self._on_event)
+            self.closed = True
 
     @property
     def endpoint(self):

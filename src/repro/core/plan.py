@@ -384,10 +384,17 @@ class PendingQuery:
     request and the (batched) server answer arrives, ``resume(answer)``
     continues the walk — returning ``(outputs, next_state)`` on completion
     or ``self`` again if a later query client pauses the frame once more.
+
+    The request buffer is retained until the answer is in hand, which is
+    what makes serving **fault-tolerant**: ``endpoint`` records where the
+    scheduler actually shipped the request, and if that server dies before
+    answering, the scheduler re-dispatches the very same ``request`` to the
+    next-ranked survivor (``redispatches`` counts the hops) or parks the
+    frame until one registers — see DESIGN.md §3.
     """
 
     __slots__ = ("plan", "params", "inputs", "ctx", "vals", "outputs",
-                 "op_idx", "request")
+                 "op_idx", "request", "endpoint", "redispatches")
 
     def __init__(self, plan: ExecutionPlan, params: dict, inputs: dict,
                  ctx: PipelineContext, vals: List[Any],
@@ -401,6 +408,10 @@ class PendingQuery:
         self.outputs = outputs
         self.op_idx = op_idx
         self.request = request
+        #: endpoint the in-flight request was dispatched to (scheduler-owned)
+        self.endpoint = None
+        #: failover hops this frame survived (scheduler-owned)
+        self.redispatches = 0
 
     @property
     def client(self):
@@ -422,4 +433,5 @@ class PendingQuery:
         if res is None:
             return self.outputs, self.ctx.next_state
         self.op_idx, self.request = res
+        self.endpoint = None  # the next client's request is not yet in flight
         return self

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import enum
 from collections import deque
-from typing import Deque, Optional
+from typing import Deque, Dict, Optional
 
 import jax.numpy as jnp
 
@@ -181,6 +181,13 @@ class MqttSrc(Element):
         self._direct: Optional[Channel] = None
         self._rx: Optional[Channel] = None      # per-subscriber queue
         self._rx_src: Optional[Channel] = None  # publisher it's attached to
+        #: one consumer queue per publisher ever bound (id(pub) -> (pub,
+        #: rx)): re-binding back to a publisher REUSES its queue, so the
+        #: retained history is never replayed twice and frames published
+        #: while bound elsewhere are waiting, not stranded.  The publisher
+        #: ref is stored alongside so its id() can never be recycled onto a
+        #: new channel while the entry lives.
+        self._rx_hist: Dict[int, tuple] = {}
         self._pushback: Deque = deque()         # decoded frames handed back
         self.sync_clock = sync_clock
 
@@ -194,7 +201,10 @@ class MqttSrc(Element):
 
     def _resolve(self) -> Channel:
         """Per-subscriber receive queue (broadcast fan-out), re-attached
-        transparently after failover."""
+        transparently after failover.  Frames already queued from the old
+        publisher are NOT dropped on a rebind: they are decoded into the
+        pushback line (in order, ahead of the new publisher's frames), so a
+        live re-binding loses nothing (DESIGN.md §3)."""
         if self.transport == Transport.DIRECT:
             if self._direct is None:
                 raise BrokerError(f"{self.name}: DIRECT transport needs connect_direct()")
@@ -204,15 +214,33 @@ class MqttSrc(Element):
                 self.binding = self.broker.subscribe(self.topic_filter)
             pub = self.binding.endpoint
         if self._rx_src is not pub:
-            self._rx = pub.attach_consumer()
+            if self._rx is not None:
+                while True:
+                    raw = self._rx.pop()
+                    if raw is None:
+                        break
+                    self._pushback.append(self._decode(raw))
+            prev = self._rx_hist.get(id(pub))
+            self._rx = prev[1] if prev is not None else pub.attach_consumer()
+            self._rx_hist[id(pub)] = (pub, self._rx)
             self._rx_src = pub
         return self._rx
 
+    @property
+    def drops(self) -> int:
+        """Leaky-queue drops across every publisher this subscriber has
+        ever been bound to — rebinds must not reset the loss accounting."""
+        return sum(rx.drops for _, rx in self._rx_hist.values())
+
     def negotiate(self, in_caps):
-        # caps come from the discovered publisher when available
+        # caps come from the discovered publisher when available; reuse the
+        # binding across re-negotiations (runtime re-wires realize the
+        # pipeline twice — a fresh binding each time would leak broker
+        # watchers and double-deliver events)
         if self.broker is not None and self.transport != Transport.DIRECT:
             try:
-                self.binding = self.broker.subscribe(self.topic_filter)
+                if self.binding is None:
+                    self.binding = self.broker.subscribe(self.topic_filter)
                 if self.binding.current is not None:
                     return [self.binding.current.caps]
             except BrokerError:
@@ -225,28 +253,37 @@ class MqttSrc(Element):
         it could run; re-queueing on the raw channel would double-decode."""
         self._pushback.extendleft(reversed(list(bufs)))
 
-    def pull(self) -> Optional[StreamBuffer]:
-        """Host-level receive (runtime scheduler path)."""
-        if self._pushback:
-            return self._pushback.popleft()
-        chan = self._resolve()
-        raw = chan.pop()
-        if raw is None:
-            return None
+    def _decode(self, raw: StreamBuffer) -> StreamBuffer:
         buf = comp.decode(raw, self.codec)
         if self.sync_clock is not None and "base_time_utc" in buf.meta:
             # §4.2.3: rebase the publisher's running-time into ours
             buf = self.sync_clock.rebase(buf)
         return buf
 
+    def pull(self) -> Optional[StreamBuffer]:
+        """Host-level receive (runtime scheduler path)."""
+        if self._pushback:
+            return self._pushback.popleft()
+        chan = self._resolve()
+        if self._pushback:
+            # a rebind just carried the old publisher's queued frames over —
+            # they precede anything the new publisher has for us
+            return self._pushback.popleft()
+        raw = chan.pop()
+        if raw is None:
+            return None
+        return self._decode(raw)
+
     def queued(self) -> int:
         """Frames currently waiting (pushed-back + per-subscriber queue; 0
         when the binding cannot resolve) — the runtime's burst-sizing
-        signal."""
+        signal.  Resolve FIRST: a rebind moves the old publisher's stranded
+        frames into the pushback line, which must count this very tick."""
         try:
-            return len(self._pushback) + len(self._resolve())
+            n = len(self._resolve())
         except BrokerError:
             return len(self._pushback)
+        return len(self._pushback) + n
 
     def pull_burst(self, max_n: int) -> list:
         """Drain up to ``max_n`` decoded frames (host-level burst path)."""

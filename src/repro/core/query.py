@@ -109,17 +109,30 @@ class TensorQueryClient(Element):
         if self.binding is None:
             if self.broker is None:
                 raise BrokerError(f"{self.name}: MQTT-hybrid requires a broker")
+            # capability-aware selection: rank servers by codec support /
+            # throughput / load (DESIGN.md §3) on top of the hard require-*
+            # spec filters
             self.binding = self.broker.subscribe(
-                f"query/{self.operation}", **self.require)
+                f"query/{self.operation}", prefer={"codec": self.codec},
+                **self.require)
         ep = self.binding.endpoint
         if not ep.alive:
-            self.binding._rebind()  # liveness re-check on use
+            # liveness re-check on use: _rebind filters by endpoint.alive,
+            # so this either lands on a live server or raises above
+            self.binding._rebind()
             ep = self.binding.endpoint
         return ep
 
     # -- host-level request/answer (runtime scheduler & tests) ------------------
-    def send_query(self, buf: StreamBuffer):
-        ep = self._endpoint()
+    def send_query(self, buf: StreamBuffer,
+                   ep: Optional[QueryServerEndpoint] = None
+                   ) -> QueryServerEndpoint:
+        """Encode + tag + push one request.  ``ep`` pins the destination (the
+        scheduler resolves once and records where the request actually went,
+        so in-flight failover re-dispatches exactly the orphaned buffers);
+        by default the best-ranked live endpoint is resolved here."""
+        if ep is None:
+            ep = self._endpoint()
         payload, nbytes = comp.encode(buf, self.codec)
         payload = payload.with_(meta={**payload.meta, "client_id": self.client_id,
                                       "codec": self.codec})
@@ -127,13 +140,19 @@ class TensorQueryClient(Element):
             # control message (topic resolution ping) — tiny, broker-borne
             self.broker.relay_msgs += 0  # control msgs are not data-relayed
         ep.requests.push(payload, nbytes)
+        return ep
 
-    def recv_answer(self) -> Optional[StreamBuffer]:
-        ep = self._endpoint()
+    def recv_answer_from(self, ep: QueryServerEndpoint
+                         ) -> Optional[StreamBuffer]:
+        """Pop this client's answer from a specific endpoint — the scheduler
+        reads from the endpoint it dispatched to, never a rebound one."""
         raw = ep.client_channel(self.client_id).pop()
         if raw is None:
             return None
         return comp.decode(raw, self.codec)
+
+    def recv_answer(self) -> Optional[StreamBuffer]:
+        return self.recv_answer_from(self._endpoint())
 
     def apply(self, params, inputs, ctx=None):
         """Synchronous round-trip (compiled-pipeline semantics): the runtime

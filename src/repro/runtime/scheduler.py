@@ -33,8 +33,18 @@ ONE hoisted scan dispatch and the paused frames resume with their routed
 answers.  ``query_batch=0`` restores the legacy synchronous one-round-trip-
 per-frame path inside ``tensor_query_client.apply``.
 
-Statistics (frames, drops, bytes, bursts, batches, per-sink pts) feed the
-Fig. 7 benchmark.
+Failover fabric (DESIGN.md §3): the runtime heartbeats the broker on behalf
+of every live device each tick and advances the broker's lease clock, so a
+silently dead device's registrations expire and fire ``down`` events; query
+requests whose serving endpoint dies in flight are re-dispatched — each
+``PendingQuery`` retains its request buffer and records the endpoint it was
+shipped to — to the next-ranked surviving server, or *parked* until one
+registers (retried at the top of every tick).  Killing a server therefore
+loses zero client requests; with a surviving (same-seeded) server the
+answers are bitwise what the fault-free run produces.
+
+Statistics (frames, drops, bytes, bursts, batches, redispatches, per-sink
+pts) feed the Fig. 7 benchmark.
 """
 from __future__ import annotations
 
@@ -50,7 +60,8 @@ from ..core.element import Element
 from ..core.pipeline import Pipeline
 from ..core.plan import PendingQuery
 from ..core.pubsub import Channel, MqttSink, MqttSrc
-from ..core.query import TensorQueryClient, TensorQueryServerSrc
+from ..core.query import (QueryServerEndpoint, TensorQueryClient,
+                          TensorQueryServerSrc)
 from ..core.sync import PipelineClock, SimClock
 
 TICK_NS = 16_666_667  # 60 Hz
@@ -85,6 +96,10 @@ class Device:
         self.clock = clock or SimClock()
         self.pipeline_clock = PipelineClock(self.clock)
         self.runs: List[_PipeRun] = []
+        #: liveness flag the chaos harness flips: a dead device's pipelines
+        #: stop running and the runtime stops heartbeating its registrations
+        #: (so leases expire and the broker announces the death)
+        self.alive = True
 
     def add_pipeline(self, pipe: Pipeline, rng=None, jit: bool = True) -> _PipeRun:
         pipe.realize()
@@ -105,8 +120,11 @@ class Device:
 class Runtime:
     def __init__(self, broker: Optional[Broker] = None, tick_ns: int = TICK_NS,
                  burst: int = DEFAULT_BURST,
-                 query_batch=DEFAULT_QUERY_BATCH):
+                 query_batch=DEFAULT_QUERY_BATCH,
+                 lease_ticks: Optional[int] = None):
         self.broker = broker or Broker()
+        if lease_ticks is not None:
+            self.broker.default_lease_ticks = lease_ticks
         self.devices: List[Device] = []
         self.tick_ns = tick_ns
         self.burst = max(1, int(burst))
@@ -115,7 +133,17 @@ class Runtime:
         self.batching = BatchingPolicy.of(query_batch)
         #: endpoint_id -> QueryBatcher for every runtime-wired serversrc
         self._batchers: Dict[int, QueryBatcher] = {}
+        #: frames paused at a query client with NO live server to take the
+        #: request — retried at the top of every tick until one registers
+        self._parked: List[Tuple[_PipeRun, PendingQuery]] = []
+        # failover accounting (DESIGN.md §3)
+        self.redispatches = 0
+        self.parked_total = 0
+        self.orphaned_requests = 0
         self.ticks = 0
+        # observe liveness transitions: a down/unregister of a query server
+        # kills its endpoint's data plane and purges orphaned channel state
+        self.broker.watch(self._on_broker_event)
 
     def add_device(self, device: Device) -> Device:
         self.devices.append(device)
@@ -149,6 +177,48 @@ class Runtime:
         run.pipe._realized = False
         run.pipe.realize()
 
+    # -- liveness: heartbeats, leases, death observation --------------------------
+    def _on_broker_event(self, event: str, reg):
+        """Keep the data plane consistent with broker liveness: a downed
+        query server stops serving immediately (its batcher refuses to
+        flush) and its channels are purged — queued requests are orphans the
+        scheduler re-dispatches from its own PendingQuery records, and stale
+        pre-death answers must never satisfy a post-revival frame."""
+        ep = reg.endpoint
+        if not isinstance(ep, QueryServerEndpoint):
+            return
+        if event in ("down", "unregister"):
+            ep.alive = False
+            orphans = len(ep.requests)
+            if orphans:
+                self.orphaned_requests += orphans
+            ep.requests.q.clear()
+            for ch in ep.responses.values():
+                ch.q.clear()
+        elif event == "register":
+            ep.alive = True
+            ep.requests.q.clear()
+            for ch in ep.responses.values():
+                ch.q.clear()
+
+    def _heartbeat_and_lease(self):
+        """Beat on behalf of every live device's registrations, refresh load
+        declarations from the serving queues, then advance the broker's
+        lease clock (expiring whoever went silent)."""
+        for dev in self.devices:
+            if not dev.alive:
+                continue
+            for run in dev.runs:
+                for e in run.pipe.elements.values():
+                    reg = getattr(e, "registration", None)
+                    if reg is None:
+                        continue
+                    self.broker.heartbeat(reg)
+                    if isinstance(e, TensorQueryServerSrc):
+                        # "server workload status": instantaneous backlog
+                        reg.load = float(len(e.endpoint.requests))
+        self.broker.tick()
+
     # -- readiness ---------------------------------------------------------------
     def _ready(self, run: _PipeRun) -> bool:
         for e in run.pipe.elements.values():
@@ -174,29 +244,45 @@ class Runtime:
         outputs, run.state = run.step_fn(run.params, run.state)
         return self._finish_frame(run, outputs)
 
-    # -- deferred query clients (micro-batched offloading) -----------------------
+    # -- deferred query clients (micro-batched offloading + failover) ------------
     def _start_deferred(self, run: _PipeRun
                         ) -> Optional[Tuple[_PipeRun, PendingQuery]]:
         """Begin a frame for a pipeline containing query clients: the plan
         pauses at the first client, whose request is dispatched to the
-        server's batcher.  Returns the paused frame, or None if the frame
-        completed without pausing."""
+        server's batcher.  Returns the paused frame, None if the frame
+        completed without pausing — a frame with no live server to take its
+        request parks until one registers."""
         res = run.pipe.plan.run_deferred(run.params, run.state)
         if isinstance(res, PendingQuery):
-            self._dispatch_query(res)
-            return run, res
+            if self._dispatch_query(res):
+                return run, res
+            self._park(run, res)
+            return None
         outputs, run.state = res
         self._finish_frame(run, outputs)
         return None
 
-    def _dispatch_query(self, pq: PendingQuery):
-        """Ship a paused frame's request: encode + client_id tag + push to
-        the resolved endpoint (failover re-binding included), then flush
-        early if the endpoint's batch is full.  Endpoints the runtime does
-        not manage (manually wired servers) serve inline immediately."""
+    def _dispatch_query(self, pq: PendingQuery) -> bool:
+        """Ship a paused frame's request to the best-ranked live endpoint
+        (encode + client_id tag + push), recording on the PendingQuery where
+        the request actually went — if that server dies before answering,
+        the drain loop re-dispatches from this record.  Flushes early when
+        the endpoint's batch fills.  Endpoints the runtime does not manage
+        (manually wired servers) serve inline immediately.  Returns False
+        when no live server matches (the caller parks the frame)."""
         qc = pq.client
-        qc.send_query(pq.request)
-        ep = qc._endpoint()
+        try:
+            ep = qc._endpoint()
+        except BrokerError:
+            # keep pq.endpoint (the dead server) — a later successful
+            # dispatch of this parked frame is still a failover hop and
+            # must count in `redispatches`
+            return False
+        qc.send_query(pq.request, ep=ep)
+        if pq.endpoint is not None and pq.endpoint is not ep:
+            self.redispatches += 1
+            pq.redispatches += 1
+        pq.endpoint = ep
         batcher = self._batchers.get(ep.endpoint_id)
         if batcher is None:
             runner = ep.spec.get("inline_runner")
@@ -204,25 +290,64 @@ class Runtime:
                 runner()
         elif batcher.full():
             batcher.flush()
+        return True
+
+    def _park(self, run: _PipeRun, pq: PendingQuery):
+        self.parked_total += 1
+        self._parked.append((run, pq))
+
+    def _retry_parked(self) -> List[Tuple[_PipeRun, PendingQuery]]:
+        """Give every parked frame another shot at dispatch (a server may
+        have registered or revived since last tick); still-unplaceable
+        frames stay parked."""
+        parked, self._parked = self._parked, []
+        pending = []
+        for run, pq in parked:
+            if self._dispatch_query(pq):
+                pending.append((run, pq))
+            else:
+                self._park(run, pq)
+        return pending
 
     def _drain_queries(self, pending: List[Tuple[_PipeRun, PendingQuery]]):
         """Tick-deadline flush: serve every gathered request, resume the
         paused frames with their answers, and repeat for pipelines that
-        pause again at a later query client."""
+        pause again at a later query client.
+
+        In-flight failover lives here: a frame whose recorded endpoint died
+        before answering re-dispatches its retained request buffer to the
+        next-ranked survivor (served on the next flush round) or parks until
+        a server registers.  A missing answer from a LIVE endpoint is still
+        a hard error — that is a serving bug, not a device death.
+
+        Termination: every round each frame is answered, parked, raised on,
+        or re-dispatched to a live endpoint different from its dead one —
+        and a chain of re-dispatches is bounded by the number of live
+        servers (nothing revives mid-drain; revivals are tick events)."""
+        pending = list(pending)
         while pending:
             for batcher in self._batchers.values():
                 batcher.flush()
-            nxt = []
+            nxt: List[Tuple[_PipeRun, PendingQuery]] = []
             for run, pq in pending:
-                answer = pq.client.recv_answer()
+                qc = pq.client
+                ep = pq.endpoint
+                answer = qc.recv_answer_from(ep) if ep is not None else None
                 if answer is None:
-                    raise BrokerError(
-                        f"{pq.client.name}: no answer from "
-                        f"{pq.client.operation!r}")
+                    if ep is not None and ep.alive:
+                        raise BrokerError(
+                            f"{qc.name}: no answer from {qc.operation!r}")
+                    if self._dispatch_query(pq):
+                        nxt.append((run, pq))
+                    else:
+                        self._park(run, pq)
+                    continue
                 res = pq.resume(answer)
                 if isinstance(res, PendingQuery):
-                    self._dispatch_query(res)
-                    nxt.append((run, res))
+                    if self._dispatch_query(res):
+                        nxt.append((run, res))
+                    else:
+                        self._park(run, res)
                 else:
                     outputs, run.state = res
                     self._finish_frame(run, outputs)
@@ -297,12 +422,22 @@ class Runtime:
         self._ntp_ref.advance(self.tick_ns)
         for dev in self.devices:
             dev.clock.advance(self.tick_ns)
-        pending: List[Tuple[_PipeRun, PendingQuery]] = []
+        self._heartbeat_and_lease()
+        # frames parked from earlier ticks go first (a server may be back);
+        # their pipelines must not start a second concurrent frame
+        pending = self._retry_parked()
+        busy = {id(run) for run, _ in pending} | \
+               {id(run) for run, _ in self._parked}
         for dev in self.devices:
+            if not dev.alive:
+                continue  # a dead device runs nothing (chaos harness)
             for run in dev.runs:
                 if any(isinstance(e, TensorQueryServerSrc)
                        for e in run.pipe.elements.values()):
                     continue  # servers run batched/inline, driven by clients
+                if id(run) in busy:
+                    run.skipped += 1  # frame still in flight from a past tick
+                    continue
                 if not self._ready(run):
                     run.skipped += 1
                     continue
@@ -329,11 +464,23 @@ class Runtime:
         for dev in self.devices:
             for i, run in enumerate(dev.runs):
                 key = f"{dev.name}/p{i}"
+                drops = 0
+                for e in run.pipe.elements.values():
+                    if isinstance(e, MqttSrc):
+                        drops += e.drops   # across every publisher bound
+                    elif isinstance(e, MqttSink):
+                        drops += e.channel.drops
                 out[key] = {"frames": run.frames, "skipped": run.skipped,
                             "bursts": run.bursts,
-                            "burst_frames": run.burst_frames}
+                            "burst_frames": run.burst_frames,
+                            "drops": drops}
         out["broker"] = {"relay_msgs": self.broker.relay_msgs,
-                         "relay_bytes": self.broker.relay_bytes}
+                         "relay_bytes": self.broker.relay_bytes,
+                         "lease_expiries": self.broker.expiries}
+        out["failover"] = {"redispatches": self.redispatches,
+                           "parked_total": self.parked_total,
+                           "parked_now": len(self._parked),
+                           "orphaned_requests": self.orphaned_requests}
         agg = {"flushes": 0, "batches": 0, "batched_frames": 0,
                "sequential_frames": 0}
         for b in self._batchers.values():

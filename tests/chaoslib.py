@@ -1,0 +1,176 @@
+"""Deterministic chaos harness for among-device failover tests.
+
+A :class:`Chaos` wraps a :class:`~repro.runtime.Runtime` and executes a
+*scripted fault schedule*: faults are keyed to scheduler ticks, fire
+immediately BEFORE the tick they are scheduled at executes, and mutate only
+simulation state (device liveness flags, broker registrations, channel
+wiring) — no threads, no wall-clock, no randomness, so every run of a chaos
+scenario is bit-for-bit reproducible and can be compared against its
+fault-free twin.
+
+Fault vocabulary:
+
+* ``kill_server(tick, device, ssrc, crash=True)`` — the serving device dies.
+  ``crash=True`` is an announced death (``broker.mark_down`` fires the
+  ``down`` event at once); ``crash=False`` is a *silent* death — the device
+  merely stops heartbeating and serving, and the broker only learns of it
+  when the registration's lease expires (``Runtime(lease_ticks=...)``).
+* ``kill_server_mid_batch(tick, device, ssrc, after_n=1)`` — arms a tripwire
+  on the server's request channel: the device dies the instant its
+  ``after_n``-th request of that tick lands, i.e. mid-gather with earlier
+  requests already stranded on the dead endpoint.  This is the scenario the
+  in-flight failover exists for.
+* ``revive_server(tick, device, ssrc)`` — the device returns and re-registers
+  under its original registration (same reg_id, so a preferred server wins
+  its bindings back).
+* ``kill_device(tick, device)`` / ``revive_device(tick, device)`` — generic
+  liveness flips (publishers, clients); announced via ``mark_down`` on every
+  registration the device holds.
+* ``sever(tick, pub_channel, rx)`` / ``restore(tick, pub_channel, rx)`` —
+  cut/mend one subscriber's data-plane link: frames published while severed
+  never reach that consumer (the broker is oblivious — control and data
+  planes fail independently).
+* ``at(tick, fn, label)`` — escape hatch for bespoke faults.
+
+All mutations funnel through ``_kill``/``_revive`` so tests, benchmarks
+(``benchmarks/bench_failover.py``), and examples
+(``examples/failover_offloading.py``) exercise exactly the code paths the
+runtime's failover fabric watches — one copy of the fault semantics.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class Chaos:
+    def __init__(self, runtime):
+        self.rt = runtime
+        self._schedule: Dict[int, List[Tuple[Callable[[], None], str]]] = {}
+        #: (tick, label) of every fault that fired, in order
+        self.log: List[Tuple[int, str]] = []
+
+    # -- schedule construction -------------------------------------------------
+    def at(self, tick: int, fn: Callable[[], None],
+           label: Optional[str] = "custom") -> "Chaos":
+        """``label=None`` schedules silently (internal plumbing like arming
+        a tripwire — the real fault logs itself when it fires)."""
+        self._schedule.setdefault(int(tick), []).append((fn, label))
+        return self
+
+    def kill_server(self, tick: int, device, ssrc, crash: bool = True
+                    ) -> "Chaos":
+        return self.at(tick, lambda: self._kill(device, ssrc, crash),
+                       f"kill {device.name} ({'crash' if crash else 'silent'})")
+
+    def kill_server_mid_batch(self, tick: int, device, ssrc, after_n: int = 1
+                              ) -> "Chaos":
+        """The fault is logged when the kill actually FIRES (the
+        ``after_n``-th request of that tick lands), not when the tripwire
+        is armed; if the tick ends with fewer sends, the tripwire disarms
+        and a DISARMED entry is logged instead — a vacuous chaos run can
+        never masquerade as a survived fault."""
+        def arm():
+            chan = ssrc.endpoint.requests
+            orig_push = chan.push
+            seen = [0]
+
+            def tripwire(buf, nbytes=None):
+                ok = orig_push(buf, nbytes)
+                seen[0] += 1
+                if seen[0] == after_n:
+                    chan.push = orig_push  # disarm before the kill purges
+                    self._kill(device, ssrc, crash=True)
+                    self.log.append(
+                        (self.rt.ticks,
+                         f"kill {device.name} mid-batch (request {after_n})"))
+                return ok
+
+            def disarm():
+                if chan.push is tripwire:
+                    chan.push = orig_push
+                    self.log.append(
+                        (self.rt.ticks + 1,
+                         f"mid-batch kill of {device.name} DISARMED "
+                         f"(fewer than {after_n} sends on tick {tick})"))
+
+            chan.push = tripwire
+            self.at(tick + 1, disarm, label=None)
+        return self.at(tick, arm, label=None)
+
+    def revive_server(self, tick: int, device, ssrc) -> "Chaos":
+        return self.at(tick, lambda: self._revive(device, ssrc),
+                       f"revive {device.name}")
+
+    def kill_device(self, tick: int, device) -> "Chaos":
+        def fn():
+            device.alive = False
+            for reg in self._device_regs(device):
+                self.rt.broker.mark_down(reg)
+        return self.at(tick, fn, f"kill {device.name}")
+
+    def revive_device(self, tick: int, device) -> "Chaos":
+        def fn():
+            device.alive = True
+            for reg in self._device_regs(device):
+                self.rt.broker.revive(reg)
+        return self.at(tick, fn, f"revive {device.name}")
+
+    def sever(self, tick: int, pub_channel, rx) -> "Chaos":
+        def fn():
+            if rx in pub_channel.consumers:
+                pub_channel.consumers.remove(rx)
+        return self.at(tick, fn, "sever channel")
+
+    def restore(self, tick: int, pub_channel, rx) -> "Chaos":
+        def fn():
+            if rx not in pub_channel.consumers:
+                pub_channel.consumers.append(rx)
+        return self.at(tick, fn, "restore channel")
+
+    def expire_lease(self, tick: int, device, reg) -> "Chaos":
+        """Force the registration's lease to lapse on the very next broker
+        tick — models a stalled (not crashed) device.  The device must also
+        stop heartbeating (``alive = False``): the runtime beats on behalf
+        of live devices at the top of every tick, which would refresh the
+        backdated lease before the expiry check ever saw it.  Requires a
+        leased registration (``lease_ticks`` set)."""
+        def fn():
+            device.alive = False
+            reg.last_beat = -10**9
+        return self.at(tick, fn, f"expire lease of {reg.topic}")
+
+    # -- fault primitives --------------------------------------------------------
+    def _kill(self, device, ssrc, crash: bool):
+        device.alive = False
+        ssrc.endpoint.alive = False  # stops serving NOW either way
+        if crash and ssrc.registration is not None:
+            self.rt.broker.mark_down(ssrc.registration)
+        # silent death: the broker finds out at lease expiry
+
+    def _revive(self, device, ssrc):
+        device.alive = True
+        ssrc.endpoint.alive = True
+        if ssrc.registration is not None:
+            self.rt.broker.revive(ssrc.registration)
+
+    def _device_regs(self, device):
+        for run in device.runs:
+            for e in run.pipe.elements.values():
+                reg = getattr(e, "registration", None)
+                if reg is not None:
+                    yield reg
+
+    # -- execution ---------------------------------------------------------------
+    def run(self, n_ticks: int):
+        """Drive the runtime ``n_ticks`` ticks, firing each scheduled fault
+        immediately before its tick executes (tick numbers are 1-based and
+        continue across successive ``run`` calls, matching
+        ``Runtime.ticks``)."""
+        for _ in range(n_ticks):
+            t = self.rt.ticks + 1
+            for fn, label in self._schedule.pop(t, ()):
+                fn()
+                if label is not None:
+                    self.log.append((t, label))
+            self.rt.tick()
+        return self.rt

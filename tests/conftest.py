@@ -13,3 +13,13 @@ try:
     import hypothesis  # noqa: F401
 except ImportError:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def chaos():
+    """Factory for the deterministic chaos harness (tests/chaoslib.py):
+    ``harness = chaos(rt)`` then schedule faults and ``harness.run(n)``."""
+    from chaoslib import Chaos
+    return Chaos

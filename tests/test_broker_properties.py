@@ -1,0 +1,127 @@
+"""Property tests for broker discovery semantics (DESIGN.md §3).
+
+``topic_matches`` and ``Broker.discover`` are the control-plane primitives
+every binding decision rests on; these pin their algebra — wildcard
+matching, ``require=`` spec filters, down-registration exclusion, ordering —
+against brute-force oracles over generated topic/registration sets.  Runs
+under real hypothesis when installed, else the deterministic vendored shim
+(tests/_vendor).
+"""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Broker, Caps, topic_matches
+
+# Small alphabet so generated topics collide often — collisions are where
+# wildcard/filter bugs live.
+SEG = st.sampled_from(["a", "b", "cz", "09"])
+SEGS = st.lists(SEG, min_size=1, max_size=4)
+
+
+def brute_match(pattern: str, topic: str) -> bool:
+    """Reference MQTT matcher, written the slow recursive way."""
+    def rec(pp, tt):
+        if not pp:
+            return not tt
+        if pp[0] == "#":
+            return True
+        if not tt:
+            return False
+        if pp[0] != "+" and pp[0] != tt[0]:
+            return False
+        return rec(pp[1:], tt[1:])
+    return rec(pattern.strip("/").split("/"), topic.strip("/").split("/"))
+
+
+class TestTopicMatchingProperties:
+    @given(SEGS, SEGS)
+    @settings(max_examples=80, deadline=None)
+    def test_matches_brute_force_oracle(self, psegs, tsegs):
+        pattern, topic = "/".join(psegs), "/".join(tsegs)
+        assert topic_matches(pattern, topic) == brute_match(pattern, topic)
+
+    @given(SEGS)
+    @settings(max_examples=40, deadline=None)
+    def test_self_match_and_universal_hash(self, segs):
+        topic = "/".join(segs)
+        assert topic_matches(topic, topic)
+        assert topic_matches("#", topic)
+
+    @given(SEGS, st.integers(min_value=0, max_value=3))
+    @settings(max_examples=60, deadline=None)
+    def test_plus_substitution_matches_any_single_level(self, segs, i):
+        i = min(i, len(segs) - 1)
+        pattern = "/".join("+" if j == i else s for j, s in enumerate(segs))
+        assert topic_matches(pattern, "/".join(segs))
+        # '+' never spans levels: extending the topic breaks the match
+        assert not topic_matches(pattern, "/".join(segs + ["x"]))
+
+    @given(SEGS, SEGS)
+    @settings(max_examples=40, deadline=None)
+    def test_hash_suffix_matches_all_extensions(self, base, ext):
+        pattern = "/".join(base + ["#"])
+        assert topic_matches(pattern, "/".join(base + ext))
+
+    @given(SEGS)
+    @settings(max_examples=40, deadline=None)
+    def test_pattern_longer_than_topic_never_matches(self, segs):
+        # (unless the extra level is '#', which matches the empty remainder
+        # only at the position it appears)
+        pattern = "/".join(segs + ["x"])
+        assert not topic_matches(pattern, "/".join(segs))
+
+
+def _fill(n_regs, version_of, down_mask):
+    """Build a broker with n registrations on colliding topics; returns
+    (broker, regs, expected-alive-list)."""
+    b = Broker()
+    topics = ["svc/a", "svc/b", "svc/a/b", "other/x"]
+    regs = []
+    for i in range(n_regs):
+        reg = b.register(topics[i % len(topics)], Caps.ANY, f"ep{i}",
+                         version=version_of(i))
+        regs.append(reg)
+    for i, reg in enumerate(regs):
+        if down_mask(i):
+            b.mark_down(reg)
+    return b, regs
+
+
+class TestDiscoverProperties:
+    @given(st.integers(min_value=0, max_value=8),
+           st.integers(min_value=1, max_value=3),
+           st.integers(min_value=0, max_value=7))
+    @settings(max_examples=60, deadline=None)
+    def test_discover_equals_brute_force_filter(self, n, vmod, downbits):
+        b, regs = _fill(n, lambda i: i % vmod, lambda i: bool(downbits >> (i % 3) & 1))
+        for pattern in ("svc/#", "svc/+", "#", "svc/a", "nope/+"):
+            got = b.discover(pattern)
+            want = [r for r in regs
+                    if r.alive and brute_match(pattern, r.topic)]
+            assert got == sorted(want, key=lambda r: r.reg_id)
+
+    @given(st.integers(min_value=1, max_value=8),
+           st.integers(min_value=1, max_value=3))
+    @settings(max_examples=40, deadline=None)
+    def test_require_is_exact_spec_equality(self, n, vmod):
+        b, regs = _fill(n, lambda i: i % vmod, lambda i: False)
+        for v in range(vmod + 1):       # vmod: a version nobody declared
+            got = b.discover("#", require={"version": v})
+            assert got == [r for r in regs if r.specs["version"] == v]
+        # a key nobody declares matches nothing (missing != None-equal)
+        assert b.discover("#", require={"model": "x"}) == []
+
+    @given(st.integers(min_value=1, max_value=8))
+    @settings(max_examples=30, deadline=None)
+    def test_down_registrations_are_excluded_until_revived(self, n):
+        b, regs = _fill(n, lambda i: 0, lambda i: True)   # all down
+        assert b.discover("#") == []
+        for reg in regs:
+            b.revive(reg)
+        assert b.discover("#") == regs
+
+    @given(st.integers(min_value=2, max_value=8))
+    @settings(max_examples=30, deadline=None)
+    def test_discover_order_is_registration_order(self, n):
+        b, regs = _fill(n, lambda i: 0, lambda i: False)
+        got = b.discover("#")
+        assert [r.reg_id for r in got] == sorted(r.reg_id for r in got)

@@ -1,0 +1,120 @@
+"""200-tick mixed-workload soak (DESIGN.md §3) — `pytest -m soak`.
+
+One deterministic long run combining pub/sub streaming, batched query
+serving, and a scripted server death + revival, asserting the global
+invariants the per-feature tests can't see:
+
+* every client request is eventually answered — no frame is lost to the
+  outage, parked frames all resume;
+* pub/sub frame loss is exactly what the leaky-channel drop accounting in
+  ``Runtime.stats`` declares — nothing vanishes unaccounted;
+* the executable cache does not grow across death/rebind/revival — a
+  revived topology reuses its fingerprint, it never retraces.
+
+Excluded from tier-1 by the ``soak`` marker (pytest.ini); the chaos
+schedule is tick-scripted, so the run is bit-reproducible.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import TensorSpec, parse_launch
+from repro.core.elements import register_model
+from repro.core.plan import executable_cache_info
+from repro.runtime import Device, Runtime
+
+TICKS = 200
+KILL_AT, REVIVE_AT = 60, 90
+N_PLAIN_CLIENTS = 3
+
+pytestmark = pytest.mark.soak
+
+
+@pytest.fixture(scope="module", autouse=True)
+def models():
+    def init(rng):
+        return {"w": jax.random.normal(rng, (12, 4)) * 0.3}
+
+    def apply(p, x):
+        return x.astype(jnp.float32).reshape(1, -1) @ p["w"]
+
+    register_model("soaksvc", init, apply,
+                   out_specs=(TensorSpec((1, 4), "float32"),))
+
+
+def test_mixed_workload_soak(chaos):
+    rt = Runtime(query_batch=4, lease_ticks=3)
+
+    # consumer FIRST so its rx attaches before any frame is published —
+    # every published frame is then either consumed, dropped (accounted),
+    # or still queued: the conservation law asserted below
+    viewer = Device("viewer")
+    vp = parse_launch(
+        "mqttsrc sub-topic=cam/live name=vsrc ! "
+        "tensor_query_client operation=svc name=vqc ! appsink name=vres")
+    viewer_run = viewer.add_pipeline(vp, jit=False)
+    rt.add_device(viewer)
+
+    cam = Device("cam")
+    cp = parse_launch(
+        "testsrc width=2 height=2 ! tensor_converter ! "
+        "mqttsink pub-topic=cam/live name=csnk")
+    cam_run = cam.add_pipeline(cp, jit=False)
+    rt.add_device(cam)
+
+    hub = Device("hub")
+    sp = parse_launch(
+        "tensor_query_serversrc operation=svc name=ssrc ! "
+        "tensor_filter model=soaksvc ! tensor_query_serversink name=ssink")
+    sp.elements["ssink"].pair_with(sp.elements["ssrc"])
+    hub_run = hub.add_pipeline(sp, jit=False)
+    rt.add_device(hub)
+
+    client_runs = []
+    for i in range(N_PLAIN_CLIENTS):
+        dev = Device(f"tv{i}")
+        pc = parse_launch(
+            "testsrc width=2 height=2 ! tensor_converter ! "
+            "tensor_query_client operation=svc name=qc ! appsink name=res")
+        client_runs.append(dev.add_pipeline(pc, jit=False))
+        rt.add_device(dev)
+
+    harness = chaos(rt)
+    harness.kill_server(KILL_AT, hub, sp.elements["ssrc"], crash=True)
+    harness.revive_server(REVIVE_AT, hub, sp.elements["ssrc"])
+
+    harness.run(50)
+    cache_mid = executable_cache_info()
+    harness.run(TICKS - 50)
+
+    stats = rt.stats()
+
+    # -- every client request eventually answered --------------------------------
+    assert stats["failover"]["parked_now"] == 0
+    outage = REVIVE_AT - KILL_AT
+    for run in client_runs + [viewer_run]:
+        assert run.frames + run.skipped == TICKS
+        assert len(run.sink_log[next(iter(run.sink_log))]) == run.frames
+        # the outage stalls (parks/skips) frames but loses none: everything
+        # outside the outage window was answered on cadence
+        assert run.frames >= TICKS - outage - 2
+    assert hub_run.frames == sum(r.frames for r in client_runs + [viewer_run])
+    assert stats["failover"]["parked_total"] > 0        # the outage did park
+
+    # -- pub/sub conservation: published == consumed + dropped + queued ----------
+    snk = cp.elements["csnk"].channel
+    vsrc = vp.elements["vsrc"]
+    published = snk.msgs_sent
+    assert published == cam_run.frames
+    still_queued = len(vsrc._rx) + len(vsrc._pushback)
+    consumed = viewer_run.frames
+    declared_drops = stats["viewer/p0"]["drops"]
+    assert declared_drops == vsrc._rx.drops
+    assert published == consumed + declared_drops + still_queued
+    # the outage overflowed the viewer's bounded rx queue — drops are real
+    assert declared_drops > 0
+
+    # -- executable cache stays bounded across death/rebind/revival --------------
+    cache_end = executable_cache_info()
+    assert cache_end["fingerprints"] <= cache_mid["fingerprints"]
+    assert cache_end["executables"] <= cache_mid["executables"]
