@@ -1,5 +1,5 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV on stdout AND dumps every row as machine-readable JSON (BENCH_PR3.json
+# CSV on stdout AND dumps every row as machine-readable JSON (BENCH_PR4.json
 # at the repo root) so the perf trajectory is tracked across PRs.
 #
 #   Fig. 7 pub/sub  -> bench_pubsub         (RELAY vs HYBRID vs DIRECT, 3 bands)
@@ -11,19 +11,21 @@
 #   engine          -> bench_step_overhead  (compiled plan + burst vs seed loop)
 #   serving         -> bench_query_batching (micro-batched offloading, >=2x gate)
 #   failover        -> bench_failover       (ticks-to-recovery <=2 gate, heartbeat cost)
+#   mesh serving    -> bench_sharded_serving (calibrated mesh placement, >=2x gate)
 import json
 import os
 import platform
 import sys
 import traceback
 
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR3.json")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR4.json")
 
 
 def main() -> None:
     from . import (bench_compression, bench_failover, bench_kernels,
                    bench_pubsub, bench_query, bench_query_batching,
-                   bench_roofline, bench_step_overhead, bench_sync)
+                   bench_roofline, bench_sharded_serving, bench_step_overhead,
+                   bench_sync)
     from .common import ROWS, reset_rows
 
     reset_rows()
@@ -33,6 +35,7 @@ def main() -> None:
         ("query", bench_query.run),
         ("query_failover", bench_query.run_failover),
         ("query_batching", bench_query_batching.run),
+        ("sharded_serving", bench_sharded_serving.run),
         ("failover", bench_failover.run),
         ("sync", bench_sync.run),
         ("compression", bench_compression.run),
@@ -52,7 +55,7 @@ def main() -> None:
     import jax
     payload = {
         "schema": 1,
-        "pr": 3,
+        "pr": 4,
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "suites_failed": failed,

@@ -1,0 +1,112 @@
+"""Mesh-sharded among-device offloading: one hub, many screens, placement
+decided by cost — and survived by failover.
+
+Eight TVs offload a classifier to a hub that owns a jax mesh
+(``Runtime(mesh="auto")`` -> a host mesh over every local device).  Each
+tick the hub gathers the eight requests into ONE batch; the batcher holds
+both the single-device executable and the mesh-sharded one (a frame slice
+per device along the mesh's data axes) and, in the default ``auto`` mode,
+probes both once and serves through the faster — the NNStreamer-style
+transparency promise: placement never changes an answer, only its latency.
+Phase three kills the hub mid-batch (chaos harness): orphaned requests
+re-dispatch to the backup exactly as in the single-device fabric — the
+mesh places compute, the failover plumbing is untouched.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/sharded_offloading.py
+"""
+import os
+import sys
+
+# forge an 8-way host mesh BEFORE jax initializes, so the demo has real
+# data-axis placement even on a laptop (skip if the user already set flags)
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+
+from repro.core import TensorSpec, parse_launch               # noqa: E402
+from repro.core.elements import register_model                # noqa: E402
+from repro.launch.mesh import data_axis_size, make_host_mesh  # noqa: E402
+from repro.runtime import Device, Runtime                     # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+from chaoslib import Chaos  # noqa: E402
+
+N_TVS = 8
+TICKS_A, TICKS_B = 5, 5      # healthy (sharded-capable) / degraded
+
+
+def init(rng):
+    return {"w": jax.random.normal(rng, (48 * 48 * 3, 8)) * 0.01}
+
+
+def apply(p, x):
+    logits = x.astype(jnp.float32).reshape(1, -1) @ p["w"]
+    return jax.nn.sigmoid(logits[:, :4]).reshape(1, 4)
+
+
+register_model("cls_tiny_sh", init, apply,
+               out_specs=(TensorSpec((1, 4), "float32"),))
+
+
+def hub(rt, name, throughput):
+    dev = Device(name)
+    srv = parse_launch(
+        f"tensor_query_serversrc operation=classify name=ssrc "
+        f"throughput={throughput} ! "
+        f"tensor_filter model=cls_tiny_sh ! tensor_query_serversink name=ssink")
+    srv.elements["ssink"].pair_with(srv.elements["ssrc"])
+    run = dev.add_pipeline(srv, jit=False)
+    rt.add_device(dev)
+    return dev, run, srv.elements["ssrc"]
+
+
+mesh = make_host_mesh()
+print(f"host mesh: {mesh} ({data_axis_size(mesh)}-way data axis, "
+      f"{len(jax.devices())} devices)")
+
+rt = Runtime(query_batch=N_TVS, mesh=mesh)   # shard_mode="auto" is default
+primary_dev, primary_run, primary_ssrc = hub(rt, "edge-server", throughput=8)
+backup_dev, backup_run, backup_ssrc = hub(rt, "old-phone", throughput=2)
+
+tv_runs = []
+for i in range(N_TVS):
+    dev = Device(f"tv{i}")
+    pc = parse_launch(
+        "testsrc width=48 height=48 ! tensor_converter ! "
+        "tensor_query_client operation=classify name=qc ! appsink name=out")
+    tv_runs.append(dev.add_pipeline(pc, jit=False))
+    rt.add_device(dev)
+
+# -- phase A: healthy fleet — one batch per tick, placement calibrated -------
+rt.run(TICKS_A)
+batcher = rt._batchers[primary_ssrc.endpoint.endpoint_id]
+qb = rt.stats()["query_batching"]
+print(f"\nphase A ({TICKS_A} ticks, {N_TVS} TVs):")
+print(f"  primary served {primary_run.frames} frames in "
+      f"{primary_run.bursts} batched dispatches")
+print(f"  calibrated placement for batch {N_TVS}: "
+      f"{batcher.placements.get(N_TVS, 'single')} "
+      f'(auto-probed; force with Runtime(shard_mode="always"/"never"))')
+print(f"  sharded frames so far: {qb['sharded_frames']}")
+
+# -- phase B: the serving hub dies mid-batch; orphans re-dispatch ------------
+harness = Chaos(rt)
+harness.kill_server_mid_batch(rt.ticks + 1, primary_dev, primary_ssrc,
+                              after_n=N_TVS // 2)
+harness.run(TICKS_B)
+fo = rt.stats()["failover"]
+print(f"\nphase B (hub killed mid-batch at tick {TICKS_A + 1}):")
+for t, label in harness.log:
+    print(f"  tick {t}: {label}")
+print(f"  redispatches={fo['redispatches']} parked_now={fo['parked_now']} "
+      f"orphaned={fo['orphaned_requests']}")
+print(f"  backup served {backup_run.frames} frames")
+
+total = TICKS_A + TICKS_B
+assert all(r.frames == total for r in tv_runs), "a TV lost a frame!"
+print(f"\nevery TV got {total}/{total} answers — zero loss under the mesh.")

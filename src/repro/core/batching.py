@@ -32,6 +32,24 @@ Fallback rules (automatic, per flush):
   same-structure groups; a group of one is still served through the
   compiled hoisted path, so every answer leaves through the same execution
   mode and batch composition never changes numerics.
+
+Mesh sharding (DESIGN.md §4): when the runtime is built over a jax mesh
+(``Runtime(mesh=...)``), the batcher also holds the mesh-sharded executable
+— groups whose frame count tiles the mesh's data axes can serve with one
+frame slice per device (``ExecutionPlan.shardable_batch``); every other
+group keeps the single-device scan, so the answers are bitwise identical
+either way.
+
+Placement is a COST decision, not a faith decision: the dispatch-vs-silicon
+gap (arXiv 2210.10514) cuts both ways — on real multi-chip meshes sharding
+multiplies serving throughput, but on a host-forged mesh (8 "devices" on 2
+cores) the SPMD dispatch overhead exceeds the whole single-device serve.
+``shard_mode="auto"`` (default) therefore probes both executables once per
+batch size at first use — a handful of extra dispatches, both bitwise
+correct — and picks the faster for that size thereafter; ``"always"`` /
+``"never"`` force the choice (tests force ``"always"`` to pin the sharded
+path's semantics regardless of host speed).  Placement stays transparent to
+elements and clients, NNStreamer-style: only latency changes.
 """
 from __future__ import annotations
 
@@ -93,16 +111,34 @@ class QueryBatcher:
 
     def __init__(self, endpoint: QueryServerEndpoint, run: Any,
                  policy: BatchingPolicy,
-                 inline_step: Optional[Callable[[], Any]] = None):
+                 inline_step: Optional[Callable[[], Any]] = None,
+                 mesh=None, shard_mode: str = "auto"):
+        if shard_mode not in ("auto", "always", "never"):
+            raise ValueError(f"shard_mode {shard_mode!r} not in "
+                             f"('auto', 'always', 'never')")
         self.endpoint = endpoint
         self.run = run
         self.policy = policy
         self.inline_step = inline_step
+        #: jax Mesh to lay batches out on (None = single-device serving)
+        self.mesh = mesh
+        #: sharded-executable placement policy (module docstring)
+        self.shard_mode = shard_mode
+        #: batch size -> "sharded" | "single", decided by probe in auto mode
+        self.placements: Dict[int, str] = {}
+        #: mesh-placed (replicated) copy of the server params, built lazily
+        #: at first sharded use: re-broadcasting params at every flush costs
+        #: more than the serve itself, while handing mesh-replicated arrays
+        #: to the single-device executable costs a gather per call — so each
+        #: executable gets params in ITS OWN layout
+        self._mesh_params = None
         # stats for Runtime.stats() / the batching benchmark
         self.flushes = 0
         self.batches = 0
         self.batched_frames = 0
         self.sequential_frames = 0
+        self.sharded_batches = 0
+        self.sharded_frames = 0
 
     # -- public API ------------------------------------------------------------
     def pending(self) -> int:
@@ -133,7 +169,10 @@ class QueryBatcher:
             return 0
         served = 0
         plan = self.run.pipe.plan
-        batchable = self.policy.max_batch > 1 and plan.query_batchable
+        # max_batch == 1 is still batching-enabled: a group of one serves
+        # through the compiled hoisted path (the module contract above), so
+        # turning the batch size down never silently changes execution mode
+        batchable = self.policy.enabled and plan.query_batchable
         while self.pending():
             if not batchable:
                 n = self.pending()
@@ -152,10 +191,13 @@ class QueryBatcher:
     # -- gather & grouping -----------------------------------------------------
     def _decode(self, raw: StreamBuffer) -> Tuple[StreamBuffer, Dict]:
         """Host-level decode + routing-meta hoist: returns the clean frame
-        (payload meta only) and the routing dict to re-attach on the answer."""
+        (payload meta only) and the routing dict to re-attach on the answer.
+        Routing is read off the WIRE buffer — decode strips the wire-form
+        ``codec`` claim from the decoded frame, but the client's codec
+        preference must still route its answer's re-encode."""
         codec = raw.meta.get("codec", "none")
         buf = comp.decode(raw, codec)
-        routing = {k: buf.meta[k] for k in _ROUTING_KEYS if k in buf.meta}
+        routing = {k: raw.meta[k] for k in _ROUTING_KEYS if k in raw.meta}
         clean = buf.with_(meta={k: v for k, v in buf.meta.items()
                                 if k not in _ROUTING_KEYS})
         return clean, routing
@@ -192,23 +234,82 @@ class QueryBatcher:
         self.inline_step()
         self.sequential_frames += 1
 
+    def _pick_placement(self, n: int, frames_in: Tuple) -> bool:
+        """Whether THIS group serves through the mesh-sharded executable.
+        Groups the mesh cannot take (non-tiling size, stateful plan) always
+        serve single-device; shardable groups follow ``shard_mode`` —
+        forced, or probed once per batch size in auto mode."""
+        plan = self.run.pipe.plan
+        if self.mesh is None or \
+                not plan.shardable_batch(n, self.run.state, self.mesh):
+            return False
+        if self.shard_mode != "auto":
+            return self.shard_mode == "always"
+        dec = self.placements.get(n)
+        if dec is None:
+            dec = self._calibrate(n, frames_in)
+        return dec == "sharded"
+
+    def _mesh_placed_params(self):
+        """Replicated-on-the-mesh params (the launch/shardings.py spec for
+        serving params), placed once and reused by every sharded serve."""
+        if self._mesh_params is None:
+            from ..launch.shardings import replicated
+            self._mesh_params = jax.device_put(
+                self.run.params, replicated(self.mesh, self.run.params))
+        return self._mesh_params
+
+    def _calibrate(self, n: int, frames_in: Tuple) -> str:
+        """Probe both executables on this very batch and keep the faster
+        for this size.  Both are bitwise-correct and the plan is stateless
+        (shardable), so the probe serves are just discarded warm-ups —
+        placement costs a handful of dispatches, once."""
+        import time as _time
+        run = self.run
+        best = {}
+        for label, mesh, params in (
+                ("sharded", self.mesh, self._mesh_placed_params()),
+                ("single", None, run.params)):
+            fn = run.pipe.plan.compiled_serve_batch(mesh=mesh)
+            fn(params, run.state, frames_in)       # compile + warm, untimed
+            ts = []
+            for _ in range(3):
+                t0 = _time.perf_counter()
+                # block: the single-device jit returns lazy arrays while the
+                # sharded wrapper device_gets internally — timing dispatch
+                # only would structurally bias the probe toward "single"
+                jax.block_until_ready(fn(params, run.state, frames_in))
+                ts.append(_time.perf_counter() - t0)
+            best[label] = min(ts)
+        dec = "sharded" if best["sharded"] <= best["single"] else "single"
+        self.placements[n] = dec
+        return dec
+
     def _serve_batched(self, group: List[Tuple[StreamBuffer, Dict]]):
         """One compiled dispatch over the whole group: stack, hoisted scan
         (serversrc frames injected, serversink answers captured), and
         per-frame split all happen INSIDE the jitted serve_batch, so the
         host pays a single dispatch per batch; the captured answers then
-        replay through the real serversink apply with routing restored."""
+        replay through the real serversink apply with routing restored.
+        Placement (mesh-sharded vs single-device executable) is decided by
+        :meth:`_pick_placement`."""
         run = self.run
         plan = run.pipe.plan
         n = len(group)
         src = plan.query_sources[0].name
-        serve = plan.compiled_serve_batch()
         frames_in = tuple({src: clean} for clean, _ in group)
-        frames_out, run.state = serve(run.params, run.state, frames_in)
+        use_mesh = self._pick_placement(n, frames_in)
+        serve = plan.compiled_serve_batch(mesh=self.mesh if use_mesh
+                                          else None)
+        params = self._mesh_placed_params() if use_mesh else run.params
+        frames_out, run.state = serve(params, run.state, frames_in)
         for (_, routing), frame in zip(group, frames_out):
             self._route(frame, routing)
             run.frames += 1
         self.batched_frames += n
+        if use_mesh:
+            self.sharded_batches += 1
+            self.sharded_frames += n
         if n > 1:
             self.batches += 1
             run.bursts += 1
@@ -234,4 +335,6 @@ class QueryBatcher:
     def stats(self) -> Dict[str, int]:
         return {"flushes": self.flushes, "batches": self.batches,
                 "batched_frames": self.batched_frames,
-                "sequential_frames": self.sequential_frames}
+                "sequential_frames": self.sequential_frames,
+                "sharded_batches": self.sharded_batches,
+                "sharded_frames": self.sharded_frames}

@@ -5,19 +5,50 @@ sparse tensor streams to compress streams for language and speech models").
 Codecs operate on whole StreamBuffers and report *wire bytes*, which the
 benchmark harness uses to reproduce the bandwidth analysis.  The compute
 hot-spots (quant8, sparse COO) are Pallas TPU kernels in repro.kernels.
+
+Meta contract: ``encode`` stamps ``meta["codec"]`` on the *wire* buffer (the
+payload really is encoded), and ``decode`` strips it again — a decoded frame
+must never claim to be encoded, or a later ``decode(buf,
+buf.meta["codec"])`` would corrupt the payload (double-decode) and wire
+accounting would count decoded frames as compressed.  Anything that needs
+the client's codec *preference* after decode (answer routing) re-attaches it
+explicitly as routing meta.
+
+Sparse encoding is capacity-bounded (block-COO): when the true nonzero count
+exceeds the requested density the tail is dropped.  That loss is detected
+and accounted — ``meta["sparse_dropped"]`` on the wire buffer carries the
+dropped-value count and the module-level :func:`codec_stats` aggregate it —
+so a lossy encode is never silent.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from .buffers import SparsePayload, StreamBuffer
 
-__all__ = ["encode", "decode", "CODECS"]
+__all__ = ["encode", "decode", "CODECS", "codec_stats", "reset_codec_stats"]
 
 CODECS = ("none", "quant8", "sparse")
+
+#: meta keys describing the WIRE form of a buffer — stamped by encode,
+#: stripped by decode (a decoded frame carries neither)
+_WIRE_META = ("codec", "sparse_dropped")
+
+# process-wide lossy-encode accounting (benchmarks / Runtime.stats surface
+# this; tests reset it)
+_CODEC_STATS = {"sparse_truncated_tensors": 0, "sparse_dropped_values": 0}
+
+
+def codec_stats() -> Dict[str, int]:
+    return dict(_CODEC_STATS)
+
+
+def reset_codec_stats():
+    for k in _CODEC_STATS:
+        _CODEC_STATS[k] = 0
 
 
 def _quant8_enc(x: jnp.ndarray):
@@ -36,13 +67,21 @@ def _quant8_dec(enc) -> jnp.ndarray:
     return x[:m, :n].astype(jnp.dtype(enc["dtype"])).reshape(enc["shape"])
 
 
-def _sparse_enc(x: jnp.ndarray, density: float = 0.25) -> SparsePayload:
+def _sparse_enc(x: jnp.ndarray, density: float = 0.25
+                ) -> Tuple[SparsePayload, int]:
+    """Returns (payload, dropped): ``dropped`` counts true nonzeros the
+    capacity-bounded COO could not carry (0 = lossless encode)."""
     from ..kernels import ops as kops
     cap = max(1, int(x.size * density))
     flat = x.reshape(-1)
     values, indices, nnz = kops.sparse_enc(flat, cap, 0.0)
+    # truncation detection costs ONE host sync: true-nnz minus kept, fused
+    # into a single scalar (two separate int() reads would sync twice on
+    # every encode to account a loss that is almost always zero)
+    dropped = max(0, int(jnp.sum(jnp.abs(flat) > 0.0).astype(jnp.int32)
+                         - nnz))
     return SparsePayload(values=values, indices=indices, nnz=nnz,
-                         dense_shape=tuple(x.shape))
+                         dense_shape=tuple(x.shape)), dropped
 
 
 def _sparse_dec(sp: SparsePayload) -> jnp.ndarray:
@@ -67,9 +106,20 @@ def encode(buf: StreamBuffer, codec: str) -> Tuple[StreamBuffer, int]:
         return out, nbytes
     if codec == "sparse":
         density = float(arg) if arg else 0.25
-        enc = tuple(_sparse_enc(t, density) for t in buf.tensors)
+        pairs = tuple(_sparse_enc(t, density) for t in buf.tensors)
+        enc = tuple(p for p, _ in pairs)
+        dropped = sum(d for _, d in pairs)
         nbytes = sum(e.wire_nbytes for e in enc)
-        out = buf.with_(tensors=enc, meta={**buf.meta, "codec": "sparse"})
+        meta = {**buf.meta, "codec": "sparse"}
+        if dropped:
+            # lossy encode: the capacity bound truncated the COO — say so on
+            # the wire buffer and in the process-wide codec stats, so the
+            # receiver and the bandwidth analysis both see the loss
+            meta["sparse_dropped"] = dropped
+            _CODEC_STATS["sparse_truncated_tensors"] += \
+                sum(1 for _, d in pairs if d)
+            _CODEC_STATS["sparse_dropped_values"] += dropped
+        out = buf.with_(tensors=enc, meta=meta)
         return out, nbytes
     raise ValueError(f"unknown codec {codec!r}")
 
@@ -79,7 +129,13 @@ def decode(buf: StreamBuffer, codec: str) -> StreamBuffer:
     if codec == "none":
         return buf
     if codec == "quant8":
-        return buf.with_(tensors=tuple(_quant8_dec(e) for e in buf.tensors))
-    if codec == "sparse":
-        return buf.with_(tensors=tuple(_sparse_dec(e) for e in buf.tensors))
-    raise ValueError(f"unknown codec {codec!r}")
+        tensors = tuple(_quant8_dec(e) for e in buf.tensors)
+    elif codec == "sparse":
+        tensors = tuple(_sparse_dec(e) for e in buf.tensors)
+    else:
+        raise ValueError(f"unknown codec {codec!r}")
+    # the payload is dense again: drop the wire-form meta — a stale
+    # meta["codec"] on a decoded frame is a double-decode hazard and
+    # mis-counts decoded frames as compressed in wire accounting
+    meta = {k: v for k, v in buf.meta.items() if k not in _WIRE_META}
+    return buf.with_(tensors=tensors, meta=meta)

@@ -293,13 +293,14 @@ class Pipeline:
 
     def compiled_step_n(self, hoist_io: bool = False,
                         hoist_queries: bool = False,
-                        donate: Optional[bool] = None):
-        """Cached jitted burst step (see :meth:`step_n`)."""
+                        donate: Optional[bool] = None, mesh=None):
+        """Cached jitted burst step (see :meth:`step_n`); ``mesh`` lays
+        shardable hoisted bursts out along the mesh's data axes."""
         if not self._realized:
             self.realize()
         return self.plan.compiled_step_n(hoist_io=hoist_io,
                                          hoist_queries=hoist_queries,
-                                         donate=donate)
+                                         donate=donate, mesh=mesh)
 
     def describe(self) -> str:
         if not self._realized:

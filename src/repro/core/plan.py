@@ -31,6 +31,19 @@ Donation: compiled executables donate the ``state`` argument when requested
 (``donate=True``) or automatically on gpu/tpu backends (``donate=None``) —
 state buffers are overwritten in place across frames.  Donation stays off on
 CPU where XLA does not implement it (it would only emit warnings).
+
+Mesh sharding (DESIGN.md §4): ``step_n`` and ``serve_batch`` accept a jax
+``Mesh``.  When the stacked frame axis divides the mesh's data-axis extent
+and the pipeline threads **no cross-frame state** (the state pytree has no
+leaves), the burst is laid out along the data axes with ``shard_map``: each
+device scans its own contiguous slice of the frame axis with the exact
+per-frame program the single-device scan runs, params/state replicated
+(``in_specs=P()``), so the answers are bitwise those of single-device
+serving.  Stateful plans, indivisible batch sizes, and 1-device meshes fall
+back to the single-device scan — sharding never changes semantics, only
+where frames execute.  Compiled executables are cached per (fingerprint,
+mesh identity): reconnecting after failover with the same mesh never
+retraces.
 """
 from __future__ import annotations
 
@@ -263,10 +276,66 @@ class ExecutionPlan:
         return PendingQuery(self, params, inputs, ctx, vals, outputs, *res)
 
     # -- burst execution -------------------------------------------------------
+    @staticmethod
+    def shardable_batch(n: int, state: dict, mesh) -> bool:
+        """True when an ``n``-frame burst can be laid out along ``mesh``'s
+        data axes without changing semantics: more than one data-axis device,
+        a frame axis that tiles them evenly, and NO cross-frame state (a
+        state pytree with leaves must thread through the scan in FIFO order —
+        splitting it across devices would change what frame ``i`` sees).
+        The decision is trace-static (shapes + pytree structure only), so the
+        host-side caller and the jitted executable always agree on it."""
+        if mesh is None or n <= 0:
+            return False
+        if jax.tree_util.tree_leaves(state):
+            return False
+        from ..launch.mesh import data_axis_size
+        dsize = data_axis_size(mesh)
+        return dsize > 1 and n % dsize == 0
+
+    def _step_n_sharded(self, params: dict, state: dict, inputs, mesh,
+                        hoist_io: bool, hoist_queries: bool
+                        ) -> Tuple[Dict[str, StreamBuffer], dict]:
+        """Among-device burst: shard the stacked frame axis along the mesh's
+        data axes; every device runs the single-device scan program over its
+        own contiguous frame slice (params/state replicated), so frame ``i``
+        is bitwise what the single-device scan produces.  Only called when
+        :meth:`shardable_batch` holds — state has no leaves, hence no carry
+        crosses the shard boundary."""
+        from jax.sharding import PartitionSpec as P
+        from ..jaxcompat import shard_map
+        from ..launch.mesh import batch_spec, data_axis_size
+        dspec = P(batch_spec(mesh))
+        n_local = (jax.tree_util.tree_leaves(inputs)[0].shape[0]
+                   // data_axis_size(mesh))
+
+        def local_scan(p, s, local):
+            if n_local == 1:
+                # one frame per device: run the DAG directly — a length-1
+                # lax.scan drags while-loop/dynamic-slice machinery into
+                # every partition for nothing (measured ~2x the dispatch)
+                frame = jax.tree_util.tree_map(lambda l: l[0], local)
+                outs, _ = self.run(p, s, frame, hoist_io=hoist_io,
+                                   hoist_queries=hoist_queries)
+                return jax.tree_util.tree_map(lambda l: l[None], outs)
+
+            def body(carry, x):
+                outs, nxt = self.run(p, carry, x, hoist_io=hoist_io,
+                                     hoist_queries=hoist_queries)
+                return nxt, outs
+            _, outs = lax.scan(body, s, local)
+            return outs
+
+        outs = shard_map(local_scan, mesh=mesh,
+                         in_specs=(P(), P(), dspec),
+                         out_specs=dspec)(params, state, inputs)
+        # no state leaves: the scan carry is pure structure, returned as-is
+        return outs, dict(state)
+
     def step_n(self, params: dict, state: dict,
                inputs: Optional[Dict[str, StreamBuffer]] = None,
                n: Optional[int] = None, hoist_io: bool = False,
-               hoist_queries: bool = False
+               hoist_queries: bool = False, mesh=None
                ) -> Tuple[Dict[str, StreamBuffer], dict]:
         """Run an N-frame burst with a single ``lax.scan`` dispatch.
 
@@ -275,9 +344,20 @@ class ExecutionPlan:
         pipelines pass ``n`` instead.  Returns (stacked outputs, final
         state) — frame ``i`` of the outputs equals what ``run`` would have
         produced on the ``i``-th sequential call.
+
+        With ``mesh``, hoisted bursts whose frame axis tiles the mesh's data
+        axes and whose state pytree is leafless run sharded
+        (:meth:`_step_n_sharded`); anything else falls back to the
+        single-device scan unchanged.
         """
         if inputs is None and n is None:
             raise ValueError("step_n needs stacked `inputs` or a length `n`")
+        if mesh is not None and inputs is not None:
+            leaves = jax.tree_util.tree_leaves(inputs)
+            nn = int(leaves[0].shape[0]) if leaves else 0
+            if self.shardable_batch(nn, state, mesh):
+                return self._step_n_sharded(params, state, inputs, mesh,
+                                            hoist_io, hoist_queries)
 
         def body(carry, x):
             outs, nxt = self.run(params, carry, x, hoist_io=hoist_io,
@@ -287,8 +367,8 @@ class ExecutionPlan:
         final_state, outs = lax.scan(body, state, inputs, length=n)
         return outs, final_state
 
-    def serve_batch(self, params: dict, state: dict, frames: Tuple
-                    ) -> Tuple[Tuple, dict]:
+    def serve_batch(self, params: dict, state: dict, frames: Tuple,
+                    mesh=None) -> Tuple[Tuple, dict]:
         """Serve N query requests as one traced unit: stack the per-frame
         input dicts, scan the hoisted DAG, and split the outputs back into
         per-frame pytrees — all INSIDE the trace, so a compiled batch costs
@@ -298,15 +378,22 @@ class ExecutionPlan:
         ``frames`` is a tuple of ``{source_name: StreamBuffer}`` dicts with
         identical pytree structure.  Returns (tuple of per-frame outputs,
         final state); frame ``i`` equals the ``i``-th sequential hoisted
-        ``run``."""
+        ``run``.
+
+        With ``mesh``, batches satisfying :meth:`shardable_batch` serve
+        sharded along the mesh's data axes (one frame slice per device);
+        everything else — including every stateful plan — keeps the
+        single-device scan, so batch composition and placement never change
+        any client's numerics."""
         n = len(frames)
-        if n == 1:
+        if n == 1:  # never shardable: 1 frame cannot tile >1 devices
             outs, final = self.run(params, state, frames[0],
                                    hoist_io=True, hoist_queries=True)
             return (outs,), final
         stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *frames)
         outs, final = self.step_n(params, state, stacked,
-                                  hoist_io=True, hoist_queries=True)
+                                  hoist_io=True, hoist_queries=True,
+                                  mesh=mesh)
         per = tuple(jax.tree_util.tree_map(lambda l, _i=i: l[_i], outs)
                     for i in range(n))
         return per, final
@@ -341,38 +428,89 @@ class ExecutionPlan:
                                donate_argnums=(1,) if donate else ())
         return fns[key]
 
+    @staticmethod
+    def _mesh_key(mesh):
+        from ..launch.mesh import mesh_fingerprint
+        return mesh_fingerprint(mesh)
+
     def compiled_step_n(self, hoist_io: bool = False,
                         hoist_queries: bool = False,
-                        donate: Optional[bool] = None) -> Callable:
+                        donate: Optional[bool] = None, mesh=None) -> Callable:
         """Jitted burst step ``(params, state, inputs=None, n=None) ->
-        (stacked outputs, final state)``.  ``n``, ``hoist_io`` and
-        ``hoist_queries`` are static; each distinct burst length (= query
-        batch size in hoisted-query serving) traces once and is cached
-        thereafter in the fingerprint-keyed registry."""
+        (stacked outputs, final state)``.  ``n``, ``hoist_io``,
+        ``hoist_queries`` and ``mesh`` are static; each distinct burst
+        length (= query batch size in hoisted-query serving) traces once and
+        is cached thereafter in the fingerprint-keyed registry.  The cache
+        key carries the mesh identity (axes, shape, device assignment), so a
+        mesh-sharded executable is never confused with the single-device one
+        and reconnecting with the same mesh never retraces."""
         donate = self._resolve_donate(donate)
         fns = self._cache()["fns"]
-        key = ("step_n", hoist_io, hoist_queries, donate)
+        key = ("step_n", hoist_io, hoist_queries, donate, self._mesh_key(mesh))
         if key not in fns:
             def step_n(params, state, inputs=None, n=None,
-                       _self=self, _hoist=hoist_io, _hoistq=hoist_queries):
+                       _self=self, _hoist=hoist_io, _hoistq=hoist_queries,
+                       _mesh=mesh):
                 return _self.step_n(params, state, inputs, n=n,
-                                    hoist_io=_hoist, hoist_queries=_hoistq)
+                                    hoist_io=_hoist, hoist_queries=_hoistq,
+                                    mesh=_mesh)
             fns[key] = jax.jit(step_n, static_argnames=("n",),
                                donate_argnums=(1,) if donate else ())
         return fns[key]
 
-    def compiled_serve_batch(self, donate: Optional[bool] = None) -> Callable:
+    def compiled_serve_batch(self, donate: Optional[bool] = None,
+                             mesh=None) -> Callable:
         """Jitted :meth:`serve_batch` ``(params, state, frames_tuple) ->
         (per-frame outputs tuple, final state)``.  The batch size lives in
         the input pytree structure, so each distinct size traces once per
         fingerprint and is cached thereafter (the QueryBatcher caps sizes
-        at ``max_batch``, keeping the trace set tiny)."""
+        at ``max_batch``, keeping the trace set tiny).  ``mesh`` extends the
+        cache key exactly like :meth:`compiled_step_n`.
+
+        The mesh executable moves the stack/split to the HOST (numpy, zero
+        XLA dispatches) and keeps the jit boundary stacked-and-sharded:
+        per-frame outputs at an SPMD boundary would each pay a cross-device
+        gather (measured ~10x the whole serve), whereas one sharded stacked
+        output costs a single device_get.  Host-split answers are therefore
+        numpy — bitwise the same frames.  Groups the mesh cannot take
+        (:meth:`shardable_batch` fails) fall through to the single-device
+        executable inside the same callable."""
         donate = self._resolve_donate(donate)
         fns = self._cache()["fns"]
-        key = ("serve_batch", donate)
-        if key not in fns:
-            fns[key] = jax.jit(self.serve_batch,
+        key = ("serve_batch", donate, self._mesh_key(mesh))
+        if key in fns:
+            return fns[key]
+        if mesh is None:
+            def serve_batch(params, state, frames, _self=self):
+                return _self.serve_batch(params, state, frames)
+            fns[key] = jax.jit(serve_batch,
                                donate_argnums=(1,) if donate else ())
+            return fns[key]
+
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from ..launch.mesh import batch_spec
+        single = self.compiled_serve_batch(donate=donate, mesh=None)
+        step = self.compiled_step_n(hoist_io=True, hoist_queries=True,
+                                    donate=donate, mesh=mesh)
+        frame_sharding = NamedSharding(mesh, P(batch_spec(mesh)))
+
+        def serve_sharded(params, state, frames, _self=self):
+            n = len(frames)
+            if not _self.shardable_batch(n, state, mesh):
+                return single(params, state, frames)
+            import numpy as np
+            host = jax.device_get(frames)
+            stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *host)
+            stacked = jax.device_put(
+                stacked, jax.tree_util.tree_map(lambda _: frame_sharding,
+                                                stacked))
+            outs, final = step(params, state, stacked)
+            outs = jax.device_get(outs)
+            per = tuple(jax.tree_util.tree_map(lambda l, _i=i: l[_i], outs)
+                        for i in range(n))
+            return per, final
+
+        fns[key] = serve_sharded
         return fns[key]
 
 

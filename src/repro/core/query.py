@@ -204,7 +204,11 @@ class TensorQueryServerSrc(Element):
         if buf is None:
             raise BrokerError(f"{self.name}: no pending query")
         codec = buf.meta.get("codec", "none")
-        return [comp.decode(buf, codec)]
+        decoded = comp.decode(buf, codec)
+        # decode strips the wire-form codec claim; the client's codec
+        # survives as ROUTING meta so the paired serversink knows how to
+        # encode the answer back (mirrors the batcher's routing hoist)
+        return [decoded.with_(meta={**decoded.meta, "codec": codec})]
 
 
 @register_element("tensor_query_serversink")

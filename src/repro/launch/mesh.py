@@ -50,3 +50,32 @@ def mesh_axis_sizes(mesh) -> dict:
 def data_axes(mesh) -> Tuple[str, ...]:
     """Axes carrying the batch dimension (pod + data when multi-pod)."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_axis_size(mesh) -> int:
+    """Total device count along the batch-carrying axes."""
+    sizes = mesh_axis_sizes(mesh)
+    n = 1
+    for a in data_axes(mesh):
+        n *= sizes[a]
+    return n
+
+
+def batch_spec(mesh):
+    """PartitionSpec entry for a leading batch/frame axis laid out along the
+    mesh's data axes (None when the mesh has no data axes)."""
+    dp = data_axes(mesh)
+    if not dp:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def mesh_fingerprint(mesh) -> Tuple:
+    """Hashable identity of a mesh for executable-cache keys: axis names,
+    axis sizes, and the physical device assignment.  Two Mesh objects over
+    the same devices in the same layout share executables; reconnecting
+    after failover with the same mesh therefore never retraces."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))

@@ -43,6 +43,19 @@ registers (retried at the top of every tick).  Killing a server therefore
 loses zero client requests; with a surviving (same-seeded) server the
 answers are bitwise what the fault-free run produces.
 
+Mesh-sharded serving (DESIGN.md §4): ``Runtime(mesh=...)`` can lay batched
+query serves and hoisted pub/sub bursts out along the mesh's data axes —
+one frame slice per device, params replicated — whenever the batch tiles
+the mesh and the plan threads no cross-frame state
+(``ExecutionPlan.shardable_batch``).  ``mesh="auto"`` builds a host mesh
+over the local devices; ``shard_mode`` picks the placement policy
+("auto" probes sharded-vs-single once per batch size and keeps the faster,
+"always"/"never" force it).  Sharding never changes semantics: non-tiling
+groups, stateful plans, and 1-device meshes serve exactly like
+``Runtime(mesh=None)``, and the failover fabric re-dispatches sharded
+batches' orphans identically (the mesh only places compute; the
+request/answer plumbing is untouched).
+
 Statistics (frames, drops, bytes, bursts, batches, redispatches, per-sink
 pts) feed the Fig. 7 benchmark.
 """
@@ -80,6 +93,9 @@ class _PipeRun:
     burst_frames: int = 0        # frames delivered via bursts
     last_outputs: Dict[str, StreamBuffer] = field(default_factory=dict)
     sink_log: Dict[str, list] = field(default_factory=dict)
+    #: mesh-replicated copy of ``params``, placed lazily at first sharded
+    #: burst (re-broadcasting params per dispatch costs more than the serve)
+    mesh_params: Optional[dict] = None
 
     @property
     def host_srcs(self) -> List[MqttSrc]:
@@ -121,13 +137,31 @@ class Runtime:
     def __init__(self, broker: Optional[Broker] = None, tick_ns: int = TICK_NS,
                  burst: int = DEFAULT_BURST,
                  query_batch=DEFAULT_QUERY_BATCH,
-                 lease_ticks: Optional[int] = None):
+                 lease_ticks: Optional[int] = None,
+                 mesh=None, shard_mode: str = "auto"):
         self.broker = broker or Broker()
         if lease_ticks is not None:
             self.broker.default_lease_ticks = lease_ticks
         self.devices: List[Device] = []
         self.tick_ns = tick_ns
         self.burst = max(1, int(burst))
+        #: jax Mesh for among-device serving (DESIGN.md §4): batched query
+        #: serves and hoisted bursts lay their frame axis out along the
+        #: mesh's data axes when shardable; ``mesh="auto"``/``True`` builds a
+        #: host mesh over the local devices.  None = single-device serving.
+        if mesh in ("auto", True):
+            from ..launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        self.mesh = mesh
+        #: "auto" probes sharded-vs-single per batch size and keeps the
+        #: faster (core/batching.py docstring); "always"/"never" force it.
+        #: Validated HERE, not only in QueryBatcher: a pub/sub-only
+        #: deployment never builds a batcher, and the burst path's string
+        #: compare would silently turn a typo into "never".
+        if shard_mode not in ("auto", "always", "never"):
+            raise ValueError(f"shard_mode {shard_mode!r} not in "
+                             f"('auto', 'always', 'never')")
+        self.shard_mode = shard_mode
         #: query micro-batching policy (int = max batch; 0 disables —
         #: legacy synchronous round-trips inside the client's apply)
         self.batching = BatchingPolicy.of(query_batch)
@@ -168,7 +202,8 @@ class Runtime:
                 # go through the deferred queue-gather-flush path
                 batcher = QueryBatcher(
                     e.endpoint, run, self.batching,
-                    inline_step=lambda r=run: self._run_once(r))
+                    inline_step=lambda r=run: self._run_once(r),
+                    mesh=self.mesh, shard_mode=self.shard_mode)
                 self._batchers[e.endpoint.endpoint_id] = batcher
                 e.connect(self.broker, inline_runner=batcher.flush)
         # (re)negotiate with broker wiring in place so mqttsink registers;
@@ -193,13 +228,18 @@ class Runtime:
             if orphans:
                 self.orphaned_requests += orphans
             ep.requests.q.clear()
-            for ch in ep.responses.values():
-                ch.q.clear()
+            # release the per-client response channels outright, not just
+            # their queues: clients rebind away from a dead server, and a
+            # kill/revive cycle that only cleared queues would accumulate
+            # one orphaned Channel per client id per epoch, forever
+            ep.responses.clear()
         elif event == "register":
             ep.alive = True
             ep.requests.q.clear()
-            for ch in ep.responses.values():
-                ch.q.clear()
+            # fresh epoch: stale pre-death channels must never satisfy a
+            # post-revival frame, and returning clients get new channels on
+            # their first routed answer (client_channel auto-creates)
+            ep.responses.clear()
 
     def _heartbeat_and_lease(self):
         """Beat on behalf of every live device's registrations, refresh load
@@ -395,8 +435,26 @@ class Runtime:
             # heterogeneous frame structure (e.g. mixed meta after failover):
             # burst stacking needs one treedef — fall back to per-frame
             return self._replay_frames(run, pulls)
-        step_n = run.pipe.compiled_step_n(hoist_io=True)
-        outs, run.state = step_n(run.params, run.state, stacked)
+        # pub/sub bursts shard only in forced mode: they run off the serving
+        # hot path (catch-up drains), so they follow the explicit placement
+        # rather than paying their own calibration probes
+        mesh = self.mesh if self.shard_mode == "always" else None
+        sharded = mesh is not None and \
+            run.pipe.plan.shardable_batch(n, run.state, mesh)
+        params = run.params
+        if sharded:
+            if run.mesh_params is None:
+                from ..launch.shardings import replicated
+                run.mesh_params = jax.device_put(
+                    run.params, replicated(mesh, run.params))
+            params = run.mesh_params
+        step_n = run.pipe.compiled_step_n(hoist_io=True, mesh=mesh)
+        outs, run.state = step_n(params, run.state, stacked)
+        if sharded:
+            # mesh-sharded burst: fetch the stacked outputs in one gather —
+            # eager per-frame slicing of SPMD-sharded arrays would pay a
+            # cross-device transfer per leaf per frame
+            outs = jax.device_get(outs)
         for frame_outs in unstack_buffers(outs, n):
             self._deliver_frame(run, frame_outs)
         run.bursts += 1
@@ -482,7 +540,8 @@ class Runtime:
                            "parked_now": len(self._parked),
                            "orphaned_requests": self.orphaned_requests}
         agg = {"flushes": 0, "batches": 0, "batched_frames": 0,
-               "sequential_frames": 0}
+               "sequential_frames": 0, "sharded_batches": 0,
+               "sharded_frames": 0}
         for b in self._batchers.values():
             for k, v in b.stats().items():
                 agg[k] += v

@@ -1,0 +1,21 @@
+"""Sharding-test device forging: 8 host CPU devices for the whole process.
+
+XLA fixes the device count at backend init.  pytest imports every conftest
+during collection — before any test body touches a jax backend — so setting
+``XLA_FLAGS`` here means the tier-1 run (which collects this directory)
+exercises the mesh-sharded serve path on stock CI hardware: 8 forged CPU
+devices, ``make_host_mesh()`` -> an 8-way data axis.
+
+Tests that genuinely need more than one device carry the ``multidevice``
+marker (pytest.ini) and are auto-skipped by the root conftest when the
+backend initialized too early with fewer — e.g. a narrowed run of another
+directory that happened to import this one late.  Everything else in the
+suite is device-count-agnostic: donation/interpret-mode switches key off
+``jax.default_backend()`` (still "cpu"), and plain jits place on device 0.
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8"
+                               ).strip()

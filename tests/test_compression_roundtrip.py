@@ -106,6 +106,86 @@ class TestSparse:
         assert dec.tensors[0].shape == (13, 7)
 
 
+class TestDecodeStripsWireMeta:
+    """Regression: decode() used to leave the wire buffer's meta["codec"]
+    ("quant8"/"sparse") on the DECODED frame — a decoded frame claiming to
+    be encoded, so a meta-keyed decode(buf, buf.meta["codec"]) would decode
+    a second time (corrupting the payload) and wire accounting would count
+    dense frames as compressed."""
+
+    @pytest.mark.parametrize("codec", ["quant8", "sparse"])
+    def test_decoded_frame_never_claims_a_codec(self, codec):
+        buf = _buf((13, 7))
+        enc, _ = comp.encode(buf, codec)
+        assert enc.meta["codec"] == codec          # the WIRE form does claim
+        dec = comp.decode(enc, codec)
+        assert "codec" not in dec.meta             # the decoded frame doesn't
+        assert "sparse_dropped" not in dec.meta
+
+    @pytest.mark.parametrize("codec", ["quant8", "sparse"])
+    def test_meta_keyed_double_decode_is_identity(self, codec):
+        """The hazard pattern itself: decode keyed off the buffer's own meta
+        must be a no-op once the buffer is already decoded."""
+        buf = _buf((13, 7))
+        enc, _ = comp.encode(buf, codec)
+        dec = comp.decode(enc, enc.meta.get("codec", "none"))
+        dec2 = comp.decode(dec, dec.meta.get("codec", "none"))
+        np.testing.assert_array_equal(np.asarray(dec2.tensors[0]),
+                                      np.asarray(dec.tensors[0]))
+
+    def test_payload_meta_survives_decode(self):
+        """Only the wire-form keys are stripped; routing/payload meta rides
+        through untouched (the batcher hoists routing separately)."""
+        buf = _buf((3, 5)).with_(meta={"client_id": 7, "topic": "cam/a"})
+        enc, _ = comp.encode(buf, "quant8")
+        dec = comp.decode(enc, "quant8")
+        assert dec.meta == {"client_id": 7, "topic": "cam/a"}
+
+
+class TestSparseTruncationAccounting:
+    """Regression: a dense tensor forced through a narrow sparse capacity
+    used to truncate SILENTLY — lossy wire frames with no signal anywhere.
+    The encode must detect the loss, stamp it on the wire buffer, and
+    aggregate it in the codec stats."""
+
+    def test_dense_tensor_at_density_0p05_reports_truncation(self):
+        comp.reset_codec_stats()
+        n = 200
+        x = jnp.asarray(np.arange(1, n + 1, dtype=np.float32))  # fully dense
+        buf = StreamBuffer(tensors=(x,), pts=jnp.int32(0))
+        enc, _ = comp.encode(buf, "sparse:0.05")
+        kept = int(np.asarray(
+            comp.decode(enc, "sparse").tensors[0] != 0).sum())
+        dropped = enc.meta["sparse_dropped"]
+        assert dropped > 0
+        assert kept + dropped == n                 # loss fully accounted
+        stats = comp.codec_stats()
+        assert stats["sparse_truncated_tensors"] == 1
+        assert stats["sparse_dropped_values"] == dropped
+
+    def test_lossless_encode_stays_unmarked(self):
+        """A payload under capacity must NOT grow the truncation meta key —
+        the lossless case keeps its treedef (and its silence)."""
+        comp.reset_codec_stats()
+        x = np.zeros(200, np.float32)
+        x[::25] = 1.0                               # 4% nonzero, 25% capacity
+        buf = StreamBuffer(tensors=(jnp.asarray(x),), pts=jnp.int32(0))
+        enc, _ = comp.encode(buf, "sparse")
+        assert "sparse_dropped" not in enc.meta
+        assert comp.codec_stats()["sparse_dropped_values"] == 0
+        dec = comp.decode(enc, "sparse")
+        np.testing.assert_array_equal(np.asarray(dec.tensors[0]), x)
+
+    def test_multi_tensor_truncation_sums_across_tensors(self):
+        comp.reset_codec_stats()
+        dense = jnp.asarray(np.arange(1, 101, dtype=np.float32))
+        buf = StreamBuffer(tensors=(dense, dense), pts=jnp.int32(0))
+        enc, _ = comp.encode(buf, "sparse:0.05")
+        assert comp.codec_stats()["sparse_truncated_tensors"] == 2
+        assert enc.meta["sparse_dropped"] == \
+            comp.codec_stats()["sparse_dropped_values"]
+
+
 def test_unknown_codec_rejected():
     with pytest.raises(ValueError, match="unknown codec"):
         comp.encode(_buf((3,)), "gzip")

@@ -168,6 +168,65 @@ class TestChaosAcceptance:
         assert all(r.frames == 8 for r in cl_runs)
 
 
+class TestResponseChannelLifecycle:
+    """Regression: ``QueryServerEndpoint.responses`` channels were never
+    RELEASED — death/revival only cleared their queues, so every chaos
+    kill/revive epoch (and every client generation) left one orphaned
+    Channel per client id on the endpoint, forever.  Liveness transitions
+    must purge the dict; steady-state reuse must keep it at one channel per
+    live bound client."""
+
+    def test_kill_revive_cycles_keep_channels_bounded(self, chaos):
+        n_clients, cycles = 4, 3
+        rt = Runtime(query_batch=8)
+        devA, _, ssrcA = _server(rt, name="hubA")
+        _server(rt, name="hubB")
+        cl = _clients(rt, n_clients)
+        rt.run(2)
+        ep = ssrcA.endpoint
+        assert len(ep.responses) == n_clients      # one per bound client
+        for c in range(cycles):
+            harness = chaos(rt)
+            t = rt.ticks
+            harness.kill_server(t + 1, devA, ssrcA)
+            harness.revive_server(t + 3, devA, ssrcA)
+            harness.run(5)
+            # the down event released every channel; clients that came back
+            # after the revival re-created exactly theirs — no epoch leak
+            assert len(ep.responses) <= n_clients
+        assert all(r.frames == rt.ticks for r in cl)   # and nothing lost
+
+    def test_down_event_purges_channels_not_just_queues(self):
+        rt = Runtime(query_batch=8)
+        _, _, ssrc = _server(rt)
+        _clients(rt, 3)
+        rt.run(1)
+        ep = ssrc.endpoint
+        assert len(ep.responses) == 3
+        ssrc.endpoint.alive = False
+        rt.broker.mark_down(ssrc.registration)
+        assert len(ep.responses) == 0              # released, not drained
+
+    def test_client_churn_across_outages_does_not_accumulate(self, chaos):
+        """Fresh client generations across kill/revive epochs: dead
+        generations' channels must not pile up on the endpoint."""
+        rt = Runtime(query_batch=8)
+        dev, _, ssrc = _server(rt)
+        _clients(rt, 2)
+        rt.run(1)
+        harness = chaos(rt)
+        for c in range(3):
+            t = rt.ticks
+            harness.kill_server(t + 1, dev, ssrc)
+            harness.revive_server(t + 2, dev, ssrc)
+            harness.run(3)
+            _clients(rt, 2)                        # a new generation joins
+        rt.run(1)
+        # 2 original + 3x2 new = 8 live clients max; without the purge the
+        # endpoint would also hold every pre-outage generation's channels
+        assert len(ssrc.endpoint.responses) <= 8
+
+
 class TestCapabilityRouting:
     def test_throughput_ranking_beats_registration_order(self):
         rt = Runtime(query_batch=8)

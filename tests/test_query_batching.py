@@ -133,6 +133,35 @@ class TestBatchingMechanics:
         assert srv_run.bursts == 3             # one scan dispatch per flush
         assert srv_run.burst_frames == 24
 
+    def test_batch_1_serves_through_compiled_path(self):
+        """Regression: ``max_batch == 1`` used to be shunted onto the
+        sequential interpreted fallback (`max_batch > 1` in flush),
+        contradicting the module contract that a group of one still serves
+        through the compiled hoisted path — turning the batch knob down to 1
+        silently changed execution mode.  Batch 1 must batch."""
+        rt = Runtime(query_batch=1)
+        srv_run, _ = _server(rt)
+        _clients(rt, 3)
+        rt.run(2)
+        qb = rt.stats()["query_batching"]
+        assert qb["batched_frames"] == 6
+        assert qb["sequential_frames"] == 0
+        assert srv_run.frames == 6
+
+    def test_batch_1_matches_larger_batches_bitwise(self):
+        """...and the compiled group-of-one agrees bitwise with the compiled
+        scan-of-8, so the knob never leaks into numerics."""
+        streams = {}
+        for batch in (1, 8):
+            rt = Runtime(query_batch=batch)
+            _server(rt)
+            runs = _clients(rt, 4)
+            rt.run(2)
+            streams[batch] = [_responses(r) for r in runs]
+        for ref, got in zip(streams[1], streams[8]):
+            for a, b in zip(ref, got):
+                np.testing.assert_array_equal(a, b)
+
     def test_max_batch_chunks_oversized_ticks(self):
         rt = Runtime(query_batch=4)
         srv_run, _ = _server(rt)

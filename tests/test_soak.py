@@ -118,3 +118,10 @@ def test_mixed_workload_soak(chaos):
     cache_end = executable_cache_info()
     assert cache_end["fingerprints"] <= cache_mid["fingerprints"]
     assert cache_end["executables"] <= cache_mid["executables"]
+
+    # -- per-client response channels stay bounded across the outage -------------
+    # (regression: kill/revive used to leak one orphaned Channel per client
+    # per epoch; the down/register events must release them, leaving at most
+    # one live channel per bound client — viewer + the plain clients)
+    ep = sp.elements["ssrc"].endpoint
+    assert len(ep.responses) <= N_PLAIN_CLIENTS + 1
