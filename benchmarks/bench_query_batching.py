@@ -2,9 +2,14 @@
 batched (one hoisted scan dispatch per flush) vs sequential
 (one interpreted round-trip per request) — the PR-2 tentpole lever.
 
-GATE: batch-8 serving must sustain >= 2x the sequential server frames/sec.
-Measured on the serving path itself (requests pre-queued, flush timed), so
-client-side pipeline cost does not dilute the server-side win.
+GATES:
+* batch-8 serving must sustain >= 2x the sequential server frames/sec,
+  measured on the serving path itself (requests pre-queued, flush timed),
+  so client-side pipeline cost does not dilute the server-side win;
+* the WHOLE batched tick must beat the sequential tick (PR-5: the batched
+  e2e tick used to LOSE to sequential — every deferred frame walked the
+  client pipeline interpreted and the codec/stack overhead ate the compiled
+  serve win; jitted deferred segments + the fused wire path reclaim it).
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ from .common import emit
 
 N_CLIENTS = 8
 GATE_SPEEDUP = 2.0
+GATE_E2E = 1.0  # batched tick must beat (>=) the sequential tick
 
 
 def _ensure_model(d: int = 192):
@@ -63,11 +69,10 @@ def _build(query_batch: int, d: int = 192):
     return rt, srv_run, [c.pipe.elements["qc"] for c in clients]
 
 
-def _serving_fps(rt: Runtime, srv_run, qcs, d: int, rounds: int,
-                 warmup: int = 3) -> float:
-    """Time ONLY the serving path: pre-queue one request per client, then
+def _round_runner(rt: Runtime, qcs, d: int):
+    """One serving round over the endpoint: queue one request per client,
     flush (batched) or step per request (sequential fallback inside the
-    same flush API — policy decides)."""
+    same flush API — policy decides), drain the answers."""
     batcher = next(iter(rt._batchers.values()))
     frame = StreamBuffer(tensors=(jnp.arange(d, dtype=jnp.float32) / d,),
                          pts=jnp.int32(0))
@@ -76,27 +81,34 @@ def _serving_fps(rt: Runtime, srv_run, qcs, d: int, rounds: int,
         for qc in qcs:
             qc.send_query(frame)
         batcher.flush()
-
-    for _ in range(warmup):
-        one_round()
-    t0 = time.perf_counter()
-    for _ in range(rounds):
-        one_round()
-    dt = time.perf_counter() - t0
-    # drain the answer channels so memory stays flat across rounds
-    for qc in qcs:
-        while qc.recv_answer() is not None:
-            pass
-    return rounds * len(qcs) / dt
+        for qc in qcs:
+            while qc.recv_answer() is not None:
+                pass
+    return one_round
 
 
-def run(rounds: int = 30):
+def run(rounds: int = 10, reps: int = 5):
     d = 192
     rt_b, srv_b, qcs_b = _build(query_batch=N_CLIENTS, d=d)
-    fps_batched = _serving_fps(rt_b, srv_b, qcs_b, d, rounds)
-
     rt_s, srv_s, qcs_s = _build(query_batch=0, d=d)
-    fps_seq = _serving_fps(rt_s, srv_s, qcs_s, d, rounds)
+    runners = {"batched": _round_runner(rt_b, qcs_b, d),
+               "sequential": _round_runner(rt_s, qcs_s, d)}
+    for fn in runners.values():  # compile + warm outside the timed windows
+        for _ in range(3):
+            fn()
+    # interleaved mins: the serving windows are short and the box is noisy
+    # (2-3x run-to-run) — alternating reps hit both paths with the same
+    # weather, and the min is the honest dispatch cost
+    best = {k: float("inf") for k in runners}
+    for _ in range(reps):
+        for label, fn in runners.items():
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                fn()
+            best[label] = min(best[label],
+                              (time.perf_counter() - t0) / rounds)
+    fps_batched = N_CLIENTS / best["batched"]
+    fps_seq = N_CLIENTS / best["sequential"]
 
     speedup = fps_batched / fps_seq
     emit(f"query_batching/serving_fps/batch{N_CLIENTS}",
@@ -111,23 +123,40 @@ def run(rounds: int = 30):
          speedup=round(speedup, 3), gate=GATE_SPEEDUP,
          gate_pass=bool(speedup >= GATE_SPEEDUP))
 
-    # end-to-end sanity: whole-runtime ticks with 8 live client pipelines
-    # (client pipelines run interpreted either way; this shows the tick-level
-    # effect, not the serving-path gate)
+    # end-to-end GATE: whole-runtime ticks with 8 live client pipelines —
+    # the batched tick (jitted deferred segments + fused wire path) must
+    # beat the sequential tick, not just win on serve-dispatch fps.
+    # Interleaved mins: box noise hits both runtimes alike.
+    rts = {}
     for label, rt in (("batched", Runtime(query_batch=8)),
                       ("sequential", Runtime(query_batch=0))):
-        model_rt, srv_run, _ = _build_into(rt, d)
+        _build_into(rt, d)
         rt.run(3)  # compile + warm caches outside the timed window
-        base = srv_run.frames
-        t0 = time.perf_counter()
-        rt.run(10)
-        dt = time.perf_counter() - t0
-        emit(f"query_batching/e2e_tick/{label}", dt / 10 * 1e6,
-             f"server_frames={srv_run.frames - base}")
+        rts[label] = rt
+    best = {k: float("inf") for k in rts}
+    for _ in range(5):
+        for label, rt in rts.items():
+            t0 = time.perf_counter()
+            rt.run(10)
+            best[label] = min(best[label], (time.perf_counter() - t0) / 10)
+    for label, dt in best.items():
+        emit(f"query_batching/e2e_tick/{label}", dt * 1e6,
+             f"ms_per_tick={dt * 1e3:.2f}")
+    e2e_speedup = best["sequential"] / best["batched"]
+    emit("query_batching/e2e_speedup", 0.0,
+         f"batched_vs_sequential={e2e_speedup:.2f}x;gate>={GATE_E2E}x;"
+         f"pass={e2e_speedup >= GATE_E2E}",
+         speedup=round(e2e_speedup, 3), gate=GATE_E2E,
+         gate_pass=bool(e2e_speedup >= GATE_E2E))
 
     if speedup < GATE_SPEEDUP:
         raise AssertionError(
             f"query batching gate failed: {speedup:.2f}x < {GATE_SPEEDUP}x")
+    if e2e_speedup < GATE_E2E:
+        raise AssertionError(
+            f"e2e tick gate failed: batched tick is {e2e_speedup:.2f}x the "
+            f"sequential tick (must be >= {GATE_E2E}x — the PR-5 regression "
+            f"fix)")
 
 
 def _build_into(rt: Runtime, d: int):

@@ -1,0 +1,195 @@
+"""Fused batched wire path (PR 5, DESIGN.md §5): codec encode/decode inside
+the compiled serving dispatch vs the eager per-frame codec path.
+
+The paper's among-device pipelines live or die on the transport hot path
+("sparse tensors and gst-gz support compressed transmissions").  BENCH_PR4
+showed the codec layer erasing the compiled-serve win: sparse encode at
+~101 ms/tensor, and every batched tick decoding + re-encoding each frame
+eagerly on the host outside the jit.  PR 5 fuses the wire path; this suite
+gates the two headline numbers:
+
+* **e2e tick, quant8 clients, batch 8** — the whole-runtime tick with the
+  fused wire path must be >= 2x faster than the eager-codec baseline
+  (``Runtime(fused_wire=False)`` = the PR-4 path, bit-for-bit);
+* **sparse encode per tensor** — down >= 10x from the PR-4 ~101.8 ms on the
+  same LM-activation frame (the XLA fast path of the block-COO kernel).
+
+Both comparisons are semantics-free: the fused path is pinned bitwise
+against the eager one in tests/test_wire_path.py.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TensorSpec, parse_launch
+from repro.core.elements import register_model
+from repro.kernels import ops as kops
+from repro.runtime import Device, Runtime
+
+from .common import emit
+
+N_CLIENTS = 8
+GATE_E2E_SPEEDUP = 2.0
+# BENCH_PR4.json kernel/sparse_enc on the (64, 1024) LM-activation frame
+PR4_SPARSE_ENC_US = 101_753.6
+GATE_SPARSE_SPEEDUP = 10.0
+LM_SHAPE = (64, 1024)
+
+
+def _ensure_model(d: int = 192):
+    key = f"wirepath_mlp_{d}"
+
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"w1": jax.random.normal(k1, (d, d)) * 0.05,
+                "w2": jax.random.normal(k2, (d, 16)) * 0.05}
+
+    def apply(p, x):
+        h = jnp.tanh(x.astype(jnp.float32).reshape(1, -1) @ p["w1"])
+        return h @ p["w2"]
+
+    register_model(key, init, apply,
+                   out_specs=(TensorSpec((1, 16), "float32"),))
+    return key
+
+
+def _build(codec: str, fused: bool, d: int = 192) -> Runtime:
+    rt = Runtime(query_batch=N_CLIENTS, fused_wire=fused)
+    model = _ensure_model(d)
+    hub = Device("hub")
+    srv = parse_launch(
+        f"tensor_query_serversrc operation=svc name=ssrc ! "
+        f"tensor_filter model={model} ! tensor_query_serversink name=ssink")
+    srv.elements["ssink"].pair_with(srv.elements["ssrc"])
+    hub.add_pipeline(srv, jit=False)
+    rt.add_device(hub)
+    for i in range(N_CLIENTS):
+        dev = Device(f"tv{i}")
+        cli = parse_launch(
+            f"testsrc width={d // 3} height=1 ! tensor_converter ! "
+            f"tensor_query_client operation=svc codec={codec} name=qc ! "
+            f"appsink name=o")
+        dev.add_pipeline(cli, jit=False)
+        rt.add_device(dev)
+    return rt
+
+
+def _tick_ms(rt: Runtime, reps: int = 5, ticks: int = 10) -> float:
+    """Interleaved-min tick time (the box is noisy; mins compare paths)."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        rt.run(ticks)
+        best = min(best, (time.perf_counter() - t0) / ticks)
+    return best * 1e3
+
+
+def _e2e_gate():
+    pairs = {}
+    for codec in ("quant8", "sparse:0.25"):
+        rts = {"fused": _build(codec, fused=True),
+               "eager": _build(codec, fused=False)}
+        for rt in rts.values():
+            rt.run(3)   # compile + warm every trace outside the timed window
+        ms = {}
+        # interleave the two runtimes so box noise hits both alike
+        best = {k: float("inf") for k in rts}
+        for _ in range(5):
+            for k, rt in rts.items():
+                t0 = time.perf_counter()
+                rt.run(10)
+                best[k] = min(best[k], (time.perf_counter() - t0) / 10)
+        ms = {k: v * 1e3 for k, v in best.items()}
+        speedup = ms["eager"] / ms["fused"]
+        tag = codec.partition(":")[0]
+        emit(f"wire_path/e2e_tick/{tag}/fused", ms["fused"] * 1e3,
+             f"ms_per_tick={ms['fused']:.2f}")
+        emit(f"wire_path/e2e_tick/{tag}/eager", ms["eager"] * 1e3,
+             f"ms_per_tick={ms['eager']:.2f}")
+        gate = speedup >= GATE_E2E_SPEEDUP if tag == "quant8" else True
+        emit(f"wire_path/e2e_speedup/{tag}", 0.0,
+             f"fused_vs_eager={speedup:.2f}x;gate>=2x;pass={gate}",
+             speedup=round(speedup, 3), gate=GATE_E2E_SPEEDUP,
+             gate_pass=bool(gate))
+        pairs[tag] = speedup
+        # the fused path really fused: every frame went through the
+        # codec-fused executable, none fell back
+        qb = rts["fused"].stats()["query_batching"]
+        assert qb["fused_frames"] > 0 and qb["sequential_frames"] == 0
+    return pairs
+
+
+def _sparse_kernel_gate():
+    x = jax.random.normal(jax.random.PRNGKey(0), LM_SHAPE)
+    x = jnp.where(jax.random.uniform(jax.random.PRNGKey(1), LM_SHAPE) < 0.25,
+                  x, 0.0).reshape(-1)
+    cap = int(x.size * 0.25)
+
+    def enc():
+        return jax.block_until_ready(kops.sparse_enc(x, cap))
+    enc()
+    t0 = time.perf_counter()
+    n = 10
+    for _ in range(n):
+        enc()
+    us = (time.perf_counter() - t0) / n * 1e6
+    speedup = PR4_SPARSE_ENC_US / us
+    emit("wire_path/sparse_enc_per_tensor", us,
+         f"pr4_baseline_us={PR4_SPARSE_ENC_US};speedup={speedup:.1f}x;"
+         f"gate>=10x;pass={speedup >= GATE_SPARSE_SPEEDUP}",
+         speedup=round(speedup, 2), gate=GATE_SPARSE_SPEEDUP,
+         gate_pass=bool(speedup >= GATE_SPARSE_SPEEDUP))
+    return speedup
+
+
+def _batched_codec_dispatch():
+    """Informational: one stacked dispatch vs batch x per-frame dispatches,
+    at the query-request frame size the scheduler actually batch-encodes
+    (the gain is dispatch amortization; at multi-MB pub/sub frames the
+    host fetch dominates instead, which is why only the query round path
+    uses encode_batch — pub/sub publishes stay eager)."""
+    from repro.core import StreamBuffer, compression as comp
+    frames = [StreamBuffer(tensors=(jax.random.normal(
+        jax.random.PRNGKey(i), (192,)),), pts=jnp.int32(i))
+        for i in range(N_CLIENTS)]
+
+    def loop():
+        return [comp.encode(f, "quant8") for f in frames]
+
+    def batched():
+        return comp.encode_batch(frames, "quant8")
+
+    for fn in (loop, batched):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready([e.tensors[0].q for e, _ in loop()])
+    t_loop = (time.perf_counter() - t0) / 5
+    t0 = time.perf_counter()
+    for _ in range(5):
+        batched()   # encode_batch fetches to host internally
+    t_batch = (time.perf_counter() - t0) / 5
+    emit("wire_path/encode_batch8/quant8", t_batch * 1e6,
+         f"per_frame_loop_us={t_loop * 1e6:.0f};"
+         f"speedup={t_loop / t_batch:.2f}x")
+
+
+def run():
+    speedups = _e2e_gate()
+    sparse_speedup = _sparse_kernel_gate()
+    _batched_codec_dispatch()
+    if speedups["quant8"] < GATE_E2E_SPEEDUP:
+        raise AssertionError(
+            f"wire-path gate failed: quant8 fused e2e "
+            f"{speedups['quant8']:.2f}x < {GATE_E2E_SPEEDUP}x")
+    if sparse_speedup < GATE_SPARSE_SPEEDUP:
+        raise AssertionError(
+            f"sparse encode gate failed: {sparse_speedup:.1f}x < "
+            f"{GATE_SPARSE_SPEEDUP}x vs PR-4 baseline")
+
+
+if __name__ == "__main__":
+    run()

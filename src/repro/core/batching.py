@@ -50,6 +50,22 @@ correct — and picks the faster for that size thereafter; ``"always"`` /
 ``"never"`` force the choice (tests force ``"always"`` to pin the sharded
 path's semantics regardless of host speed).  Placement stays transparent to
 elements and clients, NNStreamer-style: only latency changes.
+
+Fused wire path (DESIGN.md §5, default on): the batcher does NOT decode
+requests at gather time.  Wire-form requests group by **(codec, wire
+structure)** — consecutive, same as mixed-structure grouping, and since a
+codec determines its wire pytree this subsumes the old mixed-codec
+stacking — and each group serves through the codec-fused executable
+(``plan.compiled_serve_batch(codec=...)``): per-request decode, stacked
+scan, and per-frame answer re-encode all inside ONE jit.  Routing meta is
+hoisted on the host exactly as before; the stacked wire answers are fetched
+with ONE device_get, split as numpy, and pushed through the serversink's
+wire-level route (``push_wire`` — byte accounting from static shapes, no
+sync); deferred sparse-truncation counts ride out of the jit as one array
+and sync once per flush.  Groups a mesh may take keep the PR-4 eager wire
+path (host decode → placement probe → sharded serve → host encode), so the
+sharding guarantees are untouched; ``fused=False`` restores the eager path
+everywhere (the benchmark baseline).
 """
 from __future__ import annotations
 
@@ -58,7 +74,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 
-from .buffers import StreamBuffer
+from .buffers import StreamBuffer, structure_key, unstack_buffers
 from .query import QueryServerEndpoint
 from . import compression as comp
 
@@ -112,7 +128,7 @@ class QueryBatcher:
     def __init__(self, endpoint: QueryServerEndpoint, run: Any,
                  policy: BatchingPolicy,
                  inline_step: Optional[Callable[[], Any]] = None,
-                 mesh=None, shard_mode: str = "auto"):
+                 mesh=None, shard_mode: str = "auto", fused: bool = True):
         if shard_mode not in ("auto", "always", "never"):
             raise ValueError(f"shard_mode {shard_mode!r} not in "
                              f"('auto', 'always', 'never')")
@@ -120,6 +136,8 @@ class QueryBatcher:
         self.run = run
         self.policy = policy
         self.inline_step = inline_step
+        #: codec-fused serving (module docstring); False = PR-4 eager codec
+        self.fused = fused
         #: jax Mesh to lay batches out on (None = single-device serving)
         self.mesh = mesh
         #: sharded-executable placement policy (module docstring)
@@ -139,6 +157,8 @@ class QueryBatcher:
         self.sequential_frames = 0
         self.sharded_batches = 0
         self.sharded_frames = 0
+        self.fused_batches = 0
+        self.fused_frames = 0
 
     # -- public API ------------------------------------------------------------
     def pending(self) -> int:
@@ -181,9 +201,29 @@ class QueryBatcher:
                 served += n
                 continue
             raws = self.endpoint.requests.pop_n(self.policy.max_batch)
-            for group in self._group(raws):
-                self._serve_batched(group)
-                served += len(group)
+            if self.fused:
+                for pairs, codec in self._group_wire(raws):
+                    if codec.partition(":")[0] == "none" or \
+                            self._mesh_may_take(len(pairs)):
+                        # nothing to fuse for "none" (decode/encode are
+                        # identity — the fused executable would only add a
+                        # per-flush answer fetch), and mesh placement needs
+                        # dense frames (probe + sharded executable): both
+                        # keep the eager wire path per PR-4, lazy answers —
+                        # but the request decode still batches into one
+                        # stacked dispatch
+                        decoded = comp.decode_batch(
+                            [clean for clean, _ in pairs], codec)
+                        self._serve_batched(
+                            [(dec, routing) for dec, (_, routing)
+                             in zip(decoded, pairs)])
+                    else:
+                        self._serve_batched_wire(pairs, codec)
+                    served += len(pairs)
+            else:
+                for group in self._group(raws):
+                    self._serve_batched(group)
+                    served += len(group)
         if served:
             self.flushes += 1
         return served
@@ -204,10 +244,7 @@ class QueryBatcher:
 
     @staticmethod
     def _structure(buf: StreamBuffer) -> Tuple:
-        leaves, treedef = jax.tree_util.tree_flatten(buf)
-        return (treedef, tuple((getattr(l, "shape", ()),
-                                str(getattr(l, "dtype", type(l))))
-                               for l in leaves))
+        return structure_key(buf)
 
     def _group(self, raws: List[StreamBuffer]):
         """Split decoded requests into consecutive same-structure groups,
@@ -224,6 +261,54 @@ class QueryBatcher:
                 groups.append([(clean, routing)])
                 last_key = key
         return groups
+
+    def _group_wire(self, raws: List[StreamBuffer]):
+        """Fused-path grouping: consecutive same-(codec, WIRE structure)
+        runs of raw requests, arrival order preserved — no host decode.
+        The codec is part of the key because it is the fused executable's
+        static trace parameter (and two codecs' wire pytrees differ
+        anyway), so mixed-codec batches split exactly like mixed-structure
+        batches always have.  Yields ``([(clean_wire, routing), ...],
+        codec)`` — the hoisted pairs the key was built from, so serving
+        never re-hoists."""
+        groups: List[Tuple[List[Tuple[StreamBuffer, Dict]], str]] = []
+        last_key = None
+        for raw in raws:
+            codec = raw.meta.get("codec", "none")
+            pair = self._hoist_wire(raw)
+            key = (codec, self._structure(pair[0]))
+            if groups and key == last_key:
+                groups[-1][0].append(pair)
+            else:
+                groups.append(([pair], codec))
+                last_key = key
+        return groups
+
+    def _hoist_wire(self, raw: StreamBuffer) -> Tuple[StreamBuffer, Dict]:
+        """Routing hoist for a WIRE request: strip routing meta (as always)
+        plus the wire-form meta — ``codec`` becomes the group's static
+        trace parameter and ``sparse_dropped`` differs per frame, either
+        would make same-shaped requests structurally unstackable."""
+        routing = {k: raw.meta[k] for k in _ROUTING_KEYS if k in raw.meta}
+        keep = {k: v for k, v in raw.meta.items()
+                if k not in _ROUTING_KEYS and k not in comp._WIRE_META}
+        return raw.with_(meta=keep), routing
+
+    def _mesh_may_take(self, n: int) -> bool:
+        """Whether mesh placement might claim this group — those groups
+        need host-decoded dense frames (calibration probe + sharded
+        executable input), so they keep the eager wire path.  A batch size
+        whose calibrated placement already said "single" is NOT claimed:
+        forfeiting codec fusion there would re-pay the eager per-frame
+        codec cost for nothing (only the first, probe-carrying flush of a
+        size goes eager in auto mode)."""
+        if self.mesh is None or self.shard_mode == "never":
+            return False
+        if not self.run.pipe.plan.shardable_batch(n, self.run.state,
+                                                  self.mesh):
+            return False
+        return self.shard_mode == "always" or \
+            self.placements.get(n) != "single"
 
     # -- serving ---------------------------------------------------------------
     def _serve_sequential(self):
@@ -315,6 +400,61 @@ class QueryBatcher:
             run.bursts += 1
             run.burst_frames += n
 
+    def _serve_batched_wire(self, pairs: List[Tuple[StreamBuffer, Dict]],
+                            codec: str):
+        """One codec-fused dispatch over a same-(codec, structure) group of
+        hoisted ``(clean_wire, routing)`` pairs: the requests go into the
+        jit in WIRE form; decode, stacked scan and answer re-encode all
+        happen inside ``serve_batch_wire``; the stacked wire answers come
+        back in ONE device fetch (plus the deferred sparse-truncation
+        counts — one sync per flush, not per tensor) and are routed as
+        numpy frames through the serversink's wire-level push, with routing
+        meta and the loss signal restored host-side.  Byte accounting is
+        computed from static payload shapes."""
+        run = self.run
+        plan = run.pipe.plan
+        n = len(pairs)
+        src = plan.query_sources[0].name
+        frames_in = tuple({src: clean} for clean, _ in pairs)
+        serve = plan.compiled_serve_batch(codec=codec)
+        (wire_outs, app_outs, dropped), run.state = serve(
+            run.params, run.state, frames_in)
+        wire_outs, app_outs, dropped = jax.device_get(
+            (wire_outs, app_outs, dropped))
+        base_codec = codec.partition(":")[0]
+        wire_frames = {name: unstack_buffers(b, n)
+                       for name, b in wire_outs.items()}
+        app_frames = {name: unstack_buffers(b, n)
+                      for name, b in app_outs.items()}
+        for i, (_, routing) in enumerate(pairs):
+            for name, frames in wire_frames.items():
+                wb = frames[i]
+                # per-sink deferred loss accounting: each sink's answer
+                # carries ITS OWN truncation count, as the eager per-buffer
+                # encode would stamp it
+                frame_dropped = (comp.account_sparse_dropped(
+                    dropped[name][:, i]) if name in dropped else 0)
+                # meta layering matches the eager path: scan answer meta,
+                # then routing, then the wire-form claims encode would stamp
+                meta = {**wb.meta, **routing, "codec": base_codec}
+                if frame_dropped:
+                    meta["sparse_dropped"] = frame_dropped
+                wb = wb.with_(meta=meta)
+                run.pipe.elements[name].push_wire(
+                    wb, comp.wire_nbytes(wb), routing["client_id"])
+            outs_i = {name: frames[i] for name, frames in app_frames.items()}
+            for name, buf in outs_i.items():
+                run.sink_log.setdefault(name, []).append(buf)
+            run.last_outputs = outs_i
+            run.frames += 1
+        self.batched_frames += n
+        self.fused_batches += 1
+        self.fused_frames += n
+        if n > 1:
+            self.batches += 1
+            run.bursts += 1
+            run.burst_frames += n
+
     def _route(self, frame_outs: Dict[str, StreamBuffer], routing: Dict):
         """Deliver one frame's captured outputs: serversink answers replay
         through the element's real apply (encode + client-channel push) with
@@ -337,4 +477,6 @@ class QueryBatcher:
                 "batched_frames": self.batched_frames,
                 "sequential_frames": self.sequential_frames,
                 "sharded_batches": self.sharded_batches,
-                "sharded_frames": self.sharded_frames}
+                "sharded_frames": self.sharded_frames,
+                "fused_batches": self.fused_batches,
+                "fused_frames": self.fused_frames}

@@ -19,8 +19,20 @@ import numpy as np
 
 from .formats import MAX_RANK, TensorFormat, TensorSpec, dtype_to_tag, tag_to_dtype
 
-__all__ = ["FlexHeader", "SparsePayload", "StreamBuffer", "flex_wrap",
-           "flex_unwrap", "stack_buffers", "unstack_buffers"]
+__all__ = ["FlexHeader", "Quant8Payload", "SparsePayload", "StreamBuffer",
+           "flex_wrap", "flex_unwrap", "stack_buffers", "unstack_buffers",
+           "structure_key"]
+
+
+def structure_key(tree) -> Tuple:
+    """Hashable (treedef, leaf shapes/dtypes) key: two pytrees with equal
+    keys stack into one batch (same structure AND same trace signature).
+    The grouping key of the query batcher, the scheduler's codec rounds,
+    and the pub/sub burst decoder."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (treedef, tuple((getattr(l, "shape", ()),
+                            str(getattr(l, "dtype", type(l))))
+                           for l in leaves))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -67,6 +79,43 @@ class SparsePayload:
 
 @jax.tree_util.register_pytree_node_class
 @dataclass
+class Quant8Payload:
+    """quant8 wire form: int8 tiles + per-(32,128)-tile f32 scales.
+
+    A proper pytree (arrays as children, framing header as static aux) so
+    WIRE buffers trace through jitted serving — the fused batched wire path
+    decodes requests and re-encodes answers inside one compiled dispatch.
+    ``__getitem__`` keeps the legacy dict-style field access."""
+
+    q: jnp.ndarray        # int8 [Mp, Np] padded tile layout
+    scale: jnp.ndarray    # f32  [Mp/32, Np/128]
+    dtype: str = "float32"                       # static aux: source dtype
+    shape: Tuple[int, ...] = field(default=())   # static aux: source shape
+    view2d: Tuple[int, int] = (1, 1)             # static aux: logical 2d view
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.dtype, self.shape, self.view2d)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, dtype=aux[0], shape=aux[1], view2d=aux[2])
+
+    def __getitem__(self, key):
+        return getattr(self, key)
+
+    @property
+    def wire_nbytes(self) -> int:
+        """Bytes actually transmitted: 1 per LOGICAL element + 4 per scale
+        (the padded tile layout is a kernel-side detail, not wire format).
+        Static — derivable with no device sync, even on traced payloads."""
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n + int(np.prod(self.scale.shape)) * 4
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
 class StreamBuffer:
     """One frame on a pad. ``tensors`` maps 1:1 onto the pad caps' TensorSpecs.
 
@@ -108,7 +157,7 @@ class StreamBuffer:
     def nbytes(self) -> int:
         n = 0
         for t in self.tensors:
-            if isinstance(t, SparsePayload):
+            if isinstance(t, (SparsePayload, Quant8Payload)):
                 n += t.wire_nbytes
             else:
                 n += t.size * t.dtype.itemsize

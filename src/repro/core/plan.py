@@ -44,6 +44,18 @@ back to the single-device scan — sharding never changes semantics, only
 where frames execute.  Compiled executables are cached per (fingerprint,
 mesh identity): reconnecting after failover with the same mesh never
 retraces.
+
+Fused wire path (DESIGN.md §5): ``serve_batch_wire`` serves a batch of
+WIRE-form requests — per-request decode, stacked scan, and per-frame
+re-encode of the answers all inside ONE jit (``compiled_serve_batch(codec=
+...)``), with the codec as a static trace parameter.  The executable-cache
+key carries the codec fingerprint, so codec-fused and plain executables
+never collide.  ``run_deferred_compiled`` is the client-side counterpart:
+pipelines whose only impure elements are their query clients run each
+deferred SEGMENT (start → first client, client → client, client → end) as
+one jitted dispatch instead of an interpreted per-element walk — bitwise
+the interpreted deferral, minus the per-element dispatch overhead that made
+batched e2e ticks slower than sequential ones.
 """
 from __future__ import annotations
 
@@ -178,6 +190,15 @@ class ExecutionPlan:
             and all(getattr(e, "is_query_source", False)
                     or getattr(e, "is_query_sink", False) for e in impure)
             and all(op.is_query_src for op in ops if not op.in_slots))
+        #: op indices of the query clients, in schedule order (the deferred
+        #: walk's pause points — static, because topology is static)
+        self.client_idxs = tuple(i for i, op in enumerate(ops)
+                                 if op.is_query_client)
+        #: every impure element is a query client: the segments BETWEEN
+        #: pause points are pure and each can run as one jitted dispatch
+        #: (run_deferred_compiled) instead of an interpreted walk
+        self.deferred_compilable = bool(self.client_idxs) and all(
+            getattr(e, "is_query_client", False) for e in impure)
         self.fingerprint = self._fingerprint(order, links)
 
     @staticmethod
@@ -398,6 +419,63 @@ class ExecutionPlan:
                     for i in range(n))
         return per, final
 
+    def serve_batch_wire(self, params: dict, state: dict, wire_frames: Tuple,
+                         codec: str) -> Tuple[Tuple, dict]:
+        """Codec-fused :meth:`serve_batch`: the whole wire path of a batch —
+        per-request decode, stacked scan, per-frame re-encode of the query
+        answers — in one traced unit (DESIGN.md §5).
+
+        ``wire_frames`` is a tuple of ``{serversrc_name: wire StreamBuffer}``
+        dicts with identical pytree structure and one shared static
+        ``codec`` (the batcher groups by codec exactly like it groups by
+        structure).  Returns ``((stacked_wire_answers, stacked_app_outs,
+        dropped), final_state)``:
+
+        * ``stacked_wire_answers`` — ``{sink_name: wire StreamBuffer}`` with
+          a leading frame axis; frame ``i`` of every payload is bitwise
+          what the eager path (decode → serve → ``encode``) produces;
+        * ``stacked_app_outs`` — non-query-sink outputs, stacked;
+        * ``dropped`` — ``{sink_name: int32 [tensors, frames]}`` deferred
+          sparse truncation counts, PER SINK (empty unless the codec is
+          sparse): the caller syncs ONCE per flush and stamps each sink's
+          own ``meta["sparse_dropped"]`` / codec stats host-side — the
+          per-buffer loss signal the eager serversink encode produces,
+          without its one sync per tensor.
+
+        Answers stay stacked at the jit boundary (the PR-4 lesson: per-frame
+        outputs cost a dispatch per leaf per frame; the host fetches the
+        stack once and splits as numpy)."""
+        from . import compression as comp
+        n = len(wire_frames)
+        src = self.query_sources[0].name
+        stacked_wire = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[f[src] for f in wire_frames])
+        dense = comp.decode_stacked(stacked_wire, codec)
+        if n == 1:
+            # one frame: run the DAG directly (a length-1 scan drags
+            # while-loop machinery into the trace for nothing — the same
+            # choice serve_batch makes)
+            frame = jax.tree_util.tree_map(lambda l: l[0], dense)
+            outs, final = self.run(params, state, {src: frame},
+                                   hoist_io=True, hoist_queries=True)
+            outs = jax.tree_util.tree_map(lambda l: l[None], outs)
+        else:
+            outs, final = self.step_n(params, state, {src: dense},
+                                      hoist_io=True, hoist_queries=True)
+        sink_names = {e.name for e in self.query_sinks}
+        wire_outs: Dict[str, StreamBuffer] = {}
+        app_outs: Dict[str, StreamBuffer] = {}
+        dropped: Dict[str, Any] = {}
+        for name, buf in outs.items():
+            if name in sink_names:
+                w, drp = comp.encode_stacked(buf, codec)
+                wire_outs[name] = w
+                if drp is not None:
+                    dropped[name] = drp
+            else:
+                app_outs[name] = buf
+        return (wire_outs, app_outs, dropped), final
+
     # -- compiled executables --------------------------------------------------
     def _cache(self) -> Dict[str, Any]:
         ent = _EXEC_CACHE.get(self.fingerprint)
@@ -459,13 +537,23 @@ class ExecutionPlan:
         return fns[key]
 
     def compiled_serve_batch(self, donate: Optional[bool] = None,
-                             mesh=None) -> Callable:
+                             mesh=None, codec: Optional[str] = None
+                             ) -> Callable:
         """Jitted :meth:`serve_batch` ``(params, state, frames_tuple) ->
         (per-frame outputs tuple, final state)``.  The batch size lives in
         the input pytree structure, so each distinct size traces once per
         fingerprint and is cached thereafter (the QueryBatcher caps sizes
         at ``max_batch``, keeping the trace set tiny).  ``mesh`` extends the
         cache key exactly like :meth:`compiled_step_n`.
+
+        ``codec`` (static) selects the codec-FUSED executable instead: a
+        jitted :meth:`serve_batch_wire` ``(params, state, wire_frames) ->
+        ((stacked wire answers, stacked app outs, dropped), final)``.  The
+        cache key carries the codec fingerprint, so codec-fused and plain
+        executables never collide — and neither do two codecs (quant8 and
+        sparse trace different wire pytrees).  Codec fusion composes with
+        single-device serving only; mesh placement keeps the PR-4 eager
+        wire path (the batcher decides per group).
 
         The mesh executable moves the stack/split to the HOST (numpy, zero
         XLA dispatches) and keeps the jit boundary stacked-and-sharded:
@@ -477,8 +565,17 @@ class ExecutionPlan:
         executable inside the same callable."""
         donate = self._resolve_donate(donate)
         fns = self._cache()["fns"]
-        key = ("serve_batch", donate, self._mesh_key(mesh))
+        key = ("serve_batch", donate, self._mesh_key(mesh), codec)
         if key in fns:
+            return fns[key]
+        if codec is not None:
+            if mesh is not None:
+                raise ValueError("codec-fused serving is single-device; "
+                                 "mesh groups keep the eager wire path")
+            def serve_wire(params, state, frames, _self=self, _codec=codec):
+                return _self.serve_batch_wire(params, state, frames, _codec)
+            fns[key] = jax.jit(serve_wire,
+                               donate_argnums=(1,) if donate else ())
             return fns[key]
         if mesh is None:
             def serve_batch(params, state, frames, _self=self):
@@ -513,6 +610,85 @@ class ExecutionPlan:
         fns[key] = serve_sharded
         return fns[key]
 
+    # -- compiled deferred segments --------------------------------------------
+    def _next_client(self, after: int) -> Optional[int]:
+        for i in self.client_idxs:
+            if i > after:
+                return i
+        return None
+
+    def _live_slots(self, pause_idx: int) -> Tuple[int, ...]:
+        """Value slots that must survive a pause at ``pause_idx``: written
+        by an op before the pause AND read by an op after it.  Static —
+        the schedule is topology-fixed — so segment jits carry exactly the
+        live values and nothing else."""
+        written = {s for op in self.ops[:pause_idx]
+                   for s in op.out_slots if s >= 0}
+        read = {s for op in self.ops[pause_idx + 1:] for s in op.in_slots}
+        return tuple(sorted(written & read))
+
+    def _deferred_segment(self, start: Optional[int]) -> Callable:
+        """Pure segment of the deferred walk as one traceable function:
+        ``start=None`` runs op 0 → the first query client; ``start=j``
+        injects the answer for the client at op ``j`` and runs to the next
+        client or the end.  Where the segment stops is static (topology),
+        so the caller knows the return shape without looking:
+
+        * pauses again → ``(request, live_vals, outputs, next_state)``
+        * completes    → ``(outputs, next_state)``
+        """
+        def seg(params, state, next_state, live_vals, answer, inputs):
+            ctx = PipelineContext(state)
+            ctx.next_state = dict(next_state)
+            vals: List[Any] = [None] * self.n_slots
+            outputs: Dict[str, StreamBuffer] = {}
+            if start is None:
+                begin = 0
+            else:
+                for s, v in zip(self._live_slots(start), live_vals):
+                    vals[s] = v
+                op = self.ops[start]
+                if op.out_slots and op.out_slots[0] >= 0:
+                    vals[op.out_slots[0]] = answer
+                if op.is_sink:
+                    outputs[op.name] = answer
+                begin = start + 1
+            res = self._exec_ops(params, ctx, vals, outputs, inputs, begin,
+                                 hoist_io=False, hoist_queries=False,
+                                 defer_queries=True)
+            if res is None:
+                return outputs, ctx.next_state
+            idx, request = res
+            live = tuple(vals[s] for s in self._live_slots(idx))
+            return request, live, outputs, ctx.next_state
+        return seg
+
+    def compiled_deferred_segment(self, start: Optional[int]) -> Callable:
+        """Jitted :meth:`_deferred_segment`, cached in the fingerprint-keyed
+        registry (failover reconnects of a structurally identical client
+        pipeline never retrace its segments)."""
+        fns = self._cache()["fns"]
+        key = ("defer_seg", -1 if start is None else start)
+        if key not in fns:
+            fns[key] = jax.jit(self._deferred_segment(start))
+        return fns[key]
+
+    def run_deferred_compiled(self, params: dict, state: dict,
+                              inputs: Optional[Dict[str, StreamBuffer]] = None):
+        """Compiled counterpart of :meth:`run_deferred` for plans whose only
+        impure elements are query clients (:attr:`deferred_compilable`):
+        the walk to the first client is ONE jitted dispatch instead of an
+        interpreted per-element walk — bitwise the same frame, minus the
+        eager dispatch overhead per element.  Returns a compiled-mode
+        :class:`PendingQuery` (its ``resume`` runs jitted segments too)."""
+        inputs = inputs or {}
+        fn = self.compiled_deferred_segment(None)
+        request, live, outputs, next_state = fn(params, state, state,
+                                                (), None, inputs)
+        return PendingQuery.compiled(self, params, inputs, state, next_state,
+                                     live, outputs, self.client_idxs[0],
+                                     request)
+
 
 class PendingQuery:
     """A frame paused mid-schedule at a query client, awaiting its answer.
@@ -529,10 +705,17 @@ class PendingQuery:
     answering, the scheduler re-dispatches the very same ``request`` to the
     next-ranked survivor (``redispatches`` counts the hops) or parks the
     frame until one registers — see DESIGN.md §3.
+
+    Two execution modes, bitwise-identical: the interpreted mode carries the
+    live walk (``ctx``/``vals``) and resumes element by element; the
+    COMPILED mode (``run_deferred_compiled``) carries only the live slot
+    values plus the state pytrees, and ``resume`` runs the next pure
+    segment as one jitted dispatch.
     """
 
     __slots__ = ("plan", "params", "inputs", "ctx", "vals", "outputs",
-                 "op_idx", "request", "endpoint", "redispatches")
+                 "op_idx", "request", "endpoint", "redispatches",
+                 "state", "next_state", "live", "is_compiled")
 
     def __init__(self, plan: ExecutionPlan, params: dict, inputs: dict,
                  ctx: PipelineContext, vals: List[Any],
@@ -550,6 +733,23 @@ class PendingQuery:
         self.endpoint = None
         #: failover hops this frame survived (scheduler-owned)
         self.redispatches = 0
+        # compiled-mode fields (PendingQuery.compiled)
+        self.state = None
+        self.next_state = None
+        self.live = ()
+        self.is_compiled = False
+
+    @classmethod
+    def compiled(cls, plan: ExecutionPlan, params: dict, inputs: dict,
+                 state: dict, next_state: dict, live: Tuple,
+                 outputs: Dict[str, StreamBuffer], op_idx: int,
+                 request: StreamBuffer) -> "PendingQuery":
+        pq = cls(plan, params, inputs, None, [], outputs, op_idx, request)
+        pq.state = state
+        pq.next_state = next_state
+        pq.live = live
+        pq.is_compiled = True
+        return pq
 
     @property
     def client(self):
@@ -559,6 +759,8 @@ class PendingQuery:
     def resume(self, answer: StreamBuffer):
         """Inject the server's answer as the paused client's output and run
         the rest of the schedule."""
+        if self.is_compiled:
+            return self._resume_compiled(answer)
         op = self.plan.ops[self.op_idx]
         if op.out_slots and op.out_slots[0] >= 0:
             self.vals[op.out_slots[0]] = answer
@@ -572,4 +774,23 @@ class PendingQuery:
             return self.outputs, self.ctx.next_state
         self.op_idx, self.request = res
         self.endpoint = None  # the next client's request is not yet in flight
+        return self
+
+    def _resume_compiled(self, answer: StreamBuffer):
+        """One jitted dispatch for the segment after the paused client."""
+        plan = self.plan
+        fn = plan.compiled_deferred_segment(self.op_idx)
+        nxt = plan._next_client(self.op_idx)
+        res = fn(self.params, self.state, self.next_state, self.live,
+                 answer, self.inputs)
+        if nxt is None:
+            outputs, final = res
+            return {**self.outputs, **outputs}, final
+        request, live, outputs, next_state = res
+        self.op_idx = nxt
+        self.request = request
+        self.live = live
+        self.outputs = {**self.outputs, **outputs}
+        self.next_state = next_state
+        self.endpoint = None
         return self

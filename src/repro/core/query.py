@@ -142,11 +142,30 @@ class TensorQueryClient(Element):
         ep.requests.push(payload, nbytes)
         return ep
 
+    def send_query_wire(self, payload: StreamBuffer, nbytes: int,
+                        ep: QueryServerEndpoint) -> QueryServerEndpoint:
+        """Push an ALREADY-ENCODED request (fused wire path: the scheduler
+        encodes a whole dispatch round in one batched codec call, then
+        pushes per client).  Tags routing meta exactly like
+        :meth:`send_query`; the payload/nbytes must be what ``encode``
+        would have produced — bitwise, pinned by the codec batch tests."""
+        payload = payload.with_(meta={**payload.meta,
+                                      "client_id": self.client_id,
+                                      "codec": self.codec})
+        ep.requests.push(payload, nbytes)
+        return ep
+
+    def recv_answer_raw(self, ep: QueryServerEndpoint
+                        ) -> Optional[StreamBuffer]:
+        """Pop this client's WIRE-form answer without decoding (the
+        scheduler's drain batch-decodes a whole round in one dispatch)."""
+        return ep.client_channel(self.client_id).pop()
+
     def recv_answer_from(self, ep: QueryServerEndpoint
                          ) -> Optional[StreamBuffer]:
         """Pop this client's answer from a specific endpoint — the scheduler
         reads from the endpoint it dispatched to, never a rebound one."""
-        raw = ep.client_channel(self.client_id).pop()
+        raw = self.recv_answer_raw(ep)
         if raw is None:
             return None
         return comp.decode(raw, self.codec)
@@ -239,3 +258,10 @@ class TensorQueryServerSink(Element):
         payload, nbytes = comp.encode(buf, codec)
         self.serversrc.endpoint.client_channel(client_id).push(payload, nbytes)
         return []
+
+    def push_wire(self, payload: StreamBuffer, nbytes: int, client_id: int):
+        """Route an ALREADY-ENCODED answer (fused wire path: the batch was
+        re-encoded inside the serving jit; the batcher routes the wire
+        frames with meta restored host-side).  Same channel push and byte
+        accounting as :meth:`apply`."""
+        self.serversrc.endpoint.client_channel(client_id).push(payload, nbytes)

@@ -1,30 +1,53 @@
 """jit'd public wrappers over the Pallas stream-codec kernels.
 
-Handles shape canonicalization (padding to tile multiples), the
-interpret-mode switch (Pallas executes the kernel body in Python on CPU;
-compiled on TPU), and the block-COO capacity bookkeeping.  ``ref.py`` holds
-the pure-jnp oracles the kernels are tested against.
+Handles shape canonicalization (padding to tile multiples), backend
+dispatch, and the block-COO capacity bookkeeping.  ``ref.py`` holds the
+pure-jnp oracles the kernels are tested against.
+
+Backend dispatch (``impl``): on TPU silicon the Pallas kernels run
+compiled; everywhere else Pallas only *interprets* — a Python loop per
+grid step — which made the codec layer the slowest thing on the wire path
+(~100 ms per sparse encode of one LM-activation frame).  Each kernel
+module therefore carries a vectorized XLA statement of the identical
+contract (``*_xla``), bitwise-equal to the kernel and ~10-40× faster under
+jit on CPU; ``impl=None`` picks per backend, tests force either.
+
+Stacked entry points (``*_stacked``): the codecs' tile/block framing is
+*local* — quant8 scales live per (32, 128) tile and sparse COO slots per
+512-element block — so a whole batch of same-shape tensors encodes in ONE
+kernel dispatch by merging the batch axis into the tile/block axis (frame
+boundaries land on tile/block boundaries by construction).  The merged
+call is bitwise what per-frame calls produce, which is what lets a
+QueryBatcher flush encode/decode ``batch × tensors`` payloads in one
+dispatch — or inside one jit — without touching numerics.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from . import ref
-from .quant8 import dequantize8_pallas, quantize8_pallas
+from .quant8 import (dequantize8_pallas, dequantize8_xla, quantize8_pallas,
+                     quantize8_xla)
 from .ref import QUANT_BM, QUANT_BN, SPARSE_B, _sparse_dims
-from .sparse_dec import sparse_dec_pallas
-from .sparse_enc import sparse_enc_pallas
+from .sparse_dec import sparse_dec_pallas, sparse_dec_xla
+from .sparse_enc import sparse_enc_pallas, sparse_enc_xla
 
-__all__ = ["quantize8", "dequantize8", "sparse_enc", "sparse_dec", "use_interpret"]
+__all__ = ["quantize8", "dequantize8", "sparse_enc", "sparse_dec",
+           "quantize8_stacked", "dequantize8_stacked", "sparse_enc_stacked",
+           "sparse_dec_stacked", "use_interpret"]
 
 
 def use_interpret() -> bool:
     """Pallas interpret mode everywhere except a real TPU backend."""
     return jax.default_backend() != "tpu"
+
+
+def _impl(impl) -> str:
+    if impl is None:
+        return "xla" if use_interpret() else "pallas"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"impl {impl!r} not in ('pallas', 'xla')")
+    return impl
 
 
 def _as2d(x: jnp.ndarray):
@@ -37,24 +60,78 @@ def _as2d(x: jnp.ndarray):
     return x
 
 
-def quantize8(x: jnp.ndarray):
+def _pad_tiles(x2: jnp.ndarray):
+    m, n = x2.shape[-2:]
+    pm, pn = (-m) % QUANT_BM, (-n) % QUANT_BN
+    if pm or pn:
+        pad = [(0, 0)] * (x2.ndim - 2) + [(0, pm), (0, pn)]
+        x2 = jnp.pad(x2, pad)
+    return x2
+
+
+def quantize8(x: jnp.ndarray, impl=None):
     """Any-shape float array -> (q int8 [Mp,Np], scales f32 [Mp/BM, Np/BN]).
 
     The original shape is the caller's to remember (compression.py keeps it
     in the codec header, like any wire format)."""
-    x2 = _as2d(x.astype(jnp.float32))
-    m, n = x2.shape
-    pm, pn = (-m) % QUANT_BM, (-n) % QUANT_BN
-    if pm or pn:
-        x2 = jnp.pad(x2, ((0, pm), (0, pn)))
+    x2 = _pad_tiles(_as2d(x.astype(jnp.float32)))
+    if _impl(impl) == "xla":
+        return quantize8_xla(x2)
     return quantize8_pallas(x2, interpret=use_interpret())
 
 
-def dequantize8(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+def dequantize8(q: jnp.ndarray, scales: jnp.ndarray, impl=None) -> jnp.ndarray:
+    if _impl(impl) == "xla":
+        return dequantize8_xla(q, scales)
     return dequantize8_pallas(q, scales, interpret=use_interpret())
 
 
-def sparse_enc(flat: jnp.ndarray, cap: int, threshold: float = 0.0):
+def quantize8_stacked(x: jnp.ndarray, impl=None):
+    """Stacked frames [B, *shape] -> (q int8 [B, Mp, Np], scales
+    [B, Mp/BM, Np/BN]) in ONE kernel dispatch.
+
+    Frame i's slice is bitwise ``quantize8(x[i])``: frames are merged along
+    the tile-row axis after padding, so every (32, 128) tile — and with it
+    every absmax scale — stays wholly inside its frame."""
+    b = x.shape[0]
+    # per-frame 2d view (same rules as _as2d on one frame)
+    fshape = x.shape[1:]
+    if len(fshape) == 0:
+        x3 = x.reshape(b, 1, 1)
+    elif len(fshape) == 1:
+        x3 = x.reshape(b, 1, fshape[0])
+    else:
+        x3 = x.reshape(b, -1, fshape[-1])
+    x3 = _pad_tiles(x3.astype(jnp.float32))
+    _, mp, np_ = x3.shape
+    q, s = (quantize8_xla(x3.reshape(b * mp, np_)) if _impl(impl) == "xla"
+            else quantize8_pallas(x3.reshape(b * mp, np_),
+                                  interpret=use_interpret()))
+    return (q.reshape(b, mp, np_),
+            s.reshape(b, mp // QUANT_BM, np_ // QUANT_BN))
+
+
+def dequantize8_stacked(q: jnp.ndarray, scales: jnp.ndarray,
+                        impl=None) -> jnp.ndarray:
+    """Inverse of :func:`quantize8_stacked`: [B, Mp, Np] int8 + [B, gm, gn]
+    scales -> [B, Mp, Np] f32, one dispatch, bitwise per-frame."""
+    b, mp, np_ = q.shape
+    _, gm, gn = scales.shape
+    x = dequantize8(q.reshape(b * mp, np_), scales.reshape(b * gm, gn),
+                    impl=impl)
+    return x.reshape(b, mp, np_)
+
+
+def _sparse_enc_blocks(flat: jnp.ndarray, kb: int, threshold: float, impl):
+    """Shared core: padded flat [nb*B] -> (vals, idxs, per-block counts)."""
+    if _impl(impl) == "xla":
+        return sparse_enc_xla(flat, kb=kb, threshold=float(threshold))
+    return sparse_enc_pallas(flat, kb=kb, threshold=float(threshold),
+                             interpret=use_interpret())
+
+
+def sparse_enc(flat: jnp.ndarray, cap: int, threshold: float = 0.0,
+               impl=None):
     """flat [N] -> (values [nb*kb], indices [nb*kb], nnz scalar int32).
 
     Block-COO semantics of ref.sparse_enc_ref; kb is lane-aligned from cap."""
@@ -63,17 +140,54 @@ def sparse_enc(flat: jnp.ndarray, cap: int, threshold: float = 0.0):
     pad = nb * SPARSE_B - n
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    vals, idxs, cnts = sparse_enc_pallas(
-        flat, kb=kb, threshold=float(threshold), interpret=use_interpret())
+    vals, idxs, cnts = _sparse_enc_blocks(flat, kb, threshold, impl)
     return vals, idxs, jnp.sum(cnts).astype(jnp.int32)
 
 
-def sparse_dec(values: jnp.ndarray, indices: jnp.ndarray, nnz, n: int) -> jnp.ndarray:
+def sparse_enc_stacked(x: jnp.ndarray, cap: int, threshold: float = 0.0,
+                       impl=None):
+    """Stacked flat frames [B, N] -> (values [B, nb*kb], indices
+    [B, nb*kb], nnz int32 [B]) in ONE dispatch.
+
+    The block-COO framing is per-512-block, so the batch axis merges into
+    the block axis: frame i's slice is bitwise ``sparse_enc(x[i], cap)``
+    (indices are rebased to each frame's own flat coordinates)."""
+    b, n = x.shape
+    nb, kb = _sparse_dims(n, cap)
+    pad = nb * SPARSE_B - n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    vals, idxs, cnts = _sparse_enc_blocks(x.reshape(-1), kb, threshold, impl)
+    off = (jnp.arange(b, dtype=jnp.int32) * (nb * SPARSE_B))[:, None]
+    return (vals.reshape(b, nb * kb),
+            idxs.reshape(b, nb * kb) - off,
+            jnp.sum(cnts.reshape(b, nb), axis=1).astype(jnp.int32))
+
+
+def sparse_dec(values: jnp.ndarray, indices: jnp.ndarray, nnz, n: int,
+               impl=None) -> jnp.ndarray:
     """Block-COO -> dense flat [n]."""
     del nnz
     total = int(values.shape[0])
     nb = -(-n // SPARSE_B)
     kb = total // nb
-    dense = sparse_dec_pallas(values.reshape(nb, kb), indices.reshape(nb, kb),
-                              interpret=use_interpret())
+    v2, i2 = values.reshape(nb, kb), indices.reshape(nb, kb)
+    dense = (sparse_dec_xla(v2, i2) if _impl(impl) == "xla"
+             else sparse_dec_pallas(v2, i2, interpret=use_interpret()))
     return dense[:n]
+
+
+def sparse_dec_stacked(values: jnp.ndarray, indices: jnp.ndarray, nnz,
+                       n: int, impl=None) -> jnp.ndarray:
+    """Stacked block-COO [B, nb*kb] -> dense [B, n], one dispatch, bitwise
+    per-frame (inverse of :func:`sparse_enc_stacked`)."""
+    del nnz
+    b, total = values.shape
+    nb = -(-n // SPARSE_B)
+    kb = total // nb
+    off = (jnp.arange(b, dtype=jnp.int32) * (nb * SPARSE_B))[:, None]
+    v2 = values.reshape(b * nb, kb)
+    i2 = (indices + off).reshape(b * nb, kb)
+    dense = (sparse_dec_xla(v2, i2) if _impl(impl) == "xla"
+             else sparse_dec_pallas(v2, i2, interpret=use_interpret()))
+    return dense.reshape(b, nb * SPARSE_B)[:, :n]

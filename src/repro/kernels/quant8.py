@@ -8,6 +8,11 @@ narrowing, not byte-level entropy coding).
 Tiling: (32, 128) blocks — int8 native tile on TPU (sublane 32 × lane 128);
 one f32 scale per tile.  Grid = (M/32, N/128); each program reads one VMEM
 tile, computes absmax, writes the quantized tile + its scale.
+
+:func:`quantize8_xla`/:func:`dequantize8_xla` are the bitwise-identical
+vectorized XLA statements of the same per-tile contract — the fast path
+``ops`` dispatches to off-TPU, where the Pallas interpreter pays a Python
+grid loop per (32, 128) tile (pinned by tests/test_wire_path.py).
 """
 from __future__ import annotations
 
@@ -69,3 +74,31 @@ def dequantize8_pallas(q: jnp.ndarray, scales: jnp.ndarray, *,
         out_shape=[jax.ShapeDtypeStruct((m, n), jnp.float32)],
         interpret=interpret,
     )(q, scales)[0]
+
+
+def _as_tiles(x: jnp.ndarray):
+    """[M, N] -> [gm, gn, BM, BN] tile view (M % BM == 0, N % BN == 0)."""
+    m, n = x.shape
+    gm, gn = m // QUANT_BM, n // QUANT_BN
+    return x.reshape(gm, QUANT_BM, gn, QUANT_BN).transpose(0, 2, 1, 3)
+
+
+def _from_tiles(t: jnp.ndarray):
+    gm, gn, bm, bn = t.shape
+    return t.transpose(0, 2, 1, 3).reshape(gm * bm, gn * bn)
+
+
+@jax.jit
+def quantize8_xla(x: jnp.ndarray):
+    """Same contract and bitwise-same outputs as :func:`quantize8_pallas`."""
+    tiles = _as_tiles(x.astype(jnp.float32))
+    amax = jnp.max(jnp.abs(tiles), axis=(2, 3))
+    scales = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.round(tiles / scales[:, :, None, None]).astype(jnp.int8)
+    return _from_tiles(q), scales
+
+
+@jax.jit
+def dequantize8_xla(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    tiles = _as_tiles(q).astype(jnp.float32) * scales[:, :, None, None]
+    return _from_tiles(tiles)

@@ -11,6 +11,12 @@ in VMEM, so we again use a one-hot MXU matmul:
 Empty slots carry (value=0, index=block_base): their one-hot row is real but
 the zero value contributes nothing — the "no-op scatter" trick that keeps
 the framing fixed-capacity and the kernel branch-free.
+
+Off-TPU the interpreter's per-block one-hot emulation is ~10× slower than
+XLA's native scatter-add, which IS the decode contract (real indices are
+unique within a block; empty slots add 0):  :func:`sparse_dec_xla` is the
+bitwise-identical fast path ``ops.sparse_dec`` dispatches to on non-TPU
+backends (pinned by tests/test_wire_path.py).
 """
 from __future__ import annotations
 
@@ -50,3 +56,13 @@ def sparse_dec_pallas(v2: jnp.ndarray, i2: jnp.ndarray, *, interpret: bool = Tru
         interpret=interpret,
     )(v2, i2)[0]
     return out.reshape(-1)
+
+
+@jax.jit
+def sparse_dec_xla(v2: jnp.ndarray, i2: jnp.ndarray):
+    """Scatter-add statement of the block decode: same signature and
+    bitwise-same output as :func:`sparse_dec_pallas` (each dense position
+    receives exactly one real value or only zero-valued empty slots)."""
+    nb, _ = v2.shape
+    dense = jnp.zeros((nb * SPARSE_B,), v2.dtype)
+    return dense.at[i2.reshape(-1)].add(v2.reshape(-1))

@@ -56,6 +56,20 @@ groups, stateful plans, and 1-device meshes serve exactly like
 batches' orphans identically (the mesh only places compute; the
 request/answer plumbing is untouched).
 
+Fused wire path (default on, ``fused_wire=True``, DESIGN.md §5): the whole
+codec/transport hot path of a tick runs batched.  Client pipelines whose
+only impure elements are their query clients start and resume through
+jitted deferred SEGMENTS (``plan.run_deferred_compiled``) instead of
+interpreted walks; a dispatch round gathers every freshly paused frame,
+encodes the requests per (codec, structure) group in ONE batched codec
+dispatch, and pushes in arrival order; each server flush serves wire-form
+groups through the codec-fused executable (decode → stacked scan → answer
+re-encode inside one jit, ``core/batching.py``); and the drain batch-
+decodes the round's answers per group before resuming.  Bitwise identical
+to the eager path at every seam (codec kernels batch by tile/block merge,
+segments jit the same program); ``fused_wire=False`` restores the PR-4
+eager wire path end to end — the benchmark baseline.
+
 Statistics (frames, drops, bytes, bursts, batches, redispatches, per-sink
 pts) feed the Fig. 7 benchmark.
 """
@@ -68,7 +82,8 @@ import jax
 
 from ..core.batching import BatchingPolicy, QueryBatcher, DEFAULT_QUERY_BATCH
 from ..core.broker import Broker, BrokerError
-from ..core.buffers import StreamBuffer, stack_buffers, unstack_buffers
+from ..core.buffers import (StreamBuffer, stack_buffers, structure_key,
+                            unstack_buffers)
 from ..core.element import Element
 from ..core.pipeline import Pipeline
 from ..core.plan import PendingQuery
@@ -138,7 +153,8 @@ class Runtime:
                  burst: int = DEFAULT_BURST,
                  query_batch=DEFAULT_QUERY_BATCH,
                  lease_ticks: Optional[int] = None,
-                 mesh=None, shard_mode: str = "auto"):
+                 mesh=None, shard_mode: str = "auto",
+                 fused_wire: bool = True):
         self.broker = broker or Broker()
         if lease_ticks is not None:
             self.broker.default_lease_ticks = lease_ticks
@@ -162,6 +178,9 @@ class Runtime:
             raise ValueError(f"shard_mode {shard_mode!r} not in "
                              f"('auto', 'always', 'never')")
         self.shard_mode = shard_mode
+        #: fused batched wire path (module docstring; DESIGN.md §5) —
+        #: False restores the PR-4 eager codec path end to end
+        self.fused_wire = bool(fused_wire)
         #: query micro-batching policy (int = max batch; 0 disables —
         #: legacy synchronous round-trips inside the client's apply)
         self.batching = BatchingPolicy.of(query_batch)
@@ -203,7 +222,8 @@ class Runtime:
                 batcher = QueryBatcher(
                     e.endpoint, run, self.batching,
                     inline_step=lambda r=run: self._run_once(r),
-                    mesh=self.mesh, shard_mode=self.shard_mode)
+                    mesh=self.mesh, shard_mode=self.shard_mode,
+                    fused=self.fused_wire)
                 self._batchers[e.endpoint.endpoint_id] = batcher
                 e.connect(self.broker, inline_runner=batcher.flush)
         # (re)negotiate with broker wiring in place so mqttsink registers;
@@ -285,22 +305,100 @@ class Runtime:
         return self._finish_frame(run, outputs)
 
     # -- deferred query clients (micro-batched offloading + failover) ------------
-    def _start_deferred(self, run: _PipeRun
+    def _begin_deferred(self, run: _PipeRun
                         ) -> Optional[Tuple[_PipeRun, PendingQuery]]:
         """Begin a frame for a pipeline containing query clients: the plan
-        pauses at the first client, whose request is dispatched to the
-        server's batcher.  Returns the paused frame, None if the frame
-        completed without pausing — a frame with no live server to take its
-        request parks until one registers."""
-        res = run.pipe.plan.run_deferred(run.params, run.state)
+        pauses at the first client.  On the fused wire path, plans whose
+        only impure elements are query clients run the walk as ONE jitted
+        segment (plan.run_deferred_compiled) — bitwise the interpreted
+        deferral without its per-element dispatch cost.  Returns the paused
+        frame (NOT yet dispatched — the tick batches a whole round's
+        request encodes), or None if the frame completed without pausing."""
+        plan = run.pipe.plan
+        if self.fused_wire and plan.deferred_compilable:
+            res = plan.run_deferred_compiled(run.params, run.state)
+        else:
+            res = plan.run_deferred(run.params, run.state)
         if isinstance(res, PendingQuery):
-            if self._dispatch_query(res):
-                return run, res
-            self._park(run, res)
-            return None
+            return run, res
         outputs, run.state = res
         self._finish_frame(run, outputs)
         return None
+
+    @staticmethod
+    def _codec_round(pairs, batch_fn) -> List:
+        """Shared shape of a batched codec round: group ``(client, buffer)``
+        pairs by (codec, TENSORS structure), run ``batch_fn(buffers,
+        codec)`` once per group, scatter results back in input order.  The
+        key covers the tensors only: the codec batch helpers stack payloads
+        and keep each frame's own meta, so differing meta (client ids, pts
+        tags) must not split a batchable group."""
+        res: List = [None] * len(pairs)
+        groups: Dict[Tuple, List[int]] = {}
+        for i, (qc, buf) in enumerate(pairs):
+            key = (qc.codec, structure_key(buf.tensors))
+            groups.setdefault(key, []).append(i)
+        for (codec, _), idxs in groups.items():
+            for i, out in zip(idxs, batch_fn([pairs[i][1] for i in idxs],
+                                             codec)):
+                res[i] = out
+        return res
+
+    def _encode_requests(self, pairs) -> List[Tuple]:
+        """Encode a dispatch round's requests: one batched codec dispatch
+        per (codec, structure) group instead of one per request, results
+        returned in input order.  Bitwise per-request ``encode`` (payload,
+        meta, wire bytes — core/compression.py batch contract)."""
+        from ..core import compression as comp
+        return self._codec_round(pairs, comp.encode_batch)
+
+    def _dispatch_round(self, fresh: List[Tuple[_PipeRun, PendingQuery]]
+                        ) -> List[Tuple[_PipeRun, PendingQuery]]:
+        """Ship a round of freshly paused frames.  Fused wire path: resolve
+        every endpoint first (unplaceable frames park before any encode is
+        paid), batch-encode the requests per codec group, then push in
+        arrival order — server channels stay FIFO, so batching the encodes
+        never reorders what the scan serves.  Early flushes still fire the
+        moment an endpoint's gather fills.  Legacy path: per-frame
+        ``_dispatch_query`` exactly as before."""
+        if not fresh:
+            return []
+        out: List[Tuple[_PipeRun, PendingQuery]] = []
+        if not self.fused_wire:
+            for run, pq in fresh:
+                if self._dispatch_query(pq):
+                    out.append((run, pq))
+                else:
+                    self._park(run, pq)
+            return out
+        ready = []
+        for run, pq in fresh:
+            qc = pq.client
+            try:
+                ep = qc._endpoint()
+            except BrokerError:
+                # keep pq.endpoint (the dead server) — a later successful
+                # dispatch of this parked frame is still a failover hop
+                self._park(run, pq)
+                continue
+            ready.append((run, pq, qc, ep))
+        encs = self._encode_requests([(qc, pq.request)
+                                      for _, pq, qc, _ in ready])
+        for (run, pq, qc, ep), (enc, nbytes) in zip(ready, encs):
+            qc.send_query_wire(enc, nbytes, ep)
+            if pq.endpoint is not None and pq.endpoint is not ep:
+                self.redispatches += 1
+                pq.redispatches += 1
+            pq.endpoint = ep
+            batcher = self._batchers.get(ep.endpoint_id)
+            if batcher is None:
+                runner = ep.spec.get("inline_runner")
+                if runner is not None:
+                    runner()
+            elif batcher.full():
+                batcher.flush()
+            out.append((run, pq))
+        return out
 
     def _dispatch_query(self, pq: PendingQuery) -> bool:
         """Ship a paused frame's request to the best-ranked live endpoint
@@ -363,17 +461,23 @@ class Runtime:
         Termination: every round each frame is answered, parked, raised on,
         or re-dispatched to a live endpoint different from its dead one —
         and a chain of re-dispatches is bounded by the number of live
-        servers (nothing revives mid-drain; revivals are tick events)."""
+        servers (nothing revives mid-drain; revivals are tick events).
+
+        Fused wire path: the round's answers are popped raw and decoded in
+        one batched codec dispatch per (codec, structure) group before the
+        resumes — bitwise the per-frame decode, minus ``batch × tensors``
+        eager dispatches."""
         pending = list(pending)
         while pending:
             for batcher in self._batchers.values():
                 batcher.flush()
             nxt: List[Tuple[_PipeRun, PendingQuery]] = []
+            answered: List[Tuple[_PipeRun, PendingQuery, StreamBuffer]] = []
             for run, pq in pending:
                 qc = pq.client
                 ep = pq.endpoint
-                answer = qc.recv_answer_from(ep) if ep is not None else None
-                if answer is None:
+                raw = qc.recv_answer_raw(ep) if ep is not None else None
+                if raw is None:
                     if ep is not None and ep.alive:
                         raise BrokerError(
                             f"{qc.name}: no answer from {qc.operation!r}")
@@ -382,6 +486,10 @@ class Runtime:
                     else:
                         self._park(run, pq)
                     continue
+                answered.append((run, pq, raw))
+            answers = self._decode_answers(
+                [(pq.client, raw) for _, pq, raw in answered])
+            for (run, pq, _), answer in zip(answered, answers):
                 res = pq.resume(answer)
                 if isinstance(res, PendingQuery):
                     if self._dispatch_query(res):
@@ -392,6 +500,14 @@ class Runtime:
                     outputs, run.state = res
                     self._finish_frame(run, outputs)
             pending = nxt
+
+    def _decode_answers(self, pairs) -> List[StreamBuffer]:
+        """Decode a drain round's raw answers, batched per (codec,
+        structure) group on the fused path, per frame on the legacy one."""
+        from ..core import compression as comp
+        if not self.fused_wire:
+            return [comp.decode(raw, qc.codec) for qc, raw in pairs]
+        return self._codec_round(pairs, comp.decode_batch)
 
     # -- burst draining ----------------------------------------------------------
     def _burst_size(self, run: _PipeRun) -> int:
@@ -486,6 +602,7 @@ class Runtime:
         pending = self._retry_parked()
         busy = {id(run) for run, _ in pending} | \
                {id(run) for run, _ in self._parked}
+        fresh: List[Tuple[_PipeRun, PendingQuery]] = []
         for dev in self.devices:
             if not dev.alive:
                 continue  # a dead device runs nothing (chaos harness)
@@ -500,15 +617,18 @@ class Runtime:
                     run.skipped += 1
                     continue
                 if run.pipe.plan.has_query_clients and self.batching.enabled:
-                    paused = self._start_deferred(run)
+                    paused = self._begin_deferred(run)
                     if paused is not None:
-                        pending.append(paused)
+                        fresh.append(paused)
                     continue
                 n = self._burst_size(run)
                 if n > 1:
                     self._run_burst(run, n)
                 else:
                     self._run_once(run)
+        # the whole round's request encodes batch into one codec dispatch
+        # per group before anything ships (fused path; arrival order kept)
+        pending.extend(self._dispatch_round(fresh))
         self._drain_queries(pending)
 
     def run(self, n_ticks: int):
@@ -541,7 +661,7 @@ class Runtime:
                            "orphaned_requests": self.orphaned_requests}
         agg = {"flushes": 0, "batches": 0, "batched_frames": 0,
                "sequential_frames": 0, "sharded_batches": 0,
-               "sharded_frames": 0}
+               "sharded_frames": 0, "fused_batches": 0, "fused_frames": 0}
         for b in self._batchers.values():
             for k, v in b.stats().items():
                 agg[k] += v

@@ -119,11 +119,55 @@ class TestBitwiseParity:
                 np.testing.assert_array_equal(a, b)
         assert srv_run.frames == ticks * n_clients
 
-    def test_mixed_codecs_shard_and_stay_bitwise(self):
-        """codec is routing meta: quant8 + none clients stack into one
-        sharded batch and each answer re-encodes per its client."""
+    def test_uniform_codec_groups_still_shard_bitwise(self):
+        """PR-5 composition rule: codec fusion is single-device, so a codec
+        group the mesh may take keeps the PR-4 eager wire path (host decode
+        → placement → sharded serve → host encode).  A full batch of
+        same-codec clients therefore still shards — and stays bitwise with
+        the meshless runtime."""
         def build(mesh):
             rt = Runtime(query_batch=8, mesh=mesh, shard_mode="always")
+            _server(rt)
+            runs = _clients(rt, 8, codec="quant8")
+            rt.run(2)
+            return rt, runs
+
+        rt_m, m_runs = build(make_host_mesh())
+        _, ref_runs = build(None)
+        assert rt_m.stats()["query_batching"]["sharded_frames"] == 16
+        for mr, rr in zip(m_runs, ref_runs):
+            for a, b in zip(_responses(mr), _responses(rr)):
+                np.testing.assert_array_equal(a, b)
+
+    def test_mixed_codecs_on_a_mesh_split_by_codec_and_stay_bitwise(self):
+        """PR-5 contract change: mixed-codec ticks split into consecutive
+        same-codec groups (the codec is the fused executable's static trace
+        parameter).  On this 8-way mesh the groups of 4 no longer tile the
+        data axes, so they serve codec-fused on a single device — and the
+        numbers still must not move vs the meshless runtime."""
+        def build(mesh):
+            rt = Runtime(query_batch=8, mesh=mesh, shard_mode="always")
+            _server(rt)
+            runs = _clients(rt, 4, codec="none") + \
+                _clients(rt, 4, codec="quant8")
+            rt.run(2)
+            return rt, runs
+
+        rt_m, m_runs = build(make_host_mesh())
+        _, ref_runs = build(None)
+        qb = rt_m.stats()["query_batching"]
+        assert qb["sharded_frames"] == 0 and qb["fused_frames"] == 8
+        for mr, rr in zip(m_runs, ref_runs):
+            for a, b in zip(_responses(mr), _responses(rr)):
+                np.testing.assert_array_equal(a, b)
+
+    def test_eager_wire_path_keeps_mixed_codec_sharding(self):
+        """The PR-4 behavior survives verbatim under fused_wire=False:
+        codec is routing meta there, mixed codecs stack into one sharded
+        batch, answers bitwise vs the meshless eager runtime."""
+        def build(mesh):
+            rt = Runtime(query_batch=8, mesh=mesh, shard_mode="always",
+                         fused_wire=False)
             _server(rt)
             runs = _clients(rt, 4, codec="none") + \
                 _clients(rt, 4, codec="quant8")
@@ -235,6 +279,28 @@ class TestPlacementPolicy:
                 for a, b in zip(ref, got):
                     np.testing.assert_array_equal(a, b)
 
+    def test_auto_single_placement_reclaims_codec_fusion(self):
+        """Regression (PR-5 review): a mesh runtime in auto mode used to
+        route every mesh-tiling codec group down the eager wire path even
+        after the probe had picked "single" — forfeiting codec fusion for
+        nothing.  Only the probe-carrying flushes may serve eager; once the
+        calibrated placement says "single", groups of that size must serve
+        codec-FUSED."""
+        rt = Runtime(query_batch=8, mesh=make_host_mesh(),
+                     shard_mode="auto")
+        _, srv_run, ssrc = _server(rt)
+        _clients(rt, 8, codec="quant8")
+        rt.run(3)
+        batcher = rt._batchers[ssrc.endpoint.endpoint_id]
+        qb = rt.stats()["query_batching"]
+        if batcher.placements.get(8) == "single":
+            # on this host-forged mesh the probe picks "single" (PR-4
+            # documented outcome): ticks after the probe must be fused
+            assert qb["fused_frames"] >= 16
+        else:   # a real mesh where sharding wins keeps the eager path
+            assert qb["sharded_frames"] > 0
+        assert srv_run.frames == 24
+
     def test_never_mode_stays_single_device(self):
         rt = Runtime(query_batch=8, mesh=make_host_mesh(),
                      shard_mode="never")
@@ -284,7 +350,8 @@ class TestExecCacheMeshAware:
         fns = srv_run.pipe.plan._cache()["fns"]
         n_after_first = len(fns)
         # mesh-keyed entry exists and is distinct from the no-mesh key space
-        assert any(k[0] == "serve_batch" and k[-1] == mesh_fingerprint(mesh)
+        # (serve_batch keys: (tag, donate, mesh fingerprint, codec))
+        assert any(k[0] == "serve_batch" and k[2] == mesh_fingerprint(mesh)
                    for k in fns)
         rt.run(3)
         assert len(fns) == n_after_first      # same mesh: no new executables
@@ -296,9 +363,14 @@ class TestExecCacheMeshAware:
         # the single-device executable is a distinct entry (the mesh wrapper
         # created it eagerly as its non-tiling fallback) — requesting it
         # directly resolves to the cached one, no collision, no retrace
-        assert ("serve_batch", False, None) in fns
+        assert ("serve_batch", False, None, None) in fns
         srv_run.pipe.plan.compiled_serve_batch(mesh=None)
         assert len(fns) == n_after_first
+        # codec-fused executables never collide with the plain ones: the
+        # codec fingerprint is part of the key
+        srv_run.pipe.plan.compiled_serve_batch(codec="quant8")
+        assert ("serve_batch", False, None, "quant8") in fns
+        assert len(fns) == n_after_first + 1
 
     def test_failover_rewire_reuses_sharded_executable(self, chaos):
         """Kill + revive the serving device under the mesh runtime: the

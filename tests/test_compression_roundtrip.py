@@ -186,6 +186,58 @@ class TestSparseTruncationAccounting:
             comp.codec_stats()["sparse_dropped_values"]
 
 
+class TestDensityCapAlignment:
+    """Regression (PR-5): ``cap = int(size * density)`` spread the capacity
+    evenly over ceil(size/512) blocks, so a tensor whose size is not a
+    multiple of the sparse block got fewer per-block slots than its largest
+    block could need — ``sparse:1.0`` (nominally lossless) silently dropped
+    values when the nonzeros concentrated in one block.  Full density now
+    pins every block at full capacity."""
+
+    @pytest.mark.parametrize("n", [600, 513, 1023, 200])
+    def test_full_density_is_lossless_any_size(self, n):
+        comp.reset_codec_stats()
+        x = jnp.asarray(np.arange(1, n + 1, dtype=np.float32))  # fully dense
+        buf = StreamBuffer(tensors=(x,), pts=jnp.int32(0))
+        enc, _ = comp.encode(buf, "sparse:1.0")
+        assert "sparse_dropped" not in enc.meta
+        assert comp.codec_stats()["sparse_dropped_values"] == 0
+        dec = comp.decode(enc, "sparse")
+        np.testing.assert_array_equal(np.asarray(dec.tensors[0]),
+                                      np.asarray(x))
+
+    def test_over_unity_density_clamps_to_lossless(self):
+        x = jnp.asarray(np.arange(1, 601, dtype=np.float32))
+        buf = StreamBuffer(tensors=(x,), pts=jnp.int32(0))
+        enc, _ = comp.encode(buf, "sparse:1.5")
+        assert "sparse_dropped" not in enc.meta
+        dec = comp.decode(enc, "sparse")
+        np.testing.assert_array_equal(np.asarray(dec.tensors[0]),
+                                      np.asarray(x))
+
+    def test_non_multiple_size_partial_density_roundtrips(self):
+        """Sizes off the 512 block grid still round-trip exactly when the
+        payload fits the requested capacity."""
+        n = 700                       # 2 blocks, second only 188 wide
+        x = np.zeros(n, np.float32)
+        x[::10] = np.arange(1, 71, dtype=np.float32)   # 10% nonzero
+        buf = StreamBuffer(tensors=(jnp.asarray(x),), pts=jnp.int32(0))
+        enc, _ = comp.encode(buf, "sparse:0.5")
+        assert "sparse_dropped" not in enc.meta
+        dec = comp.decode(enc, "sparse")
+        np.testing.assert_array_equal(np.asarray(dec.tensors[0]), x)
+
+    def test_partial_density_truncation_still_accounted(self):
+        """The cap fix must not weaken the loss signal below unity."""
+        comp.reset_codec_stats()
+        x = jnp.asarray(np.arange(1, 601, dtype=np.float32))
+        buf = StreamBuffer(tensors=(x,), pts=jnp.int32(0))
+        enc, _ = comp.encode(buf, "sparse:0.05")
+        kept = int(np.asarray(
+            comp.decode(enc, "sparse").tensors[0] != 0).sum())
+        assert enc.meta["sparse_dropped"] == 600 - kept > 0
+
+
 def test_unknown_codec_rejected():
     with pytest.raises(ValueError, match="unknown codec"):
         comp.encode(_buf((3,)), "gzip")

@@ -104,6 +104,46 @@ class TestChaosAcceptance:
         # the survivor picked up all serving from the kill tick onward
         assert runB.frames >= (ticks - kill_tick) * n_clients
 
+    def test_mid_batch_death_with_codec_fused_batches_in_flight(self, chaos):
+        """PR-5 regression guard: the fused wire path must not weaken the
+        zero-loss contract.  quant8 clients put codec-FUSED batches in
+        flight (wire-form requests, decode/encode inside the serving jit);
+        the serving device dies mid-gather with 3 requests stranded in wire
+        form on the dead endpoint.  The orphans — still encoded — must
+        re-dispatch to the survivor, serve through ITS fused executable,
+        and answer bitwise what the fault-free twin produces."""
+        ticks, n_clients, kill_tick = 6, 6, 3
+
+        rt0 = Runtime(query_batch=8)
+        _server(rt0, name="hubA")
+        _server(rt0, name="hubB")
+        ref_runs = _clients(rt0, n_clients, codec="quant8")
+        rt0.run(ticks)
+
+        rt = Runtime(query_batch=8)
+        devA, runA, ssrcA = _server(rt, name="hubA")
+        devB, runB, ssrcB = _server(rt, name="hubB")
+        cl_runs = _clients(rt, n_clients, codec="quant8")
+        harness = chaos(rt)
+        harness.kill_server_mid_batch(kill_tick, devA, ssrcA, after_n=3)
+        harness.run(ticks)
+
+        assert any("mid-batch" in label and "DISARMED" not in label
+                   for _, label in harness.log), "the scripted kill fired"
+        for ref, got in zip(ref_runs, cl_runs):
+            assert got.frames == ticks          # zero lost requests
+            a, b = _responses(ref), _responses(got)
+            assert len(a) == len(b) == ticks
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(x, y)  # bitwise vs fault-free
+        fo = rt.stats()["failover"]
+        assert fo["redispatches"] >= 1
+        assert fo["parked_now"] == 0
+        # the batches really were codec-fused on both servers' paths
+        qb = rt.stats()["query_batching"]
+        assert qb["fused_frames"] == ticks * n_clients
+        assert runB.frames >= (ticks - kill_tick) * n_clients
+
     def test_dead_fleet_parks_then_recovers_within_two_ticks(self, chaos):
         """No live server at all: frames park (no errors, nothing dropped)
         and complete within 2 ticks of the revival's register event."""

@@ -194,12 +194,14 @@ class TestBatchingMechanics:
             assert r.last_outputs["res"].tensor.shape == (1, 4)
         assert srv_run.frames == 8
 
-    def test_mixed_codecs_batch_together(self):
-        """codec is routing meta, not payload structure — quant8 and none
-        clients stack into ONE batch and each answer re-encodes per its
-        client's codec: every client matches its own sequential stream."""
-        def build(batch):
-            rt = Runtime(query_batch=batch)
+    def test_mixed_codecs_group_by_codec(self):
+        """PR-5 contract: the fused wire path decodes/encodes INSIDE the
+        serving jit with the codec as a static trace parameter, so mixed-
+        codec ticks split into consecutive same-codec groups — exactly how
+        mixed-structure ticks have always split — and every client still
+        matches its own sequential stream bitwise."""
+        def build(batch, **kw):
+            rt = Runtime(query_batch=batch, **kw)
             _server(rt)
             runs = _clients(rt, 2, codec="none") + \
                 _clients(rt, 2, codec="quant8")
@@ -207,9 +209,32 @@ class TestBatchingMechanics:
             return rt, runs
 
         rt_b, batched = build(8)
-        assert rt_b.stats()["query_batching"]["batches"] == 2  # one per tick
+        qb = rt_b.stats()["query_batching"]
+        assert qb["batches"] == 4          # one per codec group per tick
+        # quant8 groups fuse; "none" groups have nothing to fuse and keep
+        # the lazy eager path (no per-flush answer fetch)
+        assert qb["fused_frames"] == 4
         _, seq = build(0)
         for br, sr in zip(batched, seq):
+            for a, b in zip(_responses(br), _responses(sr)):
+                np.testing.assert_array_equal(a, b)
+
+    def test_eager_wire_path_still_batches_mixed_codecs_together(self):
+        """The PR-4 eager path (fused_wire=False) is preserved as the
+        benchmark baseline: codec is routing meta there, one batch per
+        tick, and it still agrees bitwise with sequential serving."""
+        rt = Runtime(query_batch=8, fused_wire=False)
+        _server(rt)
+        runs = _clients(rt, 2, codec="none") + _clients(rt, 2, codec="quant8")
+        rt.run(2)
+        qb = rt.stats()["query_batching"]
+        assert qb["batches"] == 2 and qb["fused_frames"] == 0
+        rt_s = Runtime(query_batch=0)
+        _server(rt_s)
+        seq = _clients(rt_s, 2, codec="none") + _clients(rt_s, 2,
+                                                         codec="quant8")
+        rt_s.run(2)
+        for br, sr in zip(runs, seq):
             for a, b in zip(_responses(br), _responses(sr)):
                 np.testing.assert_array_equal(a, b)
 
