@@ -1,0 +1,196 @@
+"""Live reconfiguration: cutover pause and post-swap throughput
+(DESIGN.md §6 — the PR-6 tentpole gates).
+
+Three measurements:
+
+* **hot-swap cutover** — the serving model is swapped under live traffic;
+  counts the ticks inside the swap window where any client missed its
+  answer.  GATE: pause <= 2 ticks (the prepare/warm work happens off the
+  serving path, the commit itself is pointer moves + cache hits);
+* **post-swap throughput** — steady-state µs/tick after the commit vs a
+  never-reconfigured twin fleet, timed in INTERLEAVED chunks so process
+  drift (GC, allocator) cancels out of the ratio.  GATE: post throughput
+  >= 0.95x the twin's (the swapped plan serves through the same warmed
+  executable registry);
+* **request overhead** — wall µs of ``Runtime.reconfigure`` itself
+  (prepare + warm, paid once, off the tick path) and of a failed prepare's
+  rollback (which must leave serving untouched).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TensorSpec, parse_launch
+from repro.core.element import element_factory
+from repro.core.elements import register_model
+from repro.runtime import Device, Runtime
+
+from .common import emit
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+
+GATE_PAUSE_TICKS = 2
+GATE_THROUGHPUT_RATIO = 0.95
+N_CLIENTS = 4
+
+
+def _ensure_models():
+    def init_a(rng):
+        return {"w": jax.random.normal(rng, (12, 4)) * 0.3}
+
+    def apply_a(p, x):
+        return x.astype(jnp.float32).reshape(1, -1) @ p["w"]
+
+    def init_b(rng):
+        return {"w": jax.random.normal(rng, (12, 4)) * 0.1,
+                "b": jnp.ones((4,))}
+
+    def apply_b(p, x):
+        return x.astype(jnp.float32).reshape(1, -1) @ p["w"] + p["b"]
+
+    register_model("reconfA", init_a, apply_a,
+                   out_specs=(TensorSpec((1, 4), "float32"),))
+    register_model("reconfB", init_b, apply_b,
+                   out_specs=(TensorSpec((1, 4), "float32"),))
+
+
+def _fleet():
+    _ensure_models()
+    rt = Runtime(query_batch=8)
+    hub = Device("hub")
+    sp = parse_launch(
+        "tensor_query_serversrc operation=svc name=ssrc ! "
+        "tensor_filter model=reconfA name=filt ! "
+        "tensor_query_serversink name=ssink")
+    sp.elements["ssink"].pair_with(sp.elements["ssrc"])
+    hub_run = hub.add_pipeline(sp, jit=False)
+    rt.add_device(hub)
+    clients = []
+    for i in range(N_CLIENTS):
+        dev = Device(f"tv{i}")
+        pc = parse_launch(
+            "testsrc width=2 height=2 ! tensor_converter ! "
+            "tensor_query_client operation=svc name=qc ! appsink name=res")
+        clients.append(dev.add_pipeline(pc, jit=False))
+        rt.add_device(dev)
+    return rt, hub_run, clients
+
+
+def _best_us_per_tick(rt, rounds: int = 8, chunk: int = 10) -> float:
+    """Min-of-chunks per-tick µs: single long windows are dominated by
+    process drift (GC, allocator), not by the serving loop."""
+    best = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        rt.run(chunk)
+        best = min(best, (time.perf_counter() - t0) / chunk * 1e6)
+    return best
+
+
+def _swap(rt, hub_run, model, warm_ticks=1):
+    return rt.reconfigure(
+        hub_run, hub_run.pipe.reconfig().swap(
+            "filt", element_factory("tensor_filter", model=model)),
+        warm_ticks=warm_ticks)
+
+
+def bench_hot_swap(max_window: int = 20, rounds: int = 6, chunk: int = 10):
+    rt, hub_run, clients = _fleet()
+    control, _, _ = _fleet()                 # twin fleet, never swapped
+    rt.run(8)                                # warm compile caches
+    control.run(8)
+    pre_us = _best_us_per_tick(rt)
+
+    rc = _swap(rt, hub_run, "reconfB")
+    pause = swap_ticks = 0
+    while rc.status not in ("committed", "rolled_back") and \
+            swap_ticks < max_window:
+        before = [c.frames for c in clients]
+        rt.tick()
+        swap_ticks += 1
+        if any(c.frames == b for c, b in zip(clients, before)):
+            pause += 1                       # a tick somebody missed
+    committed = rc.status == "committed"
+
+    best = {"swapped": float("inf"), "control": float("inf")}
+    for _ in range(rounds):
+        for label, r in (("swapped", rt), ("control", control)):
+            t0 = time.perf_counter()
+            r.run(chunk)
+            best[label] = min(best[label],
+                              (time.perf_counter() - t0) / chunk * 1e6)
+    post_us = best["swapped"]
+    ratio = best["control"] / post_us        # >1: swapped is FASTER
+
+    lost = sum(rt.ticks - c.frames for c in clients)
+    emit("reconfig/hot_swap/pre", pre_us, f"us_per_tick={pre_us:.1f}")
+    emit("reconfig/hot_swap/post", post_us,
+         f"us_per_tick={post_us:.1f};control={best['control']:.1f}")
+    emit("reconfig/hot_swap/cutover", 0.0,
+         f"pause_ticks={pause};swap_ticks={swap_ticks};"
+         f"committed={committed};lost_requests={lost};"
+         f"gate<={GATE_PAUSE_TICKS};pass={committed and pause <= GATE_PAUSE_TICKS}",
+         pause_ticks=pause, swap_ticks=swap_ticks, committed=bool(committed),
+         lost=lost, gate=GATE_PAUSE_TICKS,
+         gate_pass=bool(committed and pause <= GATE_PAUSE_TICKS))
+    emit("reconfig/hot_swap/throughput_ratio", 0.0,
+         f"swapped_vs_twin={ratio:.3f}x;gate>={GATE_THROUGHPUT_RATIO};"
+         f"pass={ratio >= GATE_THROUGHPUT_RATIO}",
+         ratio=round(ratio, 4), gate=GATE_THROUGHPUT_RATIO,
+         gate_pass=bool(ratio >= GATE_THROUGHPUT_RATIO))
+    if not committed:
+        raise AssertionError(f"hot swap did not commit: {rc.status} "
+                             f"({rc.reason})")
+    if lost:
+        raise AssertionError(f"hot swap lost {lost} requests")
+    if pause > GATE_PAUSE_TICKS:
+        raise AssertionError(
+            f"cutover paused {pause} ticks (> {GATE_PAUSE_TICKS})")
+    if ratio < GATE_THROUGHPUT_RATIO:
+        raise AssertionError(
+            f"post-swap throughput {ratio:.3f}x pre "
+            f"(< {GATE_THROUGHPUT_RATIO})")
+
+
+def bench_request_overhead(rounds: int = 5):
+    """Prepare+warm cost, paid once off the tick path, and the cost of a
+    rolled-back bad edit (which must leave serving untouched)."""
+    rt, hub_run, clients = _fleet()
+    rt.run(8)
+    best = float("inf")
+    models = ("reconfB", "reconfA") * ((rounds + 1) // 2)
+    for model in models[:rounds]:
+        t0 = time.perf_counter()
+        rc = _swap(rt, hub_run, model)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+        rt.run(3)                            # let it commit
+        assert rc.status == "committed"
+    emit("reconfig/request/prepare_warm", best, f"us_per_request={best:.1f}")
+
+    t0 = time.perf_counter()
+    rc = rt.reconfigure(hub_run, hub_run.pipe.reconfig().remove("ghost"))
+    rollback_us = (time.perf_counter() - t0) * 1e6
+    ticks0 = rt.ticks
+    rt.run(3)
+    served = all(c.frames == rt.ticks for c in clients)
+    emit("reconfig/request/rollback", rollback_us,
+         f"us_per_rollback={rollback_us:.1f};status={rc.status};"
+         f"serving_untouched={served}",
+         status=rc.status, serving_untouched=bool(served))
+    if rc.status != "rolled_back" or not served:
+        raise AssertionError("bad edit must roll back without touching "
+                             f"serving (status={rc.status}, ticks={ticks0})")
+
+
+def run():
+    bench_hot_swap()
+    bench_request_overhead()
+
+
+if __name__ == "__main__":
+    run()

@@ -14,6 +14,8 @@
 #   serving         -> bench_query_batching (micro-batched offloading, >=2x gate
 #                                            + batched-beats-sequential e2e gate)
 #   failover        -> bench_failover       (ticks-to-recovery <=2 gate, heartbeat cost)
+#   reconfig        -> bench_reconfig       (hot-swap cutover pause <=2 ticks gate,
+#                                            post-swap throughput >=0.95x gate)
 #   mesh serving    -> bench_sharded_serving (calibrated mesh placement, >=2x gate)
 #   wire path       -> bench_wire_path      (fused codec serving >=2x e2e gate,
 #                                            sparse enc >=10x vs PR-4)
@@ -24,14 +26,14 @@ import sys
 import time
 import traceback
 
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR5.json")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR6.json")
 
 
 def main() -> None:
     from . import (bench_compression, bench_failover, bench_kernels,
                    bench_pubsub, bench_query, bench_query_batching,
-                   bench_roofline, bench_sharded_serving, bench_step_overhead,
-                   bench_sync, bench_wire_path)
+                   bench_reconfig, bench_roofline, bench_sharded_serving,
+                   bench_step_overhead, bench_sync, bench_wire_path)
     from .common import ROWS, reset_rows
 
     reset_rows()
@@ -44,6 +46,7 @@ def main() -> None:
         ("wire_path", bench_wire_path.run),
         ("sharded_serving", bench_sharded_serving.run),
         ("failover", bench_failover.run),
+        ("reconfig", bench_reconfig.run),
         ("sync", bench_sync.run),
         ("compression", bench_compression.run),
         ("kernels", bench_kernels.run),
@@ -66,7 +69,7 @@ def main() -> None:
     import jax
     payload = {
         "schema": 1,
-        "pr": 5,
+        "pr": 6,
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "suites_failed": failed,

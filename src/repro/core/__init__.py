@@ -16,6 +16,8 @@ from .broker import Broker, BrokerError, topic_matches
 from .pubsub import Channel, MqttSink, MqttSrc, Transport
 from .query import (QueryServerEndpoint, QueryTransport, TensorQueryClient,
                     TensorQueryServerSink, TensorQueryServerSrc)
+from .reconfig import (ReconfigError, ReconfigManager, ReconfigPlan,
+                       Reconfiguration)
 from .sync import PipelineClock, SimClock, ntp_offset
 from . import compression
 
@@ -33,6 +35,7 @@ __all__ = [
     "Channel", "MqttSink", "MqttSrc", "Transport",
     "QueryServerEndpoint", "QueryTransport", "TensorQueryClient",
     "TensorQueryServerSink", "TensorQueryServerSrc",
+    "ReconfigError", "ReconfigManager", "ReconfigPlan", "Reconfiguration",
     "PipelineClock", "SimClock", "ntp_offset",
     "compression",
 ]

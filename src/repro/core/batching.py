@@ -128,7 +128,8 @@ class QueryBatcher:
     def __init__(self, endpoint: QueryServerEndpoint, run: Any,
                  policy: BatchingPolicy,
                  inline_step: Optional[Callable[[], Any]] = None,
-                 mesh=None, shard_mode: str = "auto", fused: bool = True):
+                 mesh=None, shard_mode: str = "auto", fused: bool = True,
+                 on_orphans: Optional[Callable[[int], None]] = None):
         if shard_mode not in ("auto", "always", "never"):
             raise ValueError(f"shard_mode {shard_mode!r} not in "
                              f"('auto', 'always', 'never')")
@@ -136,6 +137,11 @@ class QueryBatcher:
         self.run = run
         self.policy = policy
         self.inline_step = inline_step
+        #: called with the number of popped-but-unserved requests a flush
+        #: abandons when its endpoint dies mid-flush (the runtime adds them
+        #: to its orphan ledger; the paused frames re-dispatch from their
+        #: PendingQuery records exactly like channel-purged orphans)
+        self.on_orphans = on_orphans
         #: codec-fused serving (module docstring); False = PR-4 eager codec
         self.fused = fused
         #: jax Mesh to lay batches out on (None = single-device serving)
@@ -159,6 +165,7 @@ class QueryBatcher:
         self.sharded_frames = 0
         self.fused_batches = 0
         self.fused_frames = 0
+        self.orphaned = 0
 
     # -- public API ------------------------------------------------------------
     def pending(self) -> int:
@@ -193,16 +200,27 @@ class QueryBatcher:
         # through the compiled hoisted path (the module contract above), so
         # turning the batch size down never silently changes execution mode
         batchable = self.policy.enabled and plan.query_batchable
-        while self.pending():
+        # liveness is re-checked before EVERY group, not only at entry: a
+        # mark_down can land mid-flush (the serving chain itself announces
+        # a death), and frames this flush already popped off the request
+        # channel are invisible to the down event's purge — a corpse must
+        # not keep serving them, so the remainder goes to the orphan ledger
+        # and re-dispatches like any channel-purged orphan
+        while self.pending() and self.endpoint.alive:
             if not batchable:
-                n = self.pending()
-                for _ in range(n):
+                while self.pending():
+                    if not self.endpoint.alive:
+                        break
                     self._serve_sequential()
-                served += n
+                    served += 1
                 continue
             raws = self.endpoint.requests.pop_n(self.policy.max_batch)
             if self.fused:
-                for pairs, codec in self._group_wire(raws):
+                groups = list(self._group_wire(raws))
+                for gi, (pairs, codec) in enumerate(groups):
+                    if not self.endpoint.alive:
+                        self._orphan(sum(len(p) for p, _ in groups[gi:]))
+                        break
                     if codec.partition(":")[0] == "none" or \
                             self._mesh_may_take(len(pairs)):
                         # nothing to fuse for "none" (decode/encode are
@@ -221,12 +239,32 @@ class QueryBatcher:
                         self._serve_batched_wire(pairs, codec)
                     served += len(pairs)
             else:
-                for group in self._group(raws):
+                groups = list(self._group(raws))
+                for gi, group in enumerate(groups):
+                    if not self.endpoint.alive:
+                        self._orphan(sum(len(g) for g in groups[gi:]))
+                        break
                     self._serve_batched(group)
                     served += len(group)
         if served:
             self.flushes += 1
         return served
+
+    def _orphan(self, n: int):
+        """Account requests a dying flush popped but never served."""
+        if n <= 0:
+            return
+        self.orphaned += n
+        if self.on_orphans is not None:
+            self.on_orphans(n)
+
+    def on_reconfig(self):
+        """The served pipeline was hot-swapped under this batcher: calibrated
+        placements and mesh-placed params belong to the OLD plan/params —
+        drop them so the next flush re-probes and re-places against the new
+        epoch (the plan itself is always read through ``run.pipe``)."""
+        self.placements.clear()
+        self._mesh_params = None
 
     # -- gather & grouping -----------------------------------------------------
     def _decode(self, raw: StreamBuffer) -> Tuple[StreamBuffer, Dict]:
@@ -479,4 +517,5 @@ class QueryBatcher:
                 "sharded_batches": self.sharded_batches,
                 "sharded_frames": self.sharded_frames,
                 "fused_batches": self.fused_batches,
-                "fused_frames": self.fused_frames}
+                "fused_frames": self.fused_frames,
+                "flush_orphans": self.orphaned}

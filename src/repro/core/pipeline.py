@@ -207,6 +207,15 @@ class Pipeline:
         self._realized = True
         return self
 
+    # -- live reconfiguration ---------------------------------------------------
+    def reconfig(self) -> "ReconfigPlan":
+        """Start a topology edit script against this pipeline (DESIGN.md §6).
+        The returned :class:`~repro.core.reconfig.ReconfigPlan` records
+        swap/relink/add/remove edits; hand it to ``Runtime.reconfigure`` to
+        prepare, warm and commit the edit while the stream runs."""
+        from .reconfig import ReconfigPlan
+        return ReconfigPlan(self)
+
     # -- params / state --------------------------------------------------------
     def init(self, rng) -> Dict[str, dict]:
         if not self._realized:

@@ -137,9 +137,17 @@ class MqttSink(Element):
     def negotiate(self, in_caps):
         caps = in_caps[0] if in_caps else Caps.ANY
         if self.broker is not None and self.transport != Transport.DIRECT:
-            self.registration = self.broker.register(
-                self.topic, caps, self.channel,
-                codec=self.codec, element=self.name)
+            # register once, idempotently: runtime re-wires and reconfig
+            # commits re-realize the pipeline — a fresh registration per
+            # realize would duplicate the topic (and a shadow realize during
+            # a prepare would advertise a publisher nobody committed); caps
+            # changes from an upstream edit update the standing registration
+            if self.registration is None:
+                self.registration = self.broker.register(
+                    self.topic, caps, self.channel,
+                    codec=self.codec, element=self.name)
+            else:
+                self.registration.caps = caps
         self._caps = caps
         return []
 

@@ -1,0 +1,555 @@
+"""Zero-loss live reconfiguration — prepare/commit hot swap (DESIGN.md §6).
+
+The paper's among-device vision needs pipelines that survive devices
+joining, leaving and changing roles at runtime; NNStreamer exposes this as
+dynamic pipeline control (element swap without teardown — arXiv
+2101.06371's ``Processing.setModules`` applies new modules "on the next
+run").  Here a topology edit becomes a first-class runtime operation with
+prepare → warm → commit → drain semantics:
+
+* **prepare** — the edit script (:class:`ReconfigPlan`) is applied to a
+  *shadow* copy of the live topology: unchanged elements are SHARED by
+  object identity (their channels, bindings and queued frames carry
+  intrinsically), new elements are fresh.  The shadow realizes off the
+  serving path; a caps/trace error here rolls back before anything
+  observable changed.
+* **warm** — the shadow plan's executables are created in the
+  fingerprint-keyed registry (core/plan.py): an unchanged fingerprint is a
+  cache HIT (zero retrace — the exec-cache makes re-realization free), a
+  new fingerprint pre-creates the same executable set the live plan uses,
+  and pure plans are lowered/compiled ahead of the cutover so the first
+  post-commit tick pays no trace.
+* **commit** — at a tick boundary: the run's pipe/params/state swap to the
+  shadow (kept elements keep their live state entries, new elements get
+  fresh ones), removed elements retire (registrations unregister → clients
+  re-bind via the exactly-once win-back; bindings close; batchers drop),
+  and new broker-facing elements wire in.  Queued channel/pubsub frames and
+  in-flight :class:`~repro.core.plan.PendingQuery` s are carried across the
+  swap by the PR-3 rebind machinery — shared elements keep their queues,
+  paused frames complete on the epoch they started in — so zero frames are
+  lost and post-commit answers are bitwise what a freshly-built pipeline
+  produces.
+* **drain** — a run with frames still paused at a query client does not cut
+  over mid-frame: the commit defers (status ``draining``) until its parked
+  frames resolve, expire, or the target dies (rollback).
+
+Failover is the UNPLANNED half of the same machinery: a server death or
+revival is a topology edit nobody prepared, so the broker watch events that
+PR-3 special-cased inside the scheduler now route through
+:meth:`ReconfigManager.on_broker_event` — one copy of the endpoint
+lifecycle (:func:`teardown_endpoint` / :func:`activate_endpoint`) shared by
+planned removals, planned additions, crashes and revivals alike.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from .pipeline import Link, Pipeline
+from .pubsub import MqttSink, MqttSrc
+from .query import (QueryServerEndpoint, TensorQueryClient,
+                    TensorQueryServerSrc)
+
+__all__ = ["ReconfigError", "ReconfigPlan", "Reconfiguration",
+           "ReconfigManager", "teardown_endpoint", "activate_endpoint"]
+
+
+class ReconfigError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Endpoint lifecycle — ONE copy, shared by planned and unplanned edits
+# ---------------------------------------------------------------------------
+
+def teardown_endpoint(ep: QueryServerEndpoint) -> int:
+    """Take a query-server endpoint out of service: stop serving NOW and
+    purge its channels.  Queued requests are orphans the scheduler
+    re-dispatches from its own PendingQuery records (the count is returned
+    for the orphan ledger); the per-client response channels are released
+    outright — clients re-bind away, and stale pre-death answers must never
+    satisfy a post-revival frame (a purge that only cleared queues would
+    also leak one orphaned Channel per client per epoch, forever)."""
+    ep.alive = False
+    orphans = len(ep.requests)
+    ep.requests.q.clear()
+    ep.responses.clear()
+    return orphans
+
+
+def activate_endpoint(ep: QueryServerEndpoint):
+    """Bring a query-server endpoint (back) into service as a FRESH epoch:
+    whatever a previous life left queued is invalid — returning clients get
+    new response channels on their first routed answer."""
+    ep.alive = True
+    ep.requests.q.clear()
+    ep.responses.clear()
+
+
+# ---------------------------------------------------------------------------
+# Edit script
+# ---------------------------------------------------------------------------
+
+class ReconfigPlan:
+    """A topology edit script against a live pipeline.
+
+    Edits are recorded, not applied; :meth:`apply_to` materializes them on a
+    shadow copy whose unchanged elements are the LIVE objects (shared by
+    identity — that sharing is what carries queued frames, bindings and
+    registrations across the swap for free).  Vocabulary:
+
+    * ``swap(name, new_elem)`` — replace the element while keeping its name
+      and wiring (the NNStreamer "swap a filter without teardown" case; the
+      new element adopts ``name`` so param/state keys stay aligned);
+    * ``relink(src, dst, ...)`` — re-route a link: the edge into
+      ``(dst, dst_pad)`` now comes from ``(src, src_pad)``;
+    * ``add(elem)`` / ``link(src, dst, ...)`` — grow the graph (a new
+      query-server endpoint, a new pubsub binding);
+    * ``remove(name)`` — drop an element and every link touching it
+      (removing ALL elements decommissions the run — the scheduler retires
+      it at commit).
+    """
+
+    def __init__(self, pipe: Pipeline):
+        self.pipe = pipe
+        self._edits: List[Tuple] = []
+
+    # -- vocabulary -----------------------------------------------------------
+    def swap(self, name: str, new_elem) -> "ReconfigPlan":
+        self._edits.append(("swap", name, new_elem))
+        return self
+
+    def relink(self, src: str, dst: str, src_pad: int = 0,
+               dst_pad: int = 0) -> "ReconfigPlan":
+        self._edits.append(("relink", src, dst, src_pad, dst_pad))
+        return self
+
+    def add(self, elem) -> "ReconfigPlan":
+        self._edits.append(("add", elem))
+        return self
+
+    def link(self, src: str, dst: str, src_pad: int = 0,
+             dst_pad: int = 0) -> "ReconfigPlan":
+        self._edits.append(("link", src, dst, src_pad, dst_pad))
+        return self
+
+    def remove(self, name: str) -> "ReconfigPlan":
+        self._edits.append(("remove", name))
+        return self
+
+    # -- materialization ------------------------------------------------------
+    def apply_to(self, live: Pipeline) -> Pipeline:
+        """Build the shadow: same element objects where unchanged, fresh
+        ``Link`` records throughout (links are mutated by swaps; the live
+        pipeline's wiring must stay intact for rollback)."""
+        shadow = Pipeline(name=live.name)
+        shadow.elements = dict(live.elements)
+        shadow.links = [Link(l.src, l.src_pad, l.dst, l.dst_pad)
+                        for l in live.links]
+        for edit in self._edits:
+            kind = edit[0]
+            if kind == "swap":
+                _, name, new_elem = edit
+                old = shadow.elements.get(name)
+                if old is None:
+                    raise ReconfigError(f"swap: no element {name!r}")
+                new_elem.name = name
+                shadow.elements[name] = new_elem
+                for l in shadow.links:
+                    if l.src is old:
+                        l.src = new_elem
+                    if l.dst is old:
+                        l.dst = new_elem
+            elif kind == "relink":
+                _, src, dst, src_pad, dst_pad = edit
+                s, d = self._lookup(shadow, src), self._lookup(shadow, dst)
+                shadow.links = [l for l in shadow.links
+                                if not (l.dst is d and l.dst_pad == dst_pad)]
+                shadow.links.append(Link(s, src_pad, d, dst_pad))
+            elif kind == "add":
+                _, elem = edit
+                if elem.name in shadow.elements:
+                    raise ReconfigError(f"add: duplicate name {elem.name!r}")
+                shadow.elements[elem.name] = elem
+            elif kind == "link":
+                _, src, dst, src_pad, dst_pad = edit
+                s, d = self._lookup(shadow, src), self._lookup(shadow, dst)
+                shadow.links.append(Link(s, src_pad, d, dst_pad))
+            elif kind == "remove":
+                _, name = edit
+                gone = shadow.elements.pop(name, None)
+                if gone is None:
+                    raise ReconfigError(f"remove: no element {name!r}")
+                shadow.links = [l for l in shadow.links
+                                if l.src is not gone and l.dst is not gone]
+        return shadow
+
+    @staticmethod
+    def _lookup(shadow: Pipeline, name: str):
+        elem = shadow.elements.get(name)
+        if elem is None:
+            raise ReconfigError(f"no element {name!r} in topology")
+        return elem
+
+
+# ---------------------------------------------------------------------------
+# One reconfiguration: the prepare/warm/commit/drain/rollback state machine
+# ---------------------------------------------------------------------------
+
+class Reconfiguration:
+    """State machine for one topology edit on one live pipeline run.
+
+    ``pending → prepared → warming → [draining →] committed`` on success;
+    any failure (shadow realize error, target device death mid-warm)
+    lands in ``rolled_back`` with ``error``/``reason`` recorded — never
+    limbo.  The manager drives :meth:`commit` at tick boundaries only."""
+
+    def __init__(self, runtime, run, plan: ReconfigPlan,
+                 warm_ticks: int = 1, rng=None, kind: str = "planned"):
+        self.runtime = runtime
+        self.run = run
+        self.plan = plan
+        self.warm_ticks = max(0, int(warm_ticks))
+        self.rng = rng
+        self.kind = kind
+        self.requested_tick = runtime.ticks
+        self.status = "pending"
+        self.reason: Optional[str] = None
+        self.error: Optional[Exception] = None
+        self.shadow: Optional[Pipeline] = None
+        self.new_params: Optional[dict] = None
+        self.frames_carried = 0
+        self.committed_tick: Optional[int] = None
+
+    # -- prepare ---------------------------------------------------------------
+    def prepare(self) -> "Reconfiguration":
+        """Build and realize the shadow topology off the serving path.
+        Consumer-side NEW elements (mqttsrc, query clients) connect to the
+        broker here so caps discovery sees the real publishers; publisher
+        registration (mqttsink, serversrc) waits for commit — a prepared
+        server must never win client bindings before it serves."""
+        try:
+            shadow = self.plan.apply_to(self.run.pipe)
+            live = self.run.pipe.elements
+            for e in shadow.elements.values():
+                if live.get(e.name) is e:
+                    continue
+                if isinstance(e, (MqttSrc, TensorQueryClient)) \
+                        and e.broker is None:
+                    e.connect(self.runtime.broker)
+            shadow.realize()
+            self.new_params = self._carry_params(shadow)
+            # the shadow realize re-negotiated the SHARED elements' caps;
+            # restore the live topology's negotiation so the stream keeps
+            # serving the committed config through the warm window (both
+            # fingerprints are cached — neither realize retraces anything)
+            self.run.pipe._realized = False
+            self.run.pipe.realize()
+            self.shadow = shadow
+            self.status = "prepared"
+        except Exception as exc:  # caps error, trace error, bad edit
+            self.error = exc
+            self.rollback("prepare-failed")
+        return self
+
+    def _carry_params(self, shadow: Pipeline) -> dict:
+        """Kept elements keep their live param entries; new elements init
+        fresh (params are static across ticks, so prepare-time is safe —
+        STATE is snapshotted at commit, it evolves every tick)."""
+        live = self.run.pipe.elements
+        params: dict = {}
+        rng = self.rng if self.rng is not None else jax.random.PRNGKey(0)
+        for elem in shadow._order:
+            if live.get(elem.name) is elem:
+                if elem.name in self.run.params:
+                    params[elem.name] = self.run.params[elem.name]
+            else:
+                rng, sub = jax.random.split(rng)
+                p = elem.init_params(sub)
+                if p:
+                    params[elem.name] = p
+        return params
+
+    def _carry_state(self) -> dict:
+        state: dict = {}
+        live = self.run.pipe.elements
+        for elem in self.shadow._order:
+            if live.get(elem.name) is elem:
+                if elem.name in self.run.state:
+                    state[elem.name] = self.run.state[elem.name]
+            else:
+                s = elem.init_state()
+                if s:
+                    state[elem.name] = s
+        return state
+
+    # -- warm ------------------------------------------------------------------
+    def warm(self) -> "Reconfiguration":
+        """Create the shadow plan's registry entry and pre-create the same
+        executable set the live plan carries.  Unchanged fingerprints hit
+        the LRU cache (no retrace — the churn contract test_exec_cache
+        pins); genuinely new topologies pay their trace HERE, off the
+        serving path, and pure plans are lowered/compiled so the cutover
+        tick dispatches a ready executable."""
+        if self.status != "prepared":
+            return self
+        plan = self.shadow.plan
+        plan._cache()
+        old_plan = self.run.pipe.plan
+        mesh = self.runtime.mesh
+        mesh_fp = plan._mesh_key(mesh)
+        for key in list(old_plan._cache()["fns"]):
+            try:
+                if key[0] == "step":
+                    plan.compiled_step(donate=key[1])
+                elif key[0] == "step_n":
+                    plan.compiled_step_n(
+                        hoist_io=key[1], hoist_queries=key[2], donate=key[3],
+                        mesh=mesh if key[4] == mesh_fp else None)
+                elif key[0] == "serve_batch":
+                    plan.compiled_serve_batch(
+                        donate=key[1], mesh=mesh if key[2] == mesh_fp
+                        else None, codec=key[3])
+            except Exception:
+                pass  # warm is best-effort; commit never depends on it
+        if plan.deferred_compilable:
+            plan.compiled_deferred_segment(None)
+            for idx in plan.client_idxs:
+                plan.compiled_deferred_segment(idx)
+        if plan.pure and plan.ops:
+            try:
+                fn = plan.compiled_step()
+                fn.lower(self.new_params, self._carry_state()).compile()
+            except Exception:
+                pass  # ahead-of-time compile is an optimization only
+        self.status = "warming"
+        return self
+
+    # -- commit ----------------------------------------------------------------
+    def commit(self) -> "Reconfiguration":
+        """Cut over at a tick boundary.  The manager guarantees the run has
+        no frame paused mid-schedule (drain) and the target device is alive;
+        here the swap itself is a handful of pointer moves — the pause the
+        stream sees is bounded by plan-cache lookups, not traces."""
+        if self.status not in ("prepared", "warming", "draining"):
+            return self
+        rt, run = self.runtime, self.run
+        old_pipe = run.pipe
+        shadow = self.shadow
+        self.frames_carried += self._count_carried(old_pipe, shadow)
+        run.pipe = shadow
+        run.params = self.new_params
+        run.state = self._carry_state_from(old_pipe)
+        run.mesh_params = None
+        # retire what left the topology (fires unregister events — clients
+        # re-bind through the exactly-once win-back, orphans are accounted
+        # by the same teardown the unplanned path uses)
+        for name, e in old_pipe.elements.items():
+            if shadow.elements.get(name) is not e:
+                rt._retire_element(e)
+        if not shadow.elements:
+            run.retired = True
+            run.step_fn = None
+            self.status = "committed"
+            self.committed_tick = rt.ticks
+            return self
+        # wire what joined (publisher registration happens HERE — prepared
+        # servers become discoverable only once they actually serve) and
+        # re-realize with the broker in place; the fingerprint matches the
+        # warmed shadow, so this is a cache hit, not a retrace
+        dev = rt._device_of(run)
+        for e in shadow.elements.values():
+            if isinstance(e, (MqttSink, MqttSrc)) and e.sync_clock is None \
+                    and dev is not None:
+                e.sync_clock = dev.pipeline_clock
+        rt._wire(dev, run)
+        run.step_fn = run.pipe.compiled_step() \
+            if (run.jit and run.pipe.plan.pure) else run.pipe.step
+        for b in rt._batchers.values():
+            if b.run is run:
+                b.on_reconfig()
+        self.status = "committed"
+        self.committed_tick = rt.ticks
+        return self
+
+    def _carry_state_from(self, old_pipe: Pipeline) -> dict:
+        state: dict = {}
+        for elem in self.shadow._order:
+            if old_pipe.elements.get(elem.name) is elem:
+                if elem.name in self.run.state:
+                    state[elem.name] = self.run.state[elem.name]
+            else:
+                s = elem.init_state()
+                if s:
+                    state[elem.name] = s
+        return state
+
+    def _count_carried(self, old_pipe: Pipeline, shadow: Pipeline) -> int:
+        """Frames that cross the swap: queued pubsub frames on kept host
+        sources (their channels are shared by identity) and queued requests
+        on kept query-server endpoints.  Dropped backlogs of REMOVED
+        subscribers are folded into the run's drop accounting instead — a
+        replaced binding abandons its history, it does not lose frames
+        silently."""
+        carried = 0
+        for name, e in shadow.elements.items():
+            if old_pipe.elements.get(name) is not e:
+                continue
+            if isinstance(e, MqttSrc):
+                try:
+                    carried += e.queued()
+                except Exception:
+                    carried += len(e._pushback)
+            elif isinstance(e, TensorQueryServerSrc):
+                carried += len(e.endpoint.requests)
+        for name, e in old_pipe.elements.items():
+            if shadow.elements.get(name) is e:
+                continue
+            if isinstance(e, MqttSrc):
+                self.run.carried_drops += e.drops + len(e._pushback)
+                for _, rx in e._rx_hist.values():
+                    self.run.carried_drops += len(rx)
+            elif isinstance(e, MqttSink):
+                self.run.carried_drops += e.channel.drops
+        return carried
+
+    # -- rollback --------------------------------------------------------------
+    def rollback(self, reason: str) -> "Reconfiguration":
+        """Return cleanly to the old plan.  The shadow realize mutated the
+        SHARED elements' negotiated caps, so the live pipeline re-realizes —
+        its fingerprint is unchanged, making that a cache hit, not a
+        retrace; bindings opened for never-committed elements close."""
+        if self.status in ("committed", "rolled_back"):
+            return self
+        self.reason = reason
+        if self.shadow is not None:
+            live = self.run.pipe.elements
+            for e in self.shadow.elements.values():
+                if live.get(e.name) is e:
+                    continue
+                binding = getattr(e, "binding", None)
+                if binding is not None:
+                    binding.close()
+                    e.binding = None
+        try:
+            self.run.pipe._realized = False
+            self.run.pipe.realize()
+        except Exception:
+            pass  # the live topology realized before; caps restore is best-effort
+        self.status = "rolled_back"
+        return self
+
+
+# ---------------------------------------------------------------------------
+# Manager: owns planned requests, tick stepping, and the unplanned path
+# ---------------------------------------------------------------------------
+
+class ReconfigManager:
+    """Runtime-owned coordinator for every topology change, planned or not.
+
+    Planned: :meth:`request` prepares + warms immediately, then
+    :meth:`step` (top of every tick — the tick boundary) commits once the
+    warm window elapsed and the run has drained its paused frames, or rolls
+    back if the target died mid-warm.  Unplanned: broker liveness events
+    route through :meth:`on_broker_event` — server death/revival is a
+    topology edit nobody prepared, handled by the same endpoint lifecycle
+    helpers planned removals use (the PR-3 scheduler special case, deleted).
+    """
+
+    def __init__(self, runtime):
+        self.rt = runtime
+        self.pending: List[Reconfiguration] = []
+        self.planned = 0
+        self.unplanned = 0
+        self.rollbacks = 0
+        self.frames_carried = 0
+        #: (tick, kind, status, reason) — one row per terminal transition
+        self.log: List[Tuple[int, str, str, Optional[str]]] = []
+        self._in_planned_commit = False
+
+    # -- planned ---------------------------------------------------------------
+    def request(self, run, plan: ReconfigPlan, warm_ticks: int = 1,
+                rng=None) -> Reconfiguration:
+        rc = Reconfiguration(self.rt, run, plan, warm_ticks=warm_ticks,
+                             rng=rng)
+        rc.prepare()
+        if rc.status == "prepared":
+            rc.warm()
+            self.pending.append(rc)
+        else:
+            self._note_terminal(rc)
+        return rc
+
+    def step(self):
+        """Advance every pending reconfiguration at the tick boundary."""
+        if not self.pending:
+            return
+        still: List[Reconfiguration] = []
+        for rc in self.pending:
+            dev = self.rt._device_of(rc.run)
+            if dev is None or not dev.alive:
+                rc.rollback("target-dead")
+            elif self.rt.ticks - rc.requested_tick > rc.warm_ticks:
+                if self.rt._run_in_flight(rc.run):
+                    # drain: never cut over mid-frame — paused PendingQuerys
+                    # complete on the epoch they started in first
+                    rc.status = "draining"
+                else:
+                    self._in_planned_commit = True
+                    try:
+                        rc.commit()
+                    finally:
+                        self._in_planned_commit = False
+            if rc.status in ("committed", "rolled_back"):
+                self._note_terminal(rc)
+            else:
+                still.append(rc)
+        self.pending = still
+
+    def _note_terminal(self, rc: Reconfiguration):
+        if rc.status == "committed":
+            self.planned += 1
+            self.frames_carried += rc.frames_carried
+        else:
+            self.rollbacks += 1
+        self.log.append((self.rt.ticks, rc.kind, rc.status, rc.reason))
+
+    # -- unplanned (failover = a reconfiguration nobody prepared) --------------
+    def on_broker_event(self, event: str, reg):
+        """Broker liveness transition on a query-server endpoint: apply it
+        as an immediate unplanned reconfiguration — teardown on death
+        (orphans re-dispatch from PendingQuery records), fresh-epoch
+        activation on registration/revival.  Events fired BY a planned
+        commit (its retires/registers) are that commit's bookkeeping, not a
+        second reconfiguration."""
+        ep = reg.endpoint
+        if not isinstance(ep, QueryServerEndpoint):
+            return
+        # initial wiring (tick 0) is topology CONSTRUCTION, not a change;
+        # events fired by a planned commit's retire/register are that
+        # commit's bookkeeping, not a second reconfiguration — either way
+        # the endpoint lifecycle itself always runs
+        counts = self.rt.ticks > 0 and not self._in_planned_commit
+        if event in ("down", "unregister"):
+            orphans = teardown_endpoint(ep)
+            if orphans:
+                self.rt.orphaned_requests += orphans
+            if counts:
+                self.unplanned += 1
+                self.log.append((self.rt.ticks, "unplanned", event,
+                                 reg.down_reason))
+        elif event == "register":
+            activate_endpoint(ep)
+            if counts:
+                self.unplanned += 1
+                self.log.append((self.rt.ticks, "unplanned", event, None))
+
+    # -- stats -----------------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {"reconfigs": self.planned + self.unplanned,
+                "planned": self.planned,
+                "unplanned": self.unplanned,
+                "rollbacks": self.rollbacks,
+                "frames_carried": self.frames_carried,
+                "pending": len(self.pending)}

@@ -39,9 +39,21 @@ silently dead device's registrations expire and fire ``down`` events; query
 requests whose serving endpoint dies in flight are re-dispatched — each
 ``PendingQuery`` retains its request buffer and records the endpoint it was
 shipped to — to the next-ranked surviving server, or *parked* until one
-registers (retried at the top of every tick).  Killing a server therefore
-loses zero client requests; with a surviving (same-seeded) server the
-answers are bitwise what the fault-free run produces.
+registers (retried at the top of every tick; ``park_deadline_ticks`` bounds
+how long — an expired park becomes an accounted, client-visible error
+instead of an unbounded busy-skip).  Killing a server therefore loses zero
+client requests; with a surviving (same-seeded) server the answers are
+bitwise what the fault-free run produces.
+
+Live reconfiguration (DESIGN.md §6): ``Runtime.reconfigure(run, edit)``
+applies a topology edit — swap an element, re-route a link, add/remove an
+endpoint or binding — to a RUNNING pipeline with prepare → warm → commit →
+drain semantics (``core/reconfig.py``): the new plan realizes and warms off
+the serving path, then cuts over at a tick boundary with queued frames and
+in-flight queries carried across the swap.  Broker liveness events route
+through the same machinery (``ReconfigManager.on_broker_event``): a server
+death or revival is an unplanned topology edit, handled by the same
+endpoint teardown/activation a planned remove/add uses.
 
 Mesh-sharded serving (DESIGN.md §4): ``Runtime(mesh=...)`` can lay batched
 query serves and hoisted pub/sub bursts out along the mesh's data axes —
@@ -111,6 +123,17 @@ class _PipeRun:
     #: mesh-replicated copy of ``params``, placed lazily at first sharded
     #: burst (re-broadcasting params per dispatch costs more than the serve)
     mesh_params: Optional[dict] = None
+    #: whether the run steps through the cached compiled plan (Device.add_
+    #: pipeline's ``jit`` flag, retained so a hot swap rebuilds ``step_fn``
+    #: in the same execution mode)
+    jit: bool = True
+    #: decommissioned by a reconfiguration that removed every element — the
+    #: scheduler skips it without counting skips (there is nothing to run)
+    retired: bool = False
+    #: drops inherited from elements a reconfiguration REMOVED: their queued
+    #: backlogs and leaky-drop histories leave the topology with them, and
+    #: the conservation accounting must not forget those frames
+    carried_drops: int = 0
 
     @property
     def host_srcs(self) -> List[MqttSrc]:
@@ -143,7 +166,8 @@ class Device:
         # pure pipelines step through the cached compiled plan; host-impure
         # ones run the plan interpreted (their apply does channel I/O)
         fn = pipe.compiled_step() if (jit and pipe.plan.pure) else pipe.step
-        run = _PipeRun(pipe=pipe, params=params, state=state, step_fn=fn)
+        run = _PipeRun(pipe=pipe, params=params, state=state, step_fn=fn,
+                       jit=jit)
         self.runs.append(run)
         return run
 
@@ -154,7 +178,8 @@ class Runtime:
                  query_batch=DEFAULT_QUERY_BATCH,
                  lease_ticks: Optional[int] = None,
                  mesh=None, shard_mode: str = "auto",
-                 fused_wire: bool = True):
+                 fused_wire: bool = True,
+                 park_deadline_ticks: Optional[int] = None):
         self.broker = broker or Broker()
         if lease_ticks is not None:
             self.broker.default_lease_ticks = lease_ticks
@@ -187,16 +212,25 @@ class Runtime:
         #: endpoint_id -> QueryBatcher for every runtime-wired serversrc
         self._batchers: Dict[int, QueryBatcher] = {}
         #: frames paused at a query client with NO live server to take the
-        #: request — retried at the top of every tick until one registers
-        self._parked: List[Tuple[_PipeRun, PendingQuery]] = []
+        #: request — retried at the top of every tick until one registers,
+        #: each entry ``(run, pq, parked_at_tick)``; the park tick survives
+        #: re-parks so ``park_deadline_ticks`` measures TOTAL time parked
+        self._parked: List[Tuple[_PipeRun, PendingQuery, int]] = []
+        #: ticks a frame may stay parked before it expires into an accounted
+        #: client-visible error (None = park forever, the pre-PR-6 behavior)
+        self.park_deadline_ticks = park_deadline_ticks
         # failover accounting (DESIGN.md §3)
         self.redispatches = 0
         self.parked_total = 0
+        self.parked_expired = 0
         self.orphaned_requests = 0
         self.ticks = 0
-        # observe liveness transitions: a down/unregister of a query server
-        # kills its endpoint's data plane and purges orphaned channel state
-        self.broker.watch(self._on_broker_event)
+        # every topology change — planned hot swaps AND broker liveness
+        # events (a server death/revival is an unplanned edit) — routes
+        # through the reconfiguration manager (DESIGN.md §6)
+        from ..core.reconfig import ReconfigManager
+        self.reconfig = ReconfigManager(self)
+        self.broker.watch(self.reconfig.on_broker_event)
 
     def add_device(self, device: Device) -> Device:
         self.devices.append(device)
@@ -223,7 +257,8 @@ class Runtime:
                     e.endpoint, run, self.batching,
                     inline_step=lambda r=run: self._run_once(r),
                     mesh=self.mesh, shard_mode=self.shard_mode,
-                    fused=self.fused_wire)
+                    fused=self.fused_wire,
+                    on_orphans=self._count_orphans)
                 self._batchers[e.endpoint.endpoint_id] = batcher
                 e.connect(self.broker, inline_runner=batcher.flush)
         # (re)negotiate with broker wiring in place so mqttsink registers;
@@ -232,35 +267,61 @@ class Runtime:
         run.pipe._realized = False
         run.pipe.realize()
 
-    # -- liveness: heartbeats, leases, death observation --------------------------
-    def _on_broker_event(self, event: str, reg):
-        """Keep the data plane consistent with broker liveness: a downed
-        query server stops serving immediately (its batcher refuses to
-        flush) and its channels are purged — queued requests are orphans the
-        scheduler re-dispatches from its own PendingQuery records, and stale
-        pre-death answers must never satisfy a post-revival frame."""
-        ep = reg.endpoint
-        if not isinstance(ep, QueryServerEndpoint):
-            return
-        if event in ("down", "unregister"):
-            ep.alive = False
-            orphans = len(ep.requests)
-            if orphans:
-                self.orphaned_requests += orphans
-            ep.requests.q.clear()
-            # release the per-client response channels outright, not just
-            # their queues: clients rebind away from a dead server, and a
-            # kill/revive cycle that only cleared queues would accumulate
-            # one orphaned Channel per client id per epoch, forever
-            ep.responses.clear()
-        elif event == "register":
-            ep.alive = True
-            ep.requests.q.clear()
-            # fresh epoch: stale pre-death channels must never satisfy a
-            # post-revival frame, and returning clients get new channels on
-            # their first routed answer (client_channel auto-creates)
-            ep.responses.clear()
+    # -- live reconfiguration (DESIGN.md §6) --------------------------------------
+    def reconfigure(self, run: _PipeRun, edit, warm_ticks: int = 1,
+                    rng=None):
+        """Apply a topology edit to a RUNNING pipeline with prepare → warm →
+        commit → drain semantics.  ``edit`` is a
+        :class:`~repro.core.reconfig.ReconfigPlan` (``run.pipe.reconfig()``)
+        or a callable receiving a fresh one; the edit prepares and warms
+        immediately (off the serving path) and commits at the first tick
+        boundary after ``warm_ticks`` ticks — or rolls back with explicit
+        stats if the prepare fails or the target device dies mid-warm.
+        Returns the :class:`~repro.core.reconfig.Reconfiguration` handle
+        (``status``, ``frames_carried``, ``committed_tick``)."""
+        from ..core.reconfig import ReconfigPlan
+        plan = edit
+        if not isinstance(edit, ReconfigPlan):
+            plan = ReconfigPlan(run.pipe)
+            edit(plan)
+        return self.reconfig.request(run, plan, warm_ticks=warm_ticks,
+                                     rng=rng)
 
+    def _device_of(self, run: _PipeRun) -> Optional[Device]:
+        for dev in self.devices:
+            if run in dev.runs:
+                return dev
+        return None
+
+    def _run_in_flight(self, run: _PipeRun) -> bool:
+        """Whether the run has a frame paused mid-schedule across ticks (a
+        parked PendingQuery) — a commit must drain those on the old epoch
+        before cutting over, never swap a plan out from under a live walk."""
+        return any(r is run for r, _, _ in self._parked)
+
+    def _count_orphans(self, n: int):
+        """Orphan-ledger hook for mid-flush deaths (QueryBatcher)."""
+        self.orphaned_requests += n
+
+    def _retire_element(self, e: Element):
+        """Take an element a committed reconfiguration removed out of the
+        control plane: unregister standing registrations (fires
+        ``unregister`` — clients re-bind via the exactly-once win-back, and
+        a query endpoint tears down through the manager's event path), close
+        consumer bindings, and drop the endpoint's batcher."""
+        reg = getattr(e, "registration", None)
+        if reg is not None:
+            self.broker.unregister(reg)
+            e.registration = None
+        binding = getattr(e, "binding", None)
+        if binding is not None:
+            binding.close()
+            e.binding = None
+        ep = getattr(e, "endpoint", None)
+        if isinstance(ep, QueryServerEndpoint):
+            self._batchers.pop(ep.endpoint_id, None)
+
+    # -- liveness: heartbeats, leases -----------------------------------------
     def _heartbeat_and_lease(self):
         """Beat on behalf of every live device's registrations, refresh load
         declarations from the serving queues, then advance the broker's
@@ -430,9 +491,13 @@ class Runtime:
             batcher.flush()
         return True
 
-    def _park(self, run: _PipeRun, pq: PendingQuery):
+    def _park(self, run: _PipeRun, pq: PendingQuery,
+              t0: Optional[int] = None):
+        """``t0`` is the tick the frame FIRST parked — re-parks preserve it
+        so the park deadline measures total time stranded, not time since
+        the latest failed retry."""
         self.parked_total += 1
-        self._parked.append((run, pq))
+        self._parked.append((run, pq, self.ticks if t0 is None else t0))
 
     def _retry_parked(self) -> List[Tuple[_PipeRun, PendingQuery]]:
         """Give every parked frame another shot at dispatch (a server may
@@ -440,12 +505,43 @@ class Runtime:
         frames stay parked."""
         parked, self._parked = self._parked, []
         pending = []
-        for run, pq in parked:
+        for run, pq, t0 in parked:
             if self._dispatch_query(pq):
                 pending.append((run, pq))
             else:
-                self._park(run, pq)
+                self._park(run, pq, t0)
         return pending
+
+    def _expire_parked(self):
+        """Park deadline (DESIGN.md §6 satellite): a frame parked longer
+        than ``park_deadline_ticks`` stops burning a busy-skip per tick and
+        degrades EXPLICITLY — counted in ``parked_expired`` and answered
+        with a client-visible error buffer in the pipeline's sink log; the
+        pipeline is freed to start fresh frames next tick."""
+        if self.park_deadline_ticks is None or not self._parked:
+            return
+        keep = []
+        for run, pq, t0 in self._parked:
+            if self.ticks - t0 >= self.park_deadline_ticks:
+                self.parked_expired += 1
+                self._expire_query(run, pq)
+            else:
+                keep.append((run, pq, t0))
+        self._parked = keep
+
+    def _expire_query(self, run: _PipeRun, pq: PendingQuery):
+        """Answer an expired park with an error frame: empty tensors, meta
+        naming the operation that never found a server — logged under
+        ``<client>.error`` so clients distinguish degradation from silence.
+        The frame itself is abandoned (its walk never resumes)."""
+        qc = pq.client
+        err = StreamBuffer(tensors=(), meta={
+            "error": "park-deadline",
+            "operation": qc.operation,
+            "parked_ticks": self.park_deadline_ticks,
+            "redispatches": pq.redispatches,
+            "tick": self.ticks})
+        run.sink_log.setdefault(f"{qc.name}.error", []).append(err)
 
     def _drain_queries(self, pending: List[Tuple[_PipeRun, PendingQuery]]):
         """Tick-deadline flush: serve every gathered request, resume the
@@ -597,16 +693,23 @@ class Runtime:
         for dev in self.devices:
             dev.clock.advance(self.tick_ns)
         self._heartbeat_and_lease()
+        # tick boundary: pending reconfigurations commit (or drain/roll
+        # back) BEFORE any frame of this tick starts — a swap never lands
+        # under a frame mid-walk
+        self.reconfig.step()
+        self._expire_parked()
         # frames parked from earlier ticks go first (a server may be back);
         # their pipelines must not start a second concurrent frame
         pending = self._retry_parked()
         busy = {id(run) for run, _ in pending} | \
-               {id(run) for run, _ in self._parked}
+               {id(run) for run, _, _ in self._parked}
         fresh: List[Tuple[_PipeRun, PendingQuery]] = []
         for dev in self.devices:
             if not dev.alive:
                 continue  # a dead device runs nothing (chaos harness)
             for run in dev.runs:
+                if run.retired:
+                    continue  # decommissioned by a reconfiguration
                 if any(isinstance(e, TensorQueryServerSrc)
                        for e in run.pipe.elements.values()):
                     continue  # servers run batched/inline, driven by clients
@@ -642,7 +745,11 @@ class Runtime:
         for dev in self.devices:
             for i, run in enumerate(dev.runs):
                 key = f"{dev.name}/p{i}"
-                drops = 0
+                # carried_drops: backlogs of elements a reconfiguration
+                # removed — their frames left the topology accounted, and
+                # conservation (published == consumed + drops + queued)
+                # must survive the swap
+                drops = run.carried_drops
                 for e in run.pipe.elements.values():
                     if isinstance(e, MqttSrc):
                         drops += e.drops   # across every publisher bound
@@ -658,10 +765,13 @@ class Runtime:
         out["failover"] = {"redispatches": self.redispatches,
                            "parked_total": self.parked_total,
                            "parked_now": len(self._parked),
+                           "parked_expired": self.parked_expired,
                            "orphaned_requests": self.orphaned_requests}
+        out["reconfig"] = self.reconfig.stats()
         agg = {"flushes": 0, "batches": 0, "batched_frames": 0,
                "sequential_frames": 0, "sharded_batches": 0,
-               "sharded_frames": 0, "fused_batches": 0, "fused_frames": 0}
+               "sharded_frames": 0, "fused_batches": 0, "fused_frames": 0,
+               "flush_orphans": 0}
         for b in self._batchers.values():
             for k, v in b.stats().items():
                 agg[k] += v

@@ -20,6 +20,13 @@ Fault vocabulary:
   ``after_n``-th request of that tick lands, i.e. mid-gather with earlier
   requests already stranded on the dead endpoint.  This is the scenario the
   in-flight failover exists for.
+* ``kill_server_mid_flush(tick, device, ssrc, ssink, after_answers=N)`` —
+  arms a tripwire on the serving sink's answer paths (eager ``apply`` and
+  fused ``push_wire``): the device dies the instant the ``after_answers``-th
+  answer of that tick lands, i.e. MID-FLUSH — requests the batcher already
+  popped off the request channel are in its hands, invisible to the down
+  event's channel purge, and must reach the orphan ledger instead of being
+  served by the corpse.
 * ``revive_server(tick, device, ssrc)`` — the device returns and re-registers
   under its original registration (same reg_id, so a preferred server wins
   its bindings back).
@@ -94,6 +101,58 @@ class Chaos:
                          f"(fewer than {after_n} sends on tick {tick})"))
 
             chan.push = tripwire
+            self.at(tick + 1, disarm, label=None)
+        return self.at(tick, arm, label=None)
+
+    def kill_server_mid_flush(self, tick: int, device, ssrc, ssink,
+                              after_answers: int = 1) -> "Chaos":
+        """Die while the batcher is SERVING (vs ``kill_server_mid_batch``,
+        which dies while clients are still gathering): the kill fires on the
+        ``after_answers``-th answer push of that tick, so the flush's
+        remaining popped-but-unserved groups race the death.  Same
+        arm/fire/DISARM discipline as the mid-batch tripwire — a vacuous
+        run logs DISARMED instead of masquerading as a survived fault."""
+        def arm():
+            orig_apply = ssink.apply
+            orig_push_wire = ssink.push_wire
+            seen = [0]
+            armed = [True]
+
+            def disarm(quiet: bool = False):
+                if not armed[0]:
+                    return
+                armed[0] = False
+                ssink.__dict__.pop("apply", None)
+                ssink.__dict__.pop("push_wire", None)
+                if not quiet:
+                    self.log.append(
+                        (self.rt.ticks + 1,
+                         f"mid-flush kill of {device.name} DISARMED "
+                         f"(fewer than {after_answers} answers on "
+                         f"tick {tick})"))
+
+            def fire():
+                seen[0] += 1
+                if seen[0] == after_answers:
+                    disarm(quiet=True)  # restore before the kill purges
+                    self._kill(device, ssrc, crash=True)
+                    self.log.append(
+                        (self.rt.ticks,
+                         f"kill {device.name} mid-flush "
+                         f"(answer {after_answers})"))
+
+            def apply_wrap(params, inputs, ctx=None):
+                out = orig_apply(params, inputs, ctx)
+                fire()
+                return out
+
+            def push_wire_wrap(payload, nbytes, client_id):
+                out = orig_push_wire(payload, nbytes, client_id)
+                fire()
+                return out
+
+            ssink.apply = apply_wrap
+            ssink.push_wire = push_wire_wrap
             self.at(tick + 1, disarm, label=None)
         return self.at(tick, arm, label=None)
 

@@ -7,7 +7,10 @@ DESIGN claims three properties this file pins down:
 * an evicted topology that comes back retraces cleanly (fresh entry, same
   results — eviction is a perf event, never a correctness event);
 * anonymous (auto-named) pipelines get fresh element names per parse and
-  therefore never alias each other's executables.
+  therefore never alias each other's executables;
+* reconfiguration churn (DESIGN.md §6) — repeated hot swaps interleaved
+  with failover kills/revivals — never retraces an unchanged fingerprint
+  and keeps the registry LRU-bounded.
 """
 import jax
 import jax.numpy as jnp
@@ -113,3 +116,125 @@ class TestAnonymousPipelinesNeverAlias:
         p2 = parse_launch(desc).realize()
         assert p1.plan.fingerprint == p2.plan.fingerprint
         assert p1.compiled_step() is p2.compiled_step()
+
+
+class TestReconfigurationChurn:
+    """Hot-swap cycles under chaos must leave the registry warm and
+    bounded: once both sides of an A↔B swap have been seen, further cycles
+    — with failover kills/revivals interleaved — create ZERO new jax.jit
+    executables (an unchanged fingerprint never retraces) and never grow
+    ``executable_cache_info()``."""
+
+    @pytest.fixture(autouse=True)
+    def _models(self):
+        from repro.core import TensorSpec
+        from repro.core.elements import register_model
+
+        def init_a(rng):
+            return {"w": jnp.linspace(-1.0, 1.0, 48).reshape(12, 4)}
+
+        def apply_a(p, x):
+            return x.astype(jnp.float32).reshape(1, -1) @ p["w"]
+
+        def init_b(rng):
+            return {"w": jnp.linspace(1.0, -1.0, 48).reshape(12, 4)}
+
+        def apply_b(p, x):
+            return x.astype(jnp.float32).reshape(1, -1) @ p["w"] * 2.0
+
+        def init_c(rng):
+            return {"w": jnp.zeros((12, 4), jnp.float32)}
+
+        def apply_c(p, x):
+            return x.astype(jnp.float32).reshape(1, -1) @ p["w"] - 1.0
+
+        specs = (TensorSpec((1, 4), "float32"),)
+        register_model("churnA", init_a, apply_a, out_specs=specs)
+        register_model("churnB", init_b, apply_b, out_specs=specs)
+        register_model("churnC", init_c, apply_c, out_specs=specs)
+
+    def _fleet(self):
+        from repro.runtime import Device, Runtime
+        rt = Runtime(query_batch=4)
+        hub = Device("hub")
+        sp = parse_launch(
+            "tensor_query_serversrc operation=churn name=ssrc ! "
+            "tensor_filter model=churnA name=filt ! "
+            "tensor_query_serversink name=ssink")
+        sp.elements["ssink"].pair_with(sp.elements["ssrc"])
+        hub_run = hub.add_pipeline(sp, jit=False)
+        rt.add_device(hub)
+        bak = Device("bak")
+        bp = parse_launch(
+            "tensor_query_serversrc operation=churn name=bssrc ! "
+            "tensor_filter model=churnA name=bfilt ! "
+            "tensor_query_serversink name=bssink")
+        bp.elements["bssink"].pair_with(bp.elements["bssrc"])
+        bak.add_pipeline(bp, jit=False)
+        rt.add_device(bak)
+        cl = Device("cl")
+        pc = parse_launch(
+            "testsrc width=2 height=2 ! tensor_converter ! "
+            "tensor_query_client operation=churn name=qc ! appsink name=res")
+        cl_run = cl.add_pipeline(pc, jit=False)
+        rt.add_device(cl)
+        return rt, hub_run, (bak, bp.elements["bssrc"]), cl_run
+
+    @staticmethod
+    def _cycle(chaos, rt, hub_run, bak, bssrc, model):
+        """One churn cycle: planned swap of the serving model with an
+        unplanned kill/revival of the backup server inside its warm
+        window."""
+        from repro.core.element import element_factory
+        t = rt.ticks
+        harness = chaos(rt)
+        harness.kill_server(t + 1, bak, bssrc)
+        harness.revive_server(t + 2, bak, bssrc)
+        rc = rt.reconfigure(
+            hub_run, hub_run.pipe.reconfig().swap(
+                "filt", element_factory("tensor_filter", model=model)),
+            warm_ticks=1)
+        harness.run(3)
+        assert rc.status == "committed"
+        return rc
+
+    def test_swap_cycles_never_retrace_unchanged_fingerprints(
+            self, monkeypatch, chaos):
+        rt, hub_run, (bak, bssrc), cl_run = self._fleet()
+        rt.run(2)
+        # warm-up: both swap targets seen once → both fingerprints (and
+        # their warmed executable sets) live in the registry
+        self._cycle(chaos, rt, hub_run, bak, bssrc, "churnB")
+        self._cycle(chaos, rt, hub_run, bak, bssrc, "churnA")
+        info_warm = executable_cache_info()
+
+        calls = []
+        orig_jit = jax.jit
+        monkeypatch.setattr(
+            jax, "jit",
+            lambda *a, **k: calls.append(a) or orig_jit(*a, **k))
+        for model in ("churnB", "churnA", "churnB", "churnA"):
+            self._cycle(chaos, rt, hub_run, bak, bssrc, model)
+        assert calls == []                     # zero new executables
+        assert executable_cache_info() == info_warm
+        assert cl_run.frames == rt.ticks       # the stream never stalled
+        # control against a vacuous pass: a genuinely NEW topology does
+        # create executables through exactly the intercepted call
+        self._cycle(chaos, rt, hub_run, bak, bssrc, "churnC")
+        assert calls, "counting hook must see real executable creation"
+        assert executable_cache_info()["fingerprints"] > \
+            info_warm["fingerprints"]
+
+    def test_churn_stays_lru_bounded_and_correct(self, monkeypatch, chaos):
+        """With the registry capped far below the working set, churn cycles
+        evict and retrace — bounded memory, and still zero frame loss."""
+        import repro.core.plan as planmod
+        monkeypatch.setattr(planmod, "_EXEC_CACHE_MAX", 3)
+        rt, hub_run, (bak, bssrc), cl_run = self._fleet()
+        rt.run(2)
+        for model in ("churnB", "churnA", "churnB", "churnA"):
+            self._cycle(chaos, rt, hub_run, bak, bssrc, model)
+        assert len(_EXEC_CACHE) <= 3
+        assert cl_run.frames == rt.ticks
+        assert rt.stats()["reconfig"]["planned"] == 4
+        assert rt.stats()["reconfig"]["rollbacks"] == 0

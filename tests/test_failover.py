@@ -49,10 +49,10 @@ def _server(rt, name="hub", operation="op", **specs):
     return dev, run, ps.elements["ssrc"]
 
 
-def _clients(rt, n, operation="op", codec="none"):
+def _clients(rt, n, operation="op", codec="none", prefix="tv"):
     runs = []
     for i in range(n):
-        dev = Device(f"tv{i}")
+        dev = Device(f"{prefix}{i}")
         pc = parse_launch(
             f"testsrc width=2 height=2 ! tensor_converter ! "
             f"tensor_query_client operation={operation} codec={codec} "
@@ -144,6 +144,56 @@ class TestChaosAcceptance:
         assert qb["fused_frames"] == ticks * n_clients
         assert runB.frames >= (ticks - kill_tick) * n_clients
 
+    def test_mid_flush_death_orphans_the_popped_remainder(self, chaos):
+        """Same-tick race pin (DESIGN.md §6 satellite): ``mark_down`` lands
+        while ``QueryBatcher.flush`` is mid-serve — requests the flush
+        already POPPED off the request channel are invisible to the down
+        event's purge, so the dead endpoint's remaining groups must go to
+        the orphan ledger, never be served by the corpse.  Mixed codecs put
+        a group boundary exactly where the kill lands (grouping splits by
+        codec): 3 plain answers push, the death fires, and the 3 quant8
+        requests still in the batcher's hands orphan + re-dispatch.  The
+        3 pushed answers die with the endpoint's purged response channels,
+        so ALL six clients re-dispatch — and every answer stays bitwise
+        the fault-free twin's."""
+        ticks, kill_tick = 6, 3
+
+        rt0 = Runtime(query_batch=8)
+        _server(rt0, name="hubA")
+        _server(rt0, name="hubB")
+        ref_runs = _clients(rt0, 3) + _clients(rt0, 3, codec="quant8",
+                                               prefix="q8tv")
+        rt0.run(ticks)
+
+        rt = Runtime(query_batch=8)
+        devA, runA, ssrcA = _server(rt, name="hubA")
+        devB, runB, ssrcB = _server(rt, name="hubB")
+        cl_runs = _clients(rt, 3) + _clients(rt, 3, codec="quant8",
+                                             prefix="q8tv")
+        harness = chaos(rt)
+        harness.kill_server_mid_flush(kill_tick, devA, ssrcA,
+                                      runA.pipe.elements["ssink"],
+                                      after_answers=3)
+        harness.run(ticks)
+
+        assert any("mid-flush" in label and "DISARMED" not in label
+                   for _, label in harness.log), "the scripted kill fired"
+        for ref, got in zip(ref_runs, cl_runs):
+            assert got.frames == ticks          # zero lost requests
+            a, b = _responses(ref), _responses(got)
+            assert len(a) == len(b) == ticks
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(x, y)  # bitwise vs fault-free
+        # the popped-but-unserved quant8 group hit the flush-orphan ledger
+        qb = rt.stats()["query_batching"]
+        assert qb["flush_orphans"] == 3
+        fo = rt.stats()["failover"]
+        assert fo["orphaned_requests"] >= 3
+        assert fo["redispatches"] >= 6          # purged answers + orphans
+        # hubA answered 2 full ticks plus the pre-kill group, nothing more
+        assert runA.frames == (kill_tick - 1) * 6 + 3
+        assert runB.frames >= (ticks - kill_tick) * 6
+
     def test_dead_fleet_parks_then_recovers_within_two_ticks(self, chaos):
         """No live server at all: frames park (no errors, nothing dropped)
         and complete within 2 ticks of the revival's register event."""
@@ -206,6 +256,71 @@ class TestChaosAcceptance:
         rt.run(8)
         assert rt.broker.expiries == 0
         assert all(r.frames == 8 for r in cl_runs)
+
+
+class TestParkDeadline:
+    """``Runtime(park_deadline_ticks=N)`` bounds how long a frame may stay
+    parked with no live server (DESIGN.md §6 satellite): at the deadline the
+    frame expires into an accounted ``parked_expired`` stat and a
+    client-visible error buffer in the pipeline's sink log — EXPLICIT
+    degradation instead of an unbounded busy-skip — and the pipeline is
+    freed to start fresh frames."""
+
+    def test_expiry_is_accounted_and_client_visible(self, chaos):
+        rt = Runtime(query_batch=8, park_deadline_ticks=3)
+        dev, _, ssrc = _server(rt)
+        cl = _clients(rt, 3)
+        harness = chaos(rt)
+        harness.kill_server(3, dev, ssrc, crash=True)   # never revived
+        harness.run(10)
+        fo = rt.stats()["failover"]
+        # tick-3 frames parked (t0=3) and expired at tick 6; the freed
+        # pipelines parked fresh frames which expired at tick 9 in turn
+        assert fo["parked_expired"] == 6
+        assert fo["parked_now"] == 3            # the tick-9 generation
+        for r in cl:
+            assert r.frames == 2                # ticks 1-2 answered
+            errs = r.sink_log.get("qc.error", [])
+            assert len(errs) == 2               # one per expired frame
+            for e in errs:
+                assert e.meta["error"] == "park-deadline"
+                assert e.meta["operation"] == "op"
+                assert e.meta["parked_ticks"] == 3
+                assert e.tensors == ()          # an error answer, not data
+
+    def test_recovery_before_deadline_expires_nothing(self, chaos):
+        """The deadline must never fire on a frame a revival saved: parked
+        at tick 3 with a 5-tick deadline, the server returns at tick 5 —
+        the frame completes normally, no error, nothing expired."""
+        rt = Runtime(query_batch=8, park_deadline_ticks=5)
+        dev, _, ssrc = _server(rt)
+        cl = _clients(rt, 3)
+        harness = chaos(rt)
+        harness.kill_server(3, dev, ssrc, crash=True)
+        harness.revive_server(5, dev, ssrc)
+        harness.run(8)
+        fo = rt.stats()["failover"]
+        assert fo["parked_expired"] == 0
+        assert fo["parked_now"] == 0
+        for r in cl:
+            assert "qc.error" not in r.sink_log
+            # only the 2-tick outage is missing; the parked frame resumed
+            assert r.frames == 8 - 2
+
+    def test_deadline_measures_total_time_parked(self, chaos):
+        """Re-parks must not reset the clock: a frame that parks, fails a
+        retry, and parks again still expires ``park_deadline_ticks`` after
+        it FIRST parked (the retry loop re-parks every tick — a reset would
+        make the deadline unreachable)."""
+        rt = Runtime(query_batch=8, park_deadline_ticks=4)
+        dev, _, ssrc = _server(rt)
+        _clients(rt, 1)
+        harness = chaos(rt)
+        harness.kill_server(3, dev, ssrc, crash=True)
+        harness.run(6)                           # parked t0=3, retried 4-6
+        assert rt.stats()["failover"]["parked_expired"] == 0
+        harness.run(1)                           # tick 7: 7-3 >= 4 → expire
+        assert rt.stats()["failover"]["parked_expired"] == 1
 
 
 class TestResponseChannelLifecycle:

@@ -41,6 +41,16 @@ def models():
     register_model("soaksvc", init, apply,
                    out_specs=(TensorSpec((1, 4), "float32"),))
 
+    def init2(rng):
+        return {"w": jax.random.normal(rng, (12, 4)) * 0.1,
+                "b": jnp.ones((4,))}
+
+    def apply2(p, x):
+        return x.astype(jnp.float32).reshape(1, -1) @ p["w"] + p["b"]
+
+    register_model("soaksvc2", init2, apply2,
+                   out_specs=(TensorSpec((1, 4), "float32"),))
+
 
 def test_mixed_workload_soak(chaos):
     rt = Runtime(query_batch=4, lease_ticks=3)
@@ -125,3 +135,108 @@ def test_mixed_workload_soak(chaos):
     # one live channel per bound client — viewer + the plain clients)
     ep = sp.elements["ssrc"].endpoint
     assert len(ep.responses) <= N_PLAIN_CLIENTS + 1
+
+
+def test_reconfig_soak(chaos):
+    """200-tick hot-swap churn under chaos (DESIGN.md §6): the serving
+    model is hot-swapped every 40 ticks while pub/sub streams, batched
+    query serving, and a scripted mid-warm server death all run — one swap
+    is deliberately killed inside its warm window and must ROLL BACK (never
+    limbo), the others commit, and the global conservation law still
+    balances to the frame at the end."""
+    from repro.core.element import element_factory
+
+    rt = Runtime(query_batch=4, lease_ticks=3)
+
+    viewer = Device("viewer")
+    vp = parse_launch(
+        "mqttsrc sub-topic=cam/live name=vsrc ! "
+        "tensor_query_client operation=svc name=vqc ! appsink name=vres")
+    viewer_run = viewer.add_pipeline(vp, jit=False)
+    rt.add_device(viewer)
+
+    cam = Device("cam")
+    cp = parse_launch(
+        "testsrc width=2 height=2 ! tensor_converter ! "
+        "mqttsink pub-topic=cam/live name=csnk")
+    cam_run = cam.add_pipeline(cp, jit=False)
+    rt.add_device(cam)
+
+    hub = Device("hub")
+    sp = parse_launch(
+        "tensor_query_serversrc operation=svc name=ssrc ! "
+        "tensor_filter model=soaksvc name=filt ! "
+        "tensor_query_serversink name=ssink")
+    sp.elements["ssink"].pair_with(sp.elements["ssrc"])
+    hub_run = hub.add_pipeline(sp, jit=False)
+    rt.add_device(hub)
+
+    client_runs = []
+    for i in range(N_PLAIN_CLIENTS):
+        dev = Device(f"tv{i}")
+        pc = parse_launch(
+            "testsrc width=2 height=2 ! tensor_converter ! "
+            "tensor_query_client operation=svc name=qc ! appsink name=res")
+        client_runs.append(dev.add_pipeline(pc, jit=False))
+        rt.add_device(dev)
+
+    harness = chaos(rt)
+    rcs = []
+
+    def swap_to(model):
+        def fire():
+            rcs.append(rt.reconfigure(
+                hub_run, hub_run.pipe.reconfig().swap(
+                    "filt", element_factory("tensor_filter", model=model)),
+                warm_ticks=2))
+        return fire
+
+    harness.at(40, swap_to("soaksvc2"), "hot swap filt -> soaksvc2")
+    harness.at(80, swap_to("soaksvc"), "hot swap filt -> soaksvc")
+    # this swap's warm window is cut short by the kill: it must roll back
+    harness.at(120, swap_to("soaksvc2"),
+               "hot swap filt -> soaksvc2 (dies mid-warm)")
+    harness.kill_server(121, hub, sp.elements["ssrc"], crash=True)
+    harness.revive_server(130, hub, sp.elements["ssrc"])
+    harness.at(160, swap_to("soaksvc2"), "hot swap filt -> soaksvc2")
+
+    harness.run(100)
+    cache_mid = executable_cache_info()
+    harness.run(TICKS - 100)
+
+    stats = rt.stats()
+
+    # -- every swap terminated: 3 committed, the mid-warm one rolled back --------
+    assert [rc.status for rc in rcs] == \
+        ["committed", "committed", "rolled_back", "committed"]
+    assert rcs[2].reason == "target-dead"
+    rst = stats["reconfig"]
+    assert rst["planned"] == 3
+    assert rst["rollbacks"] == 1
+    assert rst["unplanned"] >= 2            # the kill and the revival
+    assert rst["pending"] == 0              # nothing in limbo at the end
+    # the last committed swap's model is live on the hub
+    assert "b" in hub_run.params["filt"]
+
+    # -- zero frame loss through swaps, death, revival ---------------------------
+    assert stats["failover"]["parked_now"] == 0
+    for run in client_runs + [viewer_run]:
+        assert run.frames + run.skipped == TICKS
+        assert len(run.sink_log[next(iter(run.sink_log))]) == run.frames
+    assert hub_run.frames == sum(r.frames for r in client_runs + [viewer_run])
+    assert stats["failover"]["parked_total"] > 0     # the outage did park
+
+    # -- pub/sub conservation survives the churn ---------------------------------
+    snk = cp.elements["csnk"].channel
+    vsrc = vp.elements["vsrc"]
+    published = snk.msgs_sent
+    assert published == cam_run.frames
+    still_queued = len(vsrc._rx) + len(vsrc._pushback)
+    consumed = viewer_run.frames
+    declared_drops = stats["viewer/p0"]["drops"]
+    assert published == consumed + declared_drops + still_queued
+
+    # -- the exec registry saw every topology by mid-run: no growth after --------
+    cache_end = executable_cache_info()
+    assert cache_end["fingerprints"] <= cache_mid["fingerprints"]
+    assert cache_end["executables"] <= cache_mid["executables"]
