@@ -1,0 +1,153 @@
+"""Continuous-batching model serving: decode tokens/sec with 8 concurrent
+streams, batched (ONE stateful serve-tick dispatch over the slot table) vs
+sequential (one jitted b=1 decode dispatch per stream per step) — the PR-7
+tentpole lever (DESIGN.md §7).
+
+GATE: continuous-batched decode must sustain >= 2x the sequential decode
+tokens/sec at 8 concurrent streams on the small transformer preset.  The
+FLOPs are identical by construction (each slot runs the same b=1 program
+the sequential path runs — that is the bitwise-parity contract); the win is
+dispatch amortization: 1 serve-tick dispatch per step instead of 8, exactly
+the stack-scan lever PR-2 gated for stateless serving, carried to stateful
+decode.
+
+Also emitted (ungated): end-to-end runtime tokens/sec with 8 live
+streaming client pipelines — prefills, admissions, finish/delivery and the
+host edges included.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.launch import model_serve as ms
+from repro.runtime import Device, Runtime
+
+from .common import emit
+
+N_STREAMS = 8
+MAX_SEQ = 64
+GATE_SPEEDUP = 2.0
+
+
+def _server_run(slots: int):
+    rt = Runtime(query_batch=N_STREAMS)
+    hub = Device("hub")
+    ps = ms.serve_pipeline(model="stablelm-smoke-flash", slots=slots,
+                           max_seq=MAX_SEQ)
+    run = hub.add_pipeline(ps, jit=False)
+    rt.add_device(hub)
+    return rt, run, ps.elements["lm"]
+
+
+def run(steps: int = 20, reps: int = 5):
+    rt, srv, elem = _server_run(slots=N_STREAMS)
+    params = srv.params["lm"]
+    cfg = elem.cfg
+
+    # -- continuous: admit 8 streams into the slot table, then time the
+    # steady-state decode tick (remaining is huge so nobody leaves)
+    admits = []
+    for i in range(N_STREAMS):
+        tok, cache = elem.host_prefill(params, [i + 1, i + 2, i + 3])
+        admits.append((i, tok, 10 ** 6, cache))
+    plan = srv.pipe.plan
+    src = plan.query_sources[0].name
+    sink = plan.query_sinks[0].name
+    serve = plan.compiled_serve_tick(srv.state)
+    state = [srv.state]
+    outputs, state[0] = serve(srv.params, state[0],
+                              {src: elem.build_admit(admits)})
+    jax.block_until_ready(outputs[sink].tensors)
+    empty = {src: elem.empty_admit()}
+
+    def batched_step():
+        outputs, state[0] = serve(srv.params, state[0], empty)
+        jax.block_until_ready(outputs[sink].tensors[0])
+
+    # -- sequential: the same 8 streams as 8 independent b=1 jitted decode
+    # dispatches per step (the pre-continuous-batching serving shape)
+    from repro.models import transformer
+
+    @jax.jit
+    def decode(p, tok, cache):
+        import jax.numpy as jnp
+        logits, cache = transformer.lm_decode(p, cfg, tok[None], cache)
+        return jnp.argmax(logits[0], -1).astype(jnp.int32), cache
+
+    streams = []
+    for i in range(N_STREAMS):
+        tok, cache = elem.host_prefill(params, [i + 1, i + 2, i + 3])
+        import jax.numpy as jnp
+        streams.append([jnp.int32(tok), cache])
+
+    def sequential_step():
+        last = None
+        for s in streams:
+            s[0], s[1] = decode(params, s[0], s[1])
+            last = s[0]
+        jax.block_until_ready(last)
+
+    for fn in (batched_step, sequential_step):   # compile + warm
+        for _ in range(3):
+            fn()
+
+    # interleaved mins: alternate reps so box noise hits both paths alike
+    best = {"batched": float("inf"), "sequential": float("inf")}
+    for _ in range(reps):
+        for label, fn in (("batched", batched_step),
+                          ("sequential", sequential_step)):
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                fn()
+            best[label] = min(best[label],
+                              (time.perf_counter() - t0) / steps)
+    tps_batched = N_STREAMS / best["batched"]
+    tps_seq = N_STREAMS / best["sequential"]
+    speedup = tps_batched / tps_seq
+    emit(f"model_serving/decode_tps/batch{N_STREAMS}",
+         best["batched"] * 1e6, f"tokens_per_sec={tps_batched:.0f}",
+         tokens_per_sec=round(tps_batched, 1))
+    emit("model_serving/decode_tps/sequential",
+         best["sequential"] * 1e6, f"tokens_per_sec={tps_seq:.0f}",
+         tokens_per_sec=round(tps_seq, 1))
+    emit("model_serving/speedup", 0.0,
+         f"batched_vs_sequential={speedup:.2f}x;gate>={GATE_SPEEDUP}x;"
+         f"pass={speedup >= GATE_SPEEDUP}",
+         speedup=round(speedup, 3), gate=GATE_SPEEDUP,
+         gate_pass=bool(speedup >= GATE_SPEEDUP))
+
+    # -- end-to-end: full runtime with 8 live streaming clients ------------------
+    rt2 = Runtime(query_batch=N_STREAMS)
+    hub = Device("hub")
+    ps2 = ms.serve_pipeline(model="stablelm-smoke-flash", slots=N_STREAMS,
+                            max_seq=MAX_SEQ)
+    hub.add_pipeline(ps2, jit=False)
+    rt2.add_device(hub)
+    for i in range(N_STREAMS):
+        dev = Device(f"tv{i}")
+        dev.add_pipeline(ms.client_pipeline(prompts=f"{i+1},{i+2}",
+                                            gens="6"), jit=False)
+        rt2.add_device(dev)
+    rt2.run(4)                                   # compile + warm
+    qb0 = rt2.stats()["query_batching"]["tokens_delivered"]
+    t0 = time.perf_counter()
+    rt2.run(30)
+    dt = time.perf_counter() - t0
+    delivered = rt2.stats()["query_batching"]["tokens_delivered"] - qb0
+    emit("model_serving/e2e_tokens_per_sec", dt / max(delivered, 1) * 1e6,
+         f"tokens_per_sec={delivered / dt:.0f};delivered={delivered}",
+         tokens_per_sec=round(delivered / dt, 1))
+
+    if speedup < GATE_SPEEDUP:
+        raise AssertionError(
+            f"model serving gate failed: continuous-batched decode is "
+            f"{speedup:.2f}x sequential (must be >= {GATE_SPEEDUP}x)")
+
+
+if __name__ == "__main__":
+    from .common import reset_rows
+    reset_rows()
+    run()

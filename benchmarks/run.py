@@ -19,6 +19,8 @@
 #   mesh serving    -> bench_sharded_serving (calibrated mesh placement, >=2x gate)
 #   wire path       -> bench_wire_path      (fused codec serving >=2x e2e gate,
 #                                            sparse enc >=10x vs PR-4)
+#   model serving   -> bench_model_serving  (continuous-batched decode >=2x
+#                                            sequential at 8 streams gate)
 import json
 import os
 import platform
@@ -26,14 +28,15 @@ import sys
 import time
 import traceback
 
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR6.json")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR7.json")
 
 
 def main() -> None:
     from . import (bench_compression, bench_failover, bench_kernels,
-                   bench_pubsub, bench_query, bench_query_batching,
-                   bench_reconfig, bench_roofline, bench_sharded_serving,
-                   bench_step_overhead, bench_sync, bench_wire_path)
+                   bench_model_serving, bench_pubsub, bench_query,
+                   bench_query_batching, bench_reconfig, bench_roofline,
+                   bench_sharded_serving, bench_step_overhead, bench_sync,
+                   bench_wire_path)
     from .common import ROWS, reset_rows
 
     reset_rows()
@@ -44,6 +47,7 @@ def main() -> None:
         ("query_failover", bench_query.run_failover),
         ("query_batching", bench_query_batching.run),
         ("wire_path", bench_wire_path.run),
+        ("model_serving", bench_model_serving.run),
         ("sharded_serving", bench_sharded_serving.run),
         ("failover", bench_failover.run),
         ("reconfig", bench_reconfig.run),
@@ -69,7 +73,7 @@ def main() -> None:
     import jax
     payload = {
         "schema": 1,
-        "pr": 6,
+        "pr": 7,
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "suites_failed": failed,

@@ -16,6 +16,8 @@ from .broker import Broker, BrokerError, topic_matches
 from .pubsub import Channel, MqttSink, MqttSrc, Transport
 from .query import (QueryServerEndpoint, QueryTransport, TensorQueryClient,
                     TensorQueryServerSink, TensorQueryServerSrc)
+from .modelserve import (ModelServeElement, TokenPromptSrc, SERVE_MODELS,
+                         register_serve_model)
 from .reconfig import (ReconfigError, ReconfigManager, ReconfigPlan,
                        Reconfiguration)
 from .sync import PipelineClock, SimClock, ntp_offset
@@ -35,6 +37,8 @@ __all__ = [
     "Channel", "MqttSink", "MqttSrc", "Transport",
     "QueryServerEndpoint", "QueryTransport", "TensorQueryClient",
     "TensorQueryServerSink", "TensorQueryServerSrc",
+    "ModelServeElement", "TokenPromptSrc", "SERVE_MODELS",
+    "register_serve_model",
     "ReconfigError", "ReconfigManager", "ReconfigPlan", "Reconfiguration",
     "PipelineClock", "SimClock", "ntp_offset",
     "compression",

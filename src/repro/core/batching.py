@@ -78,7 +78,8 @@ from .buffers import StreamBuffer, structure_key, unstack_buffers
 from .query import QueryServerEndpoint
 from . import compression as comp
 
-__all__ = ["BatchingPolicy", "QueryBatcher", "DEFAULT_QUERY_BATCH"]
+__all__ = ["BatchingPolicy", "QueryBatcher", "StreamingQueryBatcher",
+           "DEFAULT_QUERY_BATCH"]
 
 DEFAULT_QUERY_BATCH = 8
 
@@ -168,6 +169,12 @@ class QueryBatcher:
         self.orphaned = 0
 
     # -- public API ------------------------------------------------------------
+    def in_flight(self, client_id: int) -> bool:
+        """Whether ``client_id`` has a stream mid-generation on this server.
+        Stateless batching answers every request within its flush, so the
+        base batcher is never in flight; the streaming subclass overrides."""
+        return False
+
     def pending(self) -> int:
         return len(self.endpoint.requests)
 
@@ -519,3 +526,231 @@ class QueryBatcher:
                 "fused_batches": self.fused_batches,
                 "fused_frames": self.fused_frames,
                 "flush_orphans": self.orphaned}
+
+
+class StreamingQueryBatcher(QueryBatcher):
+    """Continuous-batching request lifecycle for a ``stream_serving`` server
+    (DESIGN.md §7): prefill on arrival → N decode ticks in a slot of the
+    plan-state decode batch → one answer when the budget is spent.
+
+    Per flush (called every scheduler drain round):
+
+    1. **admit** — pop every pending wire request, decode it (per-request
+       codec, routing hoisted exactly like the stateless path), run the
+       serve element's host prefill (first token + b=1 cache), and queue
+       the stream for a slot.  ``gen <= 1`` answers immediately.
+    2. **decode tick** — at most ONCE per scheduler tick (``tick_source``
+       guard; the drain loop flushes many times per tick): assign free
+       slots to waiting streams lowest-slot-first, assemble the admit
+       bundle, and run ONE ``compiled_serve_tick`` dispatch over the whole
+       slot table.  Joins and leaves are data (admit mask / finished lane),
+       never a retrace.
+    3. **finish** — slots whose ``finished`` lane fired deliver their
+       accumulated tokens as one answer through the real serversink apply
+       (per-client codec encode + channel route), and the slot frees.
+
+    Conservation (pinned by the soak): ``tokens_generated ==
+    tokens_delivered + tokens_dropped + inflight_tokens()`` — a dead
+    endpoint aborts every live stream into ``tokens_dropped`` (their
+    PendingQuery records re-dispatch with PREFILL REPLAY on a survivor,
+    regenerating from scratch — greedy decode makes the re-generation
+    bitwise, pinned by the chaos test)."""
+
+    def __init__(self, *args, tick_source: Optional[Callable[[], int]] = None,
+                 **kwargs):
+        super().__init__(*args, **kwargs)
+        self.tick_source = tick_source or (lambda: -1)
+        self._slots: Dict[int, Dict] = {}       # slot -> stream record
+        self._waiting: List[Dict] = []          # FIFO, no free slot yet
+        self._replay: List[Dict] = []           # re-prefill on the next admit
+        self._by_client: Dict[int, Dict] = {}
+        self._last_decode_tick: Optional[int] = None
+        self.prefills = 0
+        self.replays = 0
+        self.decode_ticks = 0
+        self.tokens_generated = 0
+        self.tokens_delivered = 0
+        self.tokens_dropped = 0
+        self.streams_started = 0
+        self.streams_finished = 0
+
+    # -- introspection ---------------------------------------------------------
+    def in_flight(self, client_id: int) -> bool:
+        return client_id in self._by_client
+
+    def inflight_tokens(self) -> int:
+        return sum(len(rec["tokens"]) for rec in self._by_client.values())
+
+    def active_streams(self) -> int:
+        return len(self._by_client)
+
+    def _serve_elem(self):
+        plan = self.run.pipe.plan
+        for op in plan.ops:
+            if getattr(op.elem, "is_stream_serve", False):
+                return op.elem
+        raise RuntimeError("StreamingQueryBatcher on a non-streaming plan")
+
+    # -- lifecycle -------------------------------------------------------------
+    def flush(self) -> int:
+        if not self.endpoint.alive:
+            self._abort_streams()
+            return 0
+        served = self._admit()
+        tick = self.tick_source()
+        if tick != self._last_decode_tick and (self._slots or self._waiting):
+            self._last_decode_tick = tick
+            served += self._decode_tick()
+        if served:
+            self.flushes += 1
+        return served
+
+    def _admit(self) -> int:
+        """Pop + prefill every pending request; short generations answer
+        here, the rest join the waiting FIFO (slot assignment happens at
+        the next decode tick, so admission order is arrival order)."""
+        finished = 0
+        elem = self._serve_elem()
+        params = self.run.params.get(elem.name, {})
+        if self._replay:
+            # hot-swap replay: streams orphaned by a committed reconfig
+            # re-prefill on the NEW epoch's params (greedy decode — the
+            # regeneration is bitwise what a fresh build answers)
+            replays, self._replay = self._replay, []
+            for rec in replays:
+                tok, cache = elem.host_prefill(params, rec["prompt"])
+                self.prefills += 1
+                self.tokens_generated += 1
+                rec["tokens"] = [tok]
+                rec["remaining"] = max(0, rec["gen"] - 1)
+                rec["cache"] = cache
+                if rec["remaining"] <= 0:
+                    self._finish(rec)
+                    finished += 1
+                else:
+                    self._waiting.append(rec)
+        while self.pending() and self.endpoint.alive:
+            raw = self.endpoint.requests.pop()
+            clean, routing = self._decode(raw)
+            gen = int(clean.meta.get("gen", 1))
+            tok, cache = elem.host_prefill(params, clean.tensors[0])
+            self.prefills += 1
+            self.streams_started += 1
+            self.tokens_generated += 1
+            rec = {"routing": routing, "tokens": [tok], "prompt":
+                   clean.tensors[0], "gen": gen,
+                   "remaining": max(0, gen - 1), "cache": cache}
+            if rec["remaining"] <= 0:
+                self._finish(rec)
+                finished += 1
+            else:
+                self._waiting.append(rec)
+                self._by_client[routing["client_id"]] = rec
+        return finished
+
+    def _decode_tick(self) -> int:
+        """ONE stateful dispatch over the whole slot table: waiting streams
+        join under the admit mask, every active slot emits a token, spent
+        slots leave — all inside the same jitted program."""
+        run = self.run
+        plan = run.pipe.plan
+        elem = self._serve_elem()
+        free = sorted(s for s in range(elem.slots) if s not in self._slots)
+        admits = []
+        while free and self._waiting:
+            rec = self._waiting.pop(0)
+            slot = free.pop(0)
+            admits.append((slot, rec["tokens"][-1], rec["remaining"],
+                           rec["cache"]))
+            rec["cache"] = None     # lives in plan state from here on
+            self._slots[slot] = rec
+        if not self._slots:
+            return 0
+        src = plan.query_sources[0].name
+        sink = plan.query_sinks[0].name
+        serve = plan.compiled_serve_tick(run.state)
+        outputs, run.state = serve(run.params, run.state,
+                                   {src: elem.build_admit(admits)})
+        toks, emitted, finished = jax.device_get(outputs[sink].tensors)
+        self.decode_ticks += 1
+        run.frames += 1
+        n_active = int(emitted.sum())
+        self.batched_frames += n_active
+        if n_active > 1:
+            self.batches += 1
+        done = 0
+        for slot in sorted(self._slots):
+            rec = self._slots[slot]
+            if emitted[slot]:
+                rec["tokens"].append(int(toks[slot]))
+                self.tokens_generated += 1
+            if finished[slot]:
+                self._finish(rec)
+                del self._slots[slot]
+                done += 1
+        return done
+
+    def _finish(self, rec: Dict):
+        """Deliver one completed stream: all its tokens as ONE answer
+        through the real serversink apply (per-client codec encode +
+        client-channel route — identical to the stateless routing path)."""
+        import numpy as np
+        routing = rec["routing"]
+        sink = self.run.pipe.plan.query_sinks[0]
+        answer = StreamBuffer(
+            tensors=(np.asarray(rec["tokens"], np.int32),), meta=routing)
+        sink.apply(self.run.params.get(sink.name, {}), [answer])
+        self.tokens_delivered += len(rec["tokens"])
+        self.streams_finished += 1
+        self._by_client.pop(routing["client_id"], None)
+
+    def on_reconfig(self):
+        """The serve topology was hot-swapped under live streams: a swapped
+        serve element's plan state re-initialized at commit (kept elements
+        carry theirs, but the batcher cannot tell which epoch a slot's
+        cache belongs to), so every in-flight stream REPLAYS — its partial
+        tokens become declared drops and the stream re-prefills on the new
+        epoch at the next flush.  Greedy decode makes the replay bitwise a
+        fresh build's answer (pinned in tests/test_model_serving.py);
+        stale still-active slots in carried plan state self-clear (their
+        ``remaining`` lane drains to zero with no record listening)."""
+        super().on_reconfig()
+        recs = [self._slots[s] for s in sorted(self._slots)] + self._waiting
+        self._slots.clear()
+        self._waiting = []
+        for rec in recs:
+            self.tokens_dropped += len(rec["tokens"])
+            self.replays += 1
+            rec["tokens"] = []
+            rec["cache"] = None
+        self._replay.extend(recs)
+
+    def _abort_streams(self):
+        """Endpoint died: every live stream's partial tokens are DECLARED
+        drops (conservation law) — the orphaned PendingQuery records
+        re-dispatch with prefill replay on a survivor, so the client still
+        loses zero tokens end-to-end."""
+        if not self._by_client:
+            return
+        for rec in self._by_client.values():
+            self.tokens_dropped += len(rec["tokens"])
+        self._orphan(len(self._by_client))
+        self._slots.clear()
+        self._waiting.clear()
+        self._replay.clear()
+        self._by_client.clear()
+
+    def stats(self) -> Dict[str, int]:
+        base = super().stats()
+        base.update({
+            "prefills": self.prefills,
+            "decode_ticks": self.decode_ticks,
+            "tokens_generated": self.tokens_generated,
+            "tokens_delivered": self.tokens_delivered,
+            "tokens_dropped": self.tokens_dropped,
+            "tokens_in_flight": self.inflight_tokens(),
+            "streams_started": self.streams_started,
+            "streams_finished": self.streams_finished,
+            "replays": self.replays,
+        })
+        return base

@@ -1,0 +1,305 @@
+"""Model serving elements — a real autoregressive LM behind the query fabric.
+
+``model_serve`` puts an actual ``models/`` network (transformer, rGLRU
+hybrid, ...) behind ``tensor_query_serversrc ! model_serve !
+tensor_query_serversink``.  Decode state is PLAN STATE: a slot-stacked
+KV-cache / recurrent-state pytree plus an active-slot mask, carried across
+ticks through the pipeline state dict.  Continuous batching happens INSIDE
+one jitted decode dispatch — requests join (slot allocation, prefilled
+cache merged in under the admit mask) and leave (slots freed when
+``remaining`` hits zero) mid-generation without retracing, because the
+traced program only sees fixed slot-axis shapes (DESIGN.md §7).
+
+Parity-by-construction: the decode tick runs each slot as an independent
+``b=1`` ``lm_decode`` via ``lax.scan`` over the slot axis — the identical
+traced program a per-request sequential decode runs — and commits state
+with a ``where(active, new, old)`` select, so continuous-batched output is
+bitwise the sequential output regardless of join/leave order (pinned in
+tests/test_model_serving.py).
+
+The host half (prefill, admit-bundle assembly) lives on the element too:
+the StreamingQueryBatcher calls ``host_prefill`` when a request arrives,
+``build_admit``/``empty_admit`` each tick, and reads the (token, emitted,
+finished) lanes the dispatch captured at the serversink.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .buffers import StreamBuffer
+from .element import Element, PipelineContext, register_element
+from .formats import Caps
+
+__all__ = ["ModelServeElement", "TokenPromptSrc", "SERVE_MODELS",
+           "register_serve_model"]
+
+# Preset registry: ``model_serve model=<key>`` resolves through here, so
+# pipeline descriptions stay gst-launch strings.  Values are zero-arg
+# callables returning a ModelConfig (lazy: configs import only on use).
+SERVE_MODELS: Dict[str, Callable] = {}
+
+
+def register_serve_model(key: str, cfg_fn: Callable):
+    SERVE_MODELS[key] = cfg_fn
+    return cfg_fn
+
+
+def _default_presets():
+    """Tier-1 CPU presets: a small dense transformer (flash-attention on the
+    serve path) and one recurrent (rGLRU hybrid) so the stateful-plan
+    contract covers both KV-cache and SSM-style state."""
+    if "stablelm-smoke-flash" not in SERVE_MODELS:
+        def _stablelm():
+            import dataclasses
+            from ..configs import stablelm_1_6b
+            return dataclasses.replace(stablelm_1_6b.config().smoke(),
+                                       use_flash_attn=True)
+        SERVE_MODELS["stablelm-smoke-flash"] = _stablelm
+    if "recurrentgemma-smoke" not in SERVE_MODELS:
+        def _rglru():
+            from ..configs import recurrentgemma_9b
+            return recurrentgemma_9b.config().smoke()
+        SERVE_MODELS["recurrentgemma-smoke"] = _rglru
+
+
+@register_element("model_serve")
+class ModelServeElement(Element):
+    """Autoregressive decode as plan state with continuous batching.
+
+    Props (gst-launch strings, coerced like TestSrc):
+      * ``model``   — SERVE_MODELS preset key
+      * ``slots``   — decode-batch capacity S (the slot axis of every state
+                      leaf; requests beyond S wait in the batcher's FIFO)
+      * ``max_seq`` — KV-cache length (prompt length + generation budget
+                      must fit)
+
+    State (pytree, per slot):
+      ``cache[S, ...]``   — slot-stacked b=1 decode caches
+      ``active[S]``       — bool mask, THE fingerprint-relevant lane
+      ``token[S]``        — last emitted token (next decode input)
+      ``remaining[S]``    — decode steps left before the slot frees
+
+    Input frame (injected by the batcher at the hoisted serversrc):
+      ``(admit_mask[S], admit_tok[S], admit_rem[S], *admit_cache_leaves)``,
+      or the structurally tiny ``(mask,)`` + ``meta={"empty": True}`` on a
+      no-join tick (static aux — its own cached trace, no cache transfer)
+    Output frame (captured at the serversink):
+      ``(token[S], emitted[S], finished[S])``
+    """
+
+    #: streaming serve workload: ExecutionPlan routes this pipeline through
+    #: the stateful ``compiled_serve_tick`` path, the scheduler wires a
+    #: StreamingQueryBatcher instead of the stateless stack-scan batcher
+    is_stream_serve = True
+
+    def __init__(self, name=None, model="stablelm-smoke-flash", slots=8,
+                 max_seq=64, **props):
+        super().__init__(name=name, **props)
+        self.model = str(props.get("model", model))
+        self.slots = int(props.get("slots", slots))
+        self.max_seq = int(props.get("max_seq", max_seq))
+        self._cfg = None
+        self._prefill_jit = None
+
+    # -- config / cache templates (host-side, cached) -------------------------
+    @property
+    def cfg(self):
+        if self._cfg is None:
+            _default_presets()
+            try:
+                self._cfg = SERVE_MODELS[self.model]()
+            except KeyError as e:
+                raise KeyError(
+                    f"model_serve model={self.model!r} not registered; "
+                    f"known: {sorted(SERVE_MODELS)}") from e
+        return self._cfg
+
+    def _cache_template(self):
+        """Zero b=1 decode cache: the per-slot state an admitted request's
+        prefilled cache must structurally match."""
+        from ..models import transformer
+        return transformer.cache_init(self.cfg, 1, self.max_seq)
+
+    def negotiate(self, in_caps):
+        return [Caps(media="other/tensors")]
+
+    # -- params / state -------------------------------------------------------
+    def init_params(self, rng) -> dict:
+        from ..models import transformer
+        return transformer.init_params(rng, self.cfg)
+
+    def init_state(self) -> dict:
+        s = self.slots
+        cache = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((s,) + tuple(jnp.shape(l)), l.dtype),
+            self._cache_template())
+        return {"cache": cache,
+                "active": jnp.zeros((s,), jnp.bool_),
+                "token": jnp.zeros((s,), jnp.int32),
+                "remaining": jnp.zeros((s,), jnp.int32)}
+
+    # -- the jitted decode tick ----------------------------------------------
+    def apply(self, params, inputs: List[StreamBuffer],
+              ctx: PipelineContext = None) -> List[StreamBuffer]:
+        from ..models import transformer
+        cfg = self.cfg
+        st = ctx.get_state(self.name)
+        admit = inputs[0].tensors
+
+        # 1. admit: merge prefilled caches under the admit mask (slot rows
+        #    of leaving/free slots keep their old — soon overwritten —
+        #    values).  A no-join tick carries the STRUCTURALLY tiny empty
+        #    bundle (mask only — ``meta["empty"]`` is static aux), so the
+        #    steady-state decode tick neither ships a zero slot-stacked
+        #    cache over the host edge nor pays the full-state select.
+        if inputs[0].meta.get("empty"):
+            cache, token = st["cache"], st["token"]
+            remaining, active = st["remaining"], st["active"]
+        else:
+            treedef = jax.tree_util.tree_structure(self._cache_template())
+            admit_mask, admit_tok, admit_rem = admit[0], admit[1], admit[2]
+            admit_cache = jax.tree_util.tree_unflatten(treedef,
+                                                       list(admit[3:]))
+
+            def merge(old, new):
+                m = admit_mask.reshape((-1,) + (1,) * (old.ndim - 1))
+                return jnp.where(m, new, old)
+            cache = jax.tree_util.tree_map(merge, st["cache"], admit_cache)
+            token = jnp.where(admit_mask, admit_tok, st["token"])
+            remaining = jnp.where(admit_mask, admit_rem, st["remaining"])
+            active = st["active"] | admit_mask
+
+        # 2. decode tick: each slot is an independent b=1 lm_decode — the
+        #    same traced program sequential per-request decode runs — vmapped
+        #    over the slot axis, so the S slots' matmuls fuse into batched
+        #    contractions (the continuous-batching throughput lever) while
+        #    each slot's values stay the per-request values (slot rows are
+        #    independent rows of every batched matmul — bitwise parity is
+        #    pinned in tests/test_model_serving.py).  Inactive slots compute
+        #    on zero caches and are discarded by the select below.
+        def slot_step(c, tok, act):
+            logits, new_c = transformer.lm_decode(params, cfg, tok[None], c)
+            new_tok = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+            c_out = jax.tree_util.tree_map(
+                lambda old, new: jnp.where(act, new, old), c, new_c)
+            return c_out, jnp.where(act, new_tok, tok)
+
+        cache, token = jax.vmap(slot_step)(cache, token, active)
+
+        # 3. retire: a slot leaves the batch the tick its budget hits zero
+        emitted = active
+        rem_after = remaining - active.astype(jnp.int32)
+        finished = active & (rem_after <= 0)
+        ctx.set_state(self.name, {
+            "cache": cache,
+            "active": active & ~finished,
+            "token": token,
+            "remaining": jnp.maximum(rem_after, 0),
+        })
+        return [inputs[0].with_(tensors=(token, emitted, finished), meta={})]
+
+    # -- host half (StreamingQueryBatcher calls) ------------------------------
+    def host_prefill(self, params, prompt):
+        """Prefill one request: prompt int32[L] -> (first token int, b=1
+        decode cache).  Jitted per prompt length (element-local cache, NOT
+        the plan exec cache — the retrace set is per-length and bounded by
+        the workload, not the topology)."""
+        from ..models import transformer
+        if self._prefill_jit is None:
+            cfg, max_seq = self.cfg, self.max_seq
+
+            def prefill(p, toks):
+                logits, cache = transformer.lm_prefill(p, cfg, toks[None],
+                                                       max_seq)
+                return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), cache
+            self._prefill_jit = jax.jit(prefill)
+        tok, cache = self._prefill_jit(params, jnp.asarray(prompt, jnp.int32))
+        return int(tok), cache
+
+    def empty_admit(self) -> StreamBuffer:
+        """No-join tick: a structurally TINY bundle (mask only, flagged by
+        static meta) — the steady-state decode tick must not ship a zero
+        slot-stacked cache across the host edge just to say 'nobody
+        joined'."""
+        if getattr(self, "_empty_admit", None) is None:
+            self._empty_admit = StreamBuffer(
+                tensors=(np.zeros((self.slots,), np.bool_),),
+                meta={"empty": True})
+        return self._empty_admit
+
+    def _zero_admit(self):
+        """Zero full-width admit rows build_admit scatters into."""
+        if getattr(self, "_zero_admit_base", None) is None:
+            s = self.slots
+            leaves = [np.zeros((s,) + tuple(jnp.shape(l)),
+                               np.dtype(str(l.dtype)))
+                      for l in jax.tree_util.tree_leaves(self._cache_template())]
+            self._zero_admit_base = (
+                np.zeros((s,), np.bool_), np.zeros((s,), np.int32),
+                np.zeros((s,), np.int32), *leaves)
+        return self._zero_admit_base
+
+    def build_admit(self, admits) -> StreamBuffer:
+        """Assemble the admit bundle for one tick.  ``admits`` is a list of
+        ``(slot, first_token, remaining, b1_cache)``; rows outside the admit
+        mask are zero (ignored by the masked merge)."""
+        if not admits:
+            return self.empty_admit()
+        base = self._zero_admit()
+        mask = base[0].copy()
+        tok = base[1].copy()
+        rem = base[2].copy()
+        leaves = [l.copy() for l in base[3:]]
+        for slot, t, r, cache in admits:
+            mask[slot] = True
+            tok[slot] = t
+            rem[slot] = r
+            for dst, src in zip(leaves, jax.tree_util.tree_leaves(
+                    jax.device_get(cache))):
+                dst[slot] = src
+        return StreamBuffer(tensors=(mask, tok, rem, *leaves), meta={})
+
+
+@register_element("token_prompt_src")
+class TokenPromptSrc(Element):
+    """Deterministic streaming-workload source: emits one prompt request per
+    frame, cycling through ``prompts`` ("1,2,3;4,5" — ';'-separated prompt
+    lists) and ``gens`` ("6;4" — total tokens to generate per request),
+    tagging ``gen`` into meta for the streaming server.  The frame counter
+    lives in pipeline state (TestSrc idiom) so soak workloads replay
+    deterministically.
+
+    Host-impure on purpose: per-frame ``gen`` meta and prompt-list cycling
+    are host decisions (meta is static pytree aux — a compiled deferred
+    segment would bake one gen per trace), so client pipelines carrying
+    this source keep the interpreted deferral path."""
+
+    host_impure = True
+    n_sink_pads = 0
+
+    def __init__(self, name=None, prompts="1,2,3", gens="4", **props):
+        super().__init__(name=name, **props)
+        self.prompts = str(props.get("prompts", prompts))
+        self.gens = str(props.get("gens", gens))
+        self._prompt_list = [
+            tuple(int(t) for t in p.split(",") if t)
+            for p in self.prompts.split(";") if p]
+        self._gen_list = [int(g) for g in self.gens.split(";") if g]
+
+    def negotiate(self, in_caps):
+        return [Caps(media="other/tensors")]
+
+    def init_state(self):
+        return {"frame": jnp.int32(0)}
+
+    def apply(self, params, inputs, ctx: PipelineContext = None):
+        i = int(ctx.get_state(self.name)["frame"])
+        prompt = self._prompt_list[i % len(self._prompt_list)]
+        gen = self._gen_list[i % len(self._gen_list)]
+        ctx.set_state(self.name, {"frame": jnp.int32(i + 1)})
+        return [StreamBuffer(tensors=(jnp.asarray(prompt, jnp.int32),),
+                             meta={"gen": gen})]

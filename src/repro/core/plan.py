@@ -190,6 +190,13 @@ class ExecutionPlan:
             and all(getattr(e, "is_query_source", False)
                     or getattr(e, "is_query_sink", False) for e in impure)
             and all(op.is_query_src for op in ops if not op.in_slots))
+        #: query-batchable server whose serve element runs a streaming
+        #: (autoregressive) workload: decode state is PLAN STATE carried
+        #: across ticks, so the dispatch is one stateful `serve_tick` per
+        #: runtime tick (continuous batching over state slots) instead of
+        #: the stateless stack-scan-split over independent frames
+        self.stream_serving = self.query_batchable and any(
+            getattr(op.elem, "is_stream_serve", False) for op in ops)
         #: op indices of the query clients, in schedule order (the deferred
         #: walk's pause points — static, because topology is static)
         self.client_idxs = tuple(i for i, op in enumerate(ops)
@@ -609,6 +616,39 @@ class ExecutionPlan:
 
         fns[key] = serve_sharded
         return fns[key]
+
+    # -- stateful streaming serve ----------------------------------------------
+    def _serve_tick_fn(self, donate: bool, state_key) -> Callable:
+        """Executable behind :meth:`compiled_serve_tick`, addressable by its
+        full cache key so reconfigure warming can replicate it (see
+        ``reconfig._warm``)."""
+        fns = self._cache()["fns"]
+        key = ("serve_tick", donate, state_key)
+        if key not in fns:
+            def serve_tick(params, state, inputs, _self=self):
+                return _self.run(params, state, inputs,
+                                 hoist_io=True, hoist_queries=True)
+            fns[key] = jax.jit(serve_tick,
+                               donate_argnums=(1,) if donate else ())
+        return fns[key]
+
+    def compiled_serve_tick(self, state: dict,
+                            donate: Optional[bool] = None) -> Callable:
+        """Jitted stateful decode tick ``(params, state, inputs) ->
+        (outputs, next_state)`` for a ``stream_serving`` plan.
+
+        Unlike :meth:`compiled_serve_batch` — which stacks N independent
+        stateless frames — the batch here lives INSIDE the plan state (slot
+        axis of the KV/SSM cache plus an active-slot mask), so requests join
+        and leave mid-generation without changing the traced program.  The
+        cache key therefore carries a distinct fingerprint axis: the state
+        pytree's :func:`structure_key` (treedef + leaf shapes/dtypes, which
+        covers both the cache layout and the active-slot mask).  Two serve
+        configurations with different slot counts or cache structures never
+        collide; re-dispatching the same structure never retraces."""
+        from .buffers import structure_key
+        return self._serve_tick_fn(self._resolve_donate(donate),
+                                   structure_key(state))
 
     # -- compiled deferred segments --------------------------------------------
     def _next_client(self, after: int) -> Optional[int]:

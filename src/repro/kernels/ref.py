@@ -1,4 +1,4 @@
-"""Pure-jnp oracles for the Pallas stream-codec kernels.
+"""Pure-jnp oracles for the Pallas stream-codec and attention kernels.
 
 Semantics (shared contract between ref and kernels):
 
@@ -11,9 +11,14 @@ Semantics (shared contract between ref and kernels):
   contribution is zero.  Capacity overflow inside a block drops the tail
   (bounded-capacity framing, like any fixed-size wire format).
 * sparse_dec: scatter-add values at indices into a zeroed dense vector.
+* attn_ref / attn_decode_ref: FULL-softmax f32 attention matching the
+  flash kernels' signatures — the serve-path trust anchor (the flash
+  online-softmax results must land within fp32 tolerance of these before
+  the kernel sits under model-serving traffic).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -88,3 +93,40 @@ def sparse_dec_ref(values: jnp.ndarray, indices: jnp.ndarray,
         if False else jnp.zeros((n + SPARSE_B,), values.dtype)
     dense = dense.at[indices.reshape(-1)].add(values.reshape(-1))
     return dense[:n]
+
+
+NEG_INF = -1e30
+
+
+def attn_ref(q, k, v, *, causal: bool = True, kv_groups: int = 1):
+    """Full-softmax reference for ``flash_attention``: q [BH, Sq, dk],
+    k/v [BH//kv_groups, Sk, d*] -> [BH, Sq, dv].  Materializes the whole
+    [BH, Sq, Sk] score tensor (the thing flash exists to avoid) in f32."""
+    bh, sq, dk = q.shape
+    if kv_groups > 1:
+        k = jnp.repeat(k, kv_groups, axis=0)
+        v = jnp.repeat(v, kv_groups, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dk ** -0.5)
+    if causal:
+        sk = k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attn_decode_ref(q, k, v, pos, *, kv_groups: int = 1):
+    """Full-softmax reference for ``flash_decode_step``: q [BH, dk] (one
+    query position), cached k/v [BKV, Sk, d*], ``pos`` the last valid cache
+    index -> [BH, dv]."""
+    dk = q.shape[-1]
+    if kv_groups > 1:
+        k = jnp.repeat(k, kv_groups, axis=0)
+        v = jnp.repeat(v, kv_groups, axis=0)
+    s = jnp.einsum("hd,hkd->hk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dk ** -0.5)
+    sk = k.shape[1]
+    s = jnp.where((jnp.arange(sk) <= pos)[None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hk,hkd->hd", p, v.astype(jnp.float32)).astype(q.dtype)

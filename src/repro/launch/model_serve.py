@@ -1,0 +1,95 @@
+"""Model-serving launch helpers: real networks behind the query fabric.
+
+Registers the tier-1 serve presets (SERVE_MODELS keys the ``model_serve``
+element resolves) and provides the gst-launch-style builders tests and
+benchmarks share, plus the per-request SEQUENTIAL decode reference the
+continuous-batching parity pins compare against (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import parse_launch
+from ..core.modelserve import SERVE_MODELS, register_serve_model
+from ..models.config import ModelConfig
+
+__all__ = ["serve_pipeline", "client_pipeline", "sequential_decode",
+           "SERVE_MODELS"]
+
+
+def _stablelm_smoke_flash() -> ModelConfig:
+    """Small dense transformer with flash attention on BOTH serve paths
+    (prefill via attn_train's flash gate, decode via flash_decode_step)."""
+    from ..configs import stablelm_1_6b
+    return dataclasses.replace(stablelm_1_6b.config().smoke(),
+                               use_flash_attn=True)
+
+
+def _stablelm_smoke() -> ModelConfig:
+    from ..configs import stablelm_1_6b
+    return stablelm_1_6b.config().smoke()
+
+
+def _recurrentgemma_smoke() -> ModelConfig:
+    """rGLRU hybrid (R,R,L pattern): recurrent state + windowed-attention
+    ring caches as plan state — the SSM-side pin of the stateful contract."""
+    from ..configs import recurrentgemma_9b
+    return recurrentgemma_9b.config().smoke()
+
+
+register_serve_model("stablelm-smoke-flash", _stablelm_smoke_flash)
+register_serve_model("stablelm-smoke", _stablelm_smoke)
+register_serve_model("recurrentgemma-smoke", _recurrentgemma_smoke)
+
+
+def serve_pipeline(operation: str = "lm", model: str = "stablelm-smoke-flash",
+                   slots: int = 8, max_seq: int = 32):
+    """Server pipeline: serversrc ! model_serve ! serversink, sink paired."""
+    ps = parse_launch(
+        f"tensor_query_serversrc operation={operation} name=ssrc ! "
+        f"model_serve model={model} slots={slots} max_seq={max_seq} "
+        f"name=lm ! tensor_query_serversink name=ssink")
+    ps.elements["ssink"].pair_with(ps.elements["ssrc"])
+    return ps
+
+
+def client_pipeline(operation: str = "lm", prompts: str = "1,2,3",
+                    gens: str = "4", codec: str = "none"):
+    """Streaming client: one prompt request per frame, cycling prompts/gens."""
+    return parse_launch(
+        f"token_prompt_src prompts={prompts} gens={gens} ! "
+        f"tensor_query_client operation={operation} codec={codec} "
+        f"name=qc ! appsink name=res")
+
+
+def sequential_decode(params, cfg: ModelConfig, prompt, gen: int,
+                      max_seq: int) -> List[int]:
+    """Per-request sequential greedy decode — the parity reference.
+
+    One jitted b=1 prefill then ``gen - 1`` jitted b=1 decode steps: the
+    exact program each slot of the continuous batch runs, dispatched the
+    pre-batching way.  Continuous-batched serving must reproduce this
+    token-for-token (bitwise) for every request, whatever the join/leave
+    interleaving."""
+    from ..models import transformer
+
+    @jax.jit
+    def prefill(p, toks):
+        logits, cache = transformer.lm_prefill(p, cfg, toks[None], max_seq)
+        return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), cache
+
+    @jax.jit
+    def decode(p, tok, cache):
+        logits, cache = transformer.lm_decode(p, cfg, tok[None], cache)
+        return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), cache
+
+    tok, cache = prefill(params, jnp.asarray(prompt, jnp.int32))
+    out = [int(tok)]
+    for _ in range(max(0, gen - 1)):
+        tok, cache = decode(params, tok, cache)
+        out.append(int(tok))
+    return out

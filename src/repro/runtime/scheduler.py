@@ -92,7 +92,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 
-from ..core.batching import BatchingPolicy, QueryBatcher, DEFAULT_QUERY_BATCH
+from ..core.batching import (BatchingPolicy, QueryBatcher,
+                             StreamingQueryBatcher, DEFAULT_QUERY_BATCH)
 from ..core.broker import Broker, BrokerError
 from ..core.buffers import (StreamBuffer, stack_buffers, structure_key,
                             unstack_buffers)
@@ -216,6 +217,11 @@ class Runtime:
         #: each entry ``(run, pq, parked_at_tick)``; the park tick survives
         #: re-parks so ``park_deadline_ticks`` measures TOTAL time parked
         self._parked: List[Tuple[_PipeRun, PendingQuery, int]] = []
+        #: frames whose request is a STREAM mid-generation on a live server
+        #: (StreamingQueryBatcher.in_flight) — unlike parked frames they
+        #: have a server, it just needs more decode ticks; re-enter the
+        #: drain at the top of every tick until the stream finishes
+        self._inflight: List[Tuple[_PipeRun, PendingQuery]] = []
         #: ticks a frame may stay parked before it expires into an accounted
         #: client-visible error (None = park forever, the pre-PR-6 behavior)
         self.park_deadline_ticks = park_deadline_ticks
@@ -253,12 +259,27 @@ class Runtime:
                 # clients and direct pipe.step round-trips keep their
                 # serve-before-return contract, while runtime-driven clients
                 # go through the deferred queue-gather-flush path
-                batcher = QueryBatcher(
-                    e.endpoint, run, self.batching,
-                    inline_step=lambda r=run: self._run_once(r),
-                    mesh=self.mesh, shard_mode=self.shard_mode,
-                    fused=self.fused_wire,
-                    on_orphans=self._count_orphans)
+                stream = any(getattr(el, "is_stream_serve", False)
+                             for el in run.pipe.elements.values())
+                if stream:
+                    # streaming serve pipeline (model_serve): requests live
+                    # across ticks in plan-state slots, so the endpoint gets
+                    # the continuous-batching lifecycle instead of the
+                    # stateless gather-stack-flush
+                    batcher = StreamingQueryBatcher(
+                        e.endpoint, run, self.batching,
+                        inline_step=lambda r=run: self._run_once(r),
+                        mesh=self.mesh, shard_mode=self.shard_mode,
+                        fused=self.fused_wire,
+                        on_orphans=self._count_orphans,
+                        tick_source=lambda: self.ticks)
+                else:
+                    batcher = QueryBatcher(
+                        e.endpoint, run, self.batching,
+                        inline_step=lambda r=run: self._run_once(r),
+                        mesh=self.mesh, shard_mode=self.shard_mode,
+                        fused=self.fused_wire,
+                        on_orphans=self._count_orphans)
                 self._batchers[e.endpoint.endpoint_id] = batcher
                 e.connect(self.broker, inline_runner=batcher.flush)
         # (re)negotiate with broker wiring in place so mqttsink registers;
@@ -295,9 +316,13 @@ class Runtime:
 
     def _run_in_flight(self, run: _PipeRun) -> bool:
         """Whether the run has a frame paused mid-schedule across ticks (a
-        parked PendingQuery) — a commit must drain those on the old epoch
-        before cutting over, never swap a plan out from under a live walk."""
-        return any(r is run for r, _, _ in self._parked)
+        parked PendingQuery, or a stream mid-generation) — a commit must
+        drain those on the old epoch before cutting over, never swap a plan
+        out from under a live walk.  Note this guards the CLIENT pipeline's
+        run only: the server run itself carries no paused walk, so a server
+        hot-swap commits mid-decode (the stateful-plan contract pins it)."""
+        return any(r is run for r, _, _ in self._parked) or \
+            any(r is run for r, _ in self._inflight)
 
     def _count_orphans(self, n: int):
         """Orphan-ledger hook for mid-flush deaths (QueryBatcher)."""
@@ -575,6 +600,14 @@ class Runtime:
                 raw = qc.recv_answer_raw(ep) if ep is not None else None
                 if raw is None:
                     if ep is not None and ep.alive:
+                        b = self._batchers.get(ep.endpoint_id)
+                        if b is not None and b.in_flight(qc.client_id):
+                            # streaming serve: the request is mid-generation
+                            # in a plan-state slot — not an error, it needs
+                            # more decode ticks.  Leave the drain (bounding
+                            # this round) and re-enter next tick.
+                            self._inflight.append((run, pq))
+                            continue
                         raise BrokerError(
                             f"{qc.name}: no answer from {qc.operation!r}")
                     if self._dispatch_query(pq):
@@ -701,6 +734,12 @@ class Runtime:
         # frames parked from earlier ticks go first (a server may be back);
         # their pipelines must not start a second concurrent frame
         pending = self._retry_parked()
+        # streams mid-generation re-enter the drain: a live server keeps
+        # decoding them (one tick = one token per active stream); a dead one
+        # routes them through the same dispatch-or-park failover as any
+        # in-flight query (prefill replay on the survivor)
+        inflight, self._inflight = self._inflight, []
+        pending.extend(inflight)
         busy = {id(run) for run, _ in pending} | \
                {id(run) for run, _, _ in self._parked}
         fresh: List[Tuple[_PipeRun, PendingQuery]] = []
@@ -765,6 +804,7 @@ class Runtime:
         out["failover"] = {"redispatches": self.redispatches,
                            "parked_total": self.parked_total,
                            "parked_now": len(self._parked),
+                           "inflight_now": len(self._inflight),
                            "parked_expired": self.parked_expired,
                            "orphaned_requests": self.orphaned_requests}
         out["reconfig"] = self.reconfig.stats()
@@ -773,7 +813,10 @@ class Runtime:
                "sharded_frames": 0, "fused_batches": 0, "fused_frames": 0,
                "flush_orphans": 0}
         for b in self._batchers.values():
+            # streaming batchers report extra keys (prefills, token
+            # conservation lanes, ...) — aggregate whatever each reports,
+            # with the stateless keys always present
             for k, v in b.stats().items():
-                agg[k] += v
+                agg[k] = agg.get(k, 0) + v
         out["query_batching"] = {"max_batch": self.batching.max_batch, **agg}
         return out

@@ -1,11 +1,16 @@
-"""Pallas flash-attention kernel vs jnp oracle (shape sweeps, causal)."""
+"""Pallas flash-attention kernel vs jnp oracle (shape sweeps, causal), plus
+the SERVE-PATH trust anchors (DESIGN.md §7): flash prefill and cached-KV
+decode-step attention vs the full-softmax references in kernels/ref.py —
+the fp32 tolerance pin that must hold before the kernel sits under
+model-serving traffic."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.flash_attn import flash_attention
+from repro.kernels.flash_attn import flash_attention, flash_decode_step
+from repro.kernels.ref import attn_decode_ref, attn_ref
 
 
 def oracle(q, k, v, causal=True):
@@ -51,3 +56,90 @@ def test_first_token_attends_only_itself():
     o = flash_attention(q, k, v, causal=True, bq=64, bk=64)
     np.testing.assert_allclose(np.asarray(o[0, 0]), np.asarray(v[0, 0]),
                                atol=1e-5)
+
+
+class TestServePathPrefill:
+    """flash_attention vs the kernels/ref.py full-softmax oracle — the
+    PREFILL half of the serve path, including the GQA head grouping the
+    model presets use."""
+
+    @given(st.sampled_from([64, 128, 256]), st.sampled_from([1, 2, 4]),
+           st.integers(0, 2 ** 30))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_attn_ref_gqa(self, s, groups, seed):
+        bh, dk, dv = 4, 32, 32
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (bh, s, dk))
+        k = jax.random.normal(ks[1], (bh // groups, s, dk))
+        v = jax.random.normal(ks[2], (bh // groups, s, dv))
+        o = flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                            kv_groups=groups)
+        ref = attn_ref(q, k, v, causal=True, kv_groups=groups)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestServePathDecodeStep:
+    """flash_decode_step vs attn_decode_ref — the cached-KV DECODE half:
+    one query row against a partially filled cache, swept over fill levels,
+    block sizes and GQA groups."""
+
+    @given(st.sampled_from([8, 31, 63, 64, 100, 127]),
+           st.sampled_from([32, 128]), st.sampled_from([1, 2, 4]),
+           st.integers(0, 2 ** 30))
+    @settings(max_examples=12, deadline=None)
+    def test_matches_decode_ref(self, pos, bk, groups, seed):
+        bh, sk, dk, dv = 4, 128, 32, 48
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (bh, dk))
+        k = jax.random.normal(ks[1], (bh // groups, sk, dk))
+        v = jax.random.normal(ks[2], (bh // groups, sk, dv))
+        o = flash_decode_step(q, k, v, jnp.int32(pos), bk=bk,
+                              kv_groups=groups)
+        ref = attn_decode_ref(q, k, v, pos, kv_groups=groups)
+        assert o.shape == (bh, dv)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    @given(st.integers(0, 62), st.integers(0, 2 ** 30))
+    @settings(max_examples=10, deadline=None)
+    def test_cache_beyond_pos_has_no_influence(self, pos, seed):
+        """The mask property the ring cache depends on: garbage (or stale
+        epoch data) in cache rows past ``pos`` must not move the output by
+        one ulp."""
+        bh, sk, dk = 2, 64, 16
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = jax.random.normal(ks[0], (bh, dk))
+        k = jax.random.normal(ks[1], (bh, sk, dk))
+        v = jax.random.normal(ks[2], (bh, sk, dk))
+        o1 = flash_decode_step(q, k, v, jnp.int32(pos), bk=32)
+        noise = 100.0 * jax.random.normal(ks[3], (bh, sk, dk))
+        tail = (jnp.arange(sk) > pos)[None, :, None]
+        k2 = jnp.where(tail, k + noise, k)
+        v2 = jnp.where(tail, v + noise, v)
+        o2 = flash_decode_step(q, k2, v2, jnp.int32(pos), bk=32)
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+    def test_pos_zero_attends_only_first_row(self):
+        bh, sk, dk = 2, 64, 16
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (bh, dk))
+        k = jax.random.normal(ks[1], (bh, sk, dk))
+        v = jax.random.normal(ks[2], (bh, sk, dk))
+        o = flash_decode_step(q, k, v, jnp.int32(0), bk=32)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(v[:, 0]),
+                                   atol=1e-5)
+
+    def test_decode_step_agrees_with_prefill_last_row(self):
+        """Cross-kernel consistency: decoding position ``pos`` against the
+        cache equals the last row of a causal prefill over the same
+        sequence — the handoff the serve path makes at admission."""
+        bh, s, d = 4, 64, 32
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (bh, s, d))
+        k = jax.random.normal(ks[1], (bh, s, d))
+        v = jax.random.normal(ks[2], (bh, s, d))
+        pre = flash_attention(q, k, v, causal=True, bq=64, bk=64)
+        step = flash_decode_step(q[:, -1], k, v, jnp.int32(s - 1), bk=64)
+        np.testing.assert_allclose(np.asarray(pre[:, -1]), np.asarray(step),
+                                   atol=2e-5, rtol=2e-5)

@@ -1,0 +1,345 @@
+"""Real model inference on the serving fabric (DESIGN.md §7).
+
+A ``model_serve`` element runs autoregressive decode as PLAN STATE
+(slot-stacked KV-cache / rGLRU-state pytrees carried across ticks) with
+CONTINUOUS BATCHING: requests join and leave the decode batch
+mid-generation through slot allocation inside ONE jitted serve-tick
+dispatch.  The acceptance contract pinned here:
+
+* continuous-batched decode is BITWISE the per-request sequential decode —
+  at batch 1, 4 and 8, including mid-generation joins/leaves (staggered
+  arrivals, mixed generation lengths) and both state families (KV-cache
+  transformer, rGLRU recurrent hybrid);
+* a mid-decode hot swap commits and every post-commit answer is bitwise
+  what a FRESHLY BUILT server with the new model produces (in-flight
+  streams replay on the new epoch);
+* killing a server mid-generation with live KV state loses zero tokens —
+  orphaned streams re-dispatch with prefill replay on a survivor and the
+  answers stay bitwise the fault-free twin's; with no survivor the park
+  deadline turns mid-stream requests into client-visible errors;
+* the token conservation law ``generated == delivered + dropped +
+  in_flight`` balances through churn, death and hot swaps (soak).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.element import element_factory
+from repro.core.plan import executable_cache_info
+from repro.launch import model_serve as ms
+from repro.runtime import Device, Runtime
+
+pytestmark = pytest.mark.modelserve
+
+MAX_SEQ = 32
+
+
+def _server(rt, name="hub", model="stablelm-smoke-flash", slots=8,
+            max_seq=MAX_SEQ):
+    """One serving device.  All servers init from PRNGKey(0), so any
+    survivor regenerates bitwise-identical tokens — the fault-free twin."""
+    dev = Device(name)
+    ps = ms.serve_pipeline(model=model, slots=slots, max_seq=max_seq)
+    run = dev.add_pipeline(ps, jit=False)
+    rt.add_device(dev)
+    return dev, run, ps
+
+
+def _client(rt, i, prompts, gens):
+    dev = Device(f"tv{i}")
+    run = dev.add_pipeline(ms.client_pipeline(prompts=prompts, gens=gens),
+                           jit=False)
+    rt.add_device(dev)
+    return run
+
+
+def _answers(run):
+    return [np.asarray(b.tensor).tolist() for b in run.sink_log.get("res", [])]
+
+
+# sequential_decode re-jits per call; memoize per (params, prompt, gen) so
+# repeated parity checks trace once.  The cache value pins ``params`` so the
+# id() key can never be recycled by the allocator mid-session.
+_REF_CACHE = {}
+
+
+def _ref(params, cfg, prompt, gen):
+    key = (id(params), tuple(prompt), gen)
+    if key not in _REF_CACHE:
+        _REF_CACHE[key] = (params, ms.sequential_decode(params, cfg, prompt,
+                                                        gen, MAX_SEQ))
+    return _REF_CACHE[key][1]
+
+
+def _check_stream(run, prompts, gens, params, cfg, min_answers=1):
+    """Every delivered answer must be bitwise the sequential-decode
+    reference for its position in the client's (prompt, gen) cycle."""
+    got = _answers(run)
+    assert len(got) >= min_answers
+    for j, ans in enumerate(got):
+        prompt = prompts[j % len(prompts)]
+        gen = gens[j % len(gens)]
+        ref = _ref(params, cfg, prompt, gen)
+        assert ans == ref, f"answer {j}: {ans} != sequential {ref}"
+
+
+class TestContinuousBatchingParity:
+    @pytest.mark.parametrize("n_clients", [1, 4, 8])
+    def test_bitwise_vs_sequential_decode(self, n_clients):
+        """THE tentpole pin: N concurrent streams with mixed generation
+        lengths — every answer the continuous batch delivers is bitwise the
+        per-request sequential decode of the same prompt."""
+        gen_mix = ["4", "3;6", "5", "6;3"]
+        rt = Runtime(query_batch=8)
+        _, srv, ps = _server(rt, slots=8)
+        cls = []
+        for i in range(n_clients):
+            cls.append((_client(rt, i, f"{i+1},{i+2},{i+3}",
+                                gen_mix[i % len(gen_mix)]), i))
+        rt.run(16)
+        params, cfg = srv.params["lm"], ps.elements["lm"].cfg
+        for run, i in cls:
+            gens = [int(g) for g in gen_mix[i % len(gen_mix)].split(";")]
+            _check_stream(run, [[i + 1, i + 2, i + 3]], gens, params, cfg,
+                          min_answers=2)
+        qb = rt.stats()["query_batching"]
+        assert qb["tokens_generated"] == qb["tokens_delivered"] + \
+            qb["tokens_dropped"] + qb["tokens_in_flight"]
+        if n_clients == 8:
+            # the batch really was continuous: more slot-tokens than
+            # dispatches means >1 stream decoded per serve tick
+            assert qb["batched_frames"] > qb["decode_ticks"]
+
+    def test_mid_generation_join_and_leave_staggered(self):
+        """Requests join the live decode batch mid-generation: 4 long
+        streams start first, 4 short ones arrive 3 ticks later (device
+        join), finish EARLIER (leave mid-batch), and every answer on both
+        sides stays bitwise sequential."""
+        rt = Runtime(query_batch=8)
+        _, srv, ps = _server(rt, slots=8)
+        early = [_client(rt, i, f"{i+1},{i+2}", "8") for i in range(4)]
+        rt.run(3)                    # early streams are mid-generation
+        late = [_client(rt, 4 + i, f"{i+11}", "3") for i in range(4)]
+        rt.run(17)
+        params, cfg = srv.params["lm"], ps.elements["lm"].cfg
+        for i, run in enumerate(early):
+            _check_stream(run, [[i + 1, i + 2]], [8], params, cfg,
+                          min_answers=2)
+        for i, run in enumerate(late):
+            _check_stream(run, [[i + 11]], [3], params, cfg, min_answers=3)
+        qb = rt.stats()["query_batching"]
+        assert qb["streams_finished"] >= 2 * 4 + 3 * 4
+        assert qb["tokens_generated"] == qb["tokens_delivered"] + \
+            qb["tokens_dropped"] + qb["tokens_in_flight"]
+
+    def test_more_streams_than_slots_waits_fifo(self):
+        """6 streams over 4 slots: the overflow waits in the FIFO and joins
+        as slots free — nothing is dropped, parity still holds."""
+        rt = Runtime(query_batch=8)
+        _, srv, ps = _server(rt, slots=4)
+        cls = [_client(rt, i, f"{i+1}", "4") for i in range(6)]
+        rt.run(14)
+        params, cfg = srv.params["lm"], ps.elements["lm"].cfg
+        for i, run in enumerate(cls):
+            _check_stream(run, [[i + 1]], [4], params, cfg, min_answers=1)
+        qb = rt.stats()["query_batching"]
+        assert qb["tokens_dropped"] == 0
+
+    def test_rglru_recurrent_state_family(self):
+        """The SSM-side pin: recurrentgemma's rGLRU recurrence + windowed
+        attention ring caches ride the same plan-state slots bitwise."""
+        rt = Runtime(query_batch=8)
+        _, srv, ps = _server(rt, model="recurrentgemma-smoke", slots=4)
+        cls = [_client(rt, i, f"{i+5},{i+6}", "5") for i in range(2)]
+        rt.run(10)
+        params, cfg = srv.params["lm"], ps.elements["lm"].cfg
+        for i, run in enumerate(cls):
+            _check_stream(run, [[i + 5, i + 6]], [5], params, cfg,
+                          min_answers=1)
+
+
+class TestStatefulExecCache:
+    def test_serve_tick_fingerprint_axis(self):
+        """The stateless-batch refactor's new exec-cache axis: a stateful
+        serve executable is keyed by the STATE STRUCTURE (treedef + leaf
+        shapes/dtypes — cache layout and the active-slot mask), so the same
+        structure reuses one executable across every join/leave while a
+        different slot table gets its own entry, never a collision."""
+        rt = Runtime(query_batch=8)
+        _, srv, ps = _server(rt, slots=4)
+        _client(rt, 0, "1,2", "4")
+        rt.run(6)
+        plan = srv.pipe.plan
+        assert plan.stream_serving
+        f1 = plan.compiled_serve_tick(srv.state)
+        assert plan.compiled_serve_tick(srv.state) is f1  # join/leave reuse
+        doubled = dict(srv.state)
+        doubled["lm"] = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((l.shape[0] * 2,) + l.shape[1:], l.dtype),
+            srv.state["lm"])
+        assert plan.compiled_serve_tick(doubled) is not f1
+        keys = [k for k in plan._cache()["fns"] if k[0] == "serve_tick"]
+        assert len(keys) == 2
+
+
+class TestHotSwapMidDecode:
+    def test_swap_commits_mid_decode_bitwise_fresh_build(self):
+        """Server-side hot swap while every stream is mid-generation: the
+        commit is NOT blocked (only client runs drain on in-flight
+        streams), in-flight streams replay on the new epoch, and every
+        answer delivered after the commit is bitwise what a freshly built
+        server with the new model computes."""
+        rt = Runtime(query_batch=8)
+        _, srv, ps = _server(rt, model="stablelm-smoke-flash", slots=8)
+        cls = [_client(rt, i, f"{i+1},{i+2}", "8") for i in range(3)]
+        rt.run(2)                     # mid-generation, nothing delivered
+        assert all(len(_answers(r)) == 0 for r in cls)
+        old_params = srv.params["lm"]
+        rc = rt.reconfigure(srv, srv.pipe.reconfig().swap(
+            "lm", element_factory("model_serve", model="stablelm-smoke",
+                                  slots="8", max_seq=str(MAX_SEQ))),
+            warm_ticks=1)
+        assert rc.status == "warming"
+        rt.run(2)
+        assert rc.status == "committed"   # NOT blocked by in-flight streams
+        rt.run(14)
+        new_params = srv.params["lm"]
+        assert new_params is not old_params
+        cfg_new = srv.pipe.elements["lm"].cfg
+        for i, run in enumerate(cls):
+            # every answer (all post-commit) is the NEW model's, from
+            # scratch — bitwise a fresh build
+            _check_stream(run, [[i + 1, i + 2]], [8], new_params, cfg_new,
+                          min_answers=2)
+        qb = rt.stats()["query_batching"]
+        assert qb["replays"] == 3             # every in-flight stream replayed
+        assert qb["tokens_dropped"] > 0       # partial epochs declared
+        assert qb["tokens_generated"] == qb["tokens_delivered"] + \
+            qb["tokens_dropped"] + qb["tokens_in_flight"]
+        assert rt.stats()["reconfig"]["planned"] == 1
+
+
+class TestChaosStatefulFailover:
+    def test_kill_mid_generation_zero_token_loss_bitwise(self, chaos):
+        """THE stateful chaos pin: the serving device dies at tick 4 with
+        live KV-cache slots mid-generation.  The orphaned streams'
+        PendingQuery records re-dispatch to the survivor, which PREFILL
+        REPLAYS them from the retained prompt — greedy decode regenerates
+        the identical tokens, so every delivered answer is bitwise the
+        fault-free twin's and no client ever sees a truncated stream."""
+        ticks = 16
+
+        rt0 = Runtime(query_batch=8)
+        _server(rt0, name="hubA")
+        _server(rt0, name="hubB")
+        ref = [_client(rt0, i, f"{i+1},{i+2},{i+3}", "6") for i in range(3)]
+        rt0.run(ticks)
+
+        rt = Runtime(query_batch=8)
+        devA, runA, psA = _server(rt, name="hubA")
+        devB, runB, psB = _server(rt, name="hubB")
+        got = [_client(rt, i, f"{i+1},{i+2},{i+3}", "6") for i in range(3)]
+        harness = chaos(rt)
+        harness.kill_server(4, devA, psA.elements["ssrc"], crash=True)
+        harness.run(ticks)
+
+        for r0, r1 in zip(ref, got):
+            a, b = _answers(r0), _answers(r1)
+            # the outage delays (replay restarts the generation) but every
+            # answer that lands is bitwise the twin's, full length
+            assert len(b) >= 2
+            for x, y in zip(a, b):
+                assert x == y
+            assert all(len(y) == 6 for y in b)   # never truncated
+        fo = rt.stats()["failover"]
+        qb = rt.stats()["query_batching"]
+        assert fo["redispatches"] >= 3          # the mid-stream orphans
+        assert qb["tokens_dropped"] > 0         # dead epoch's partials
+        assert qb["tokens_generated"] == qb["tokens_delivered"] + \
+            qb["tokens_dropped"] + qb["tokens_in_flight"]
+        assert runB.frames > 0                  # the survivor decoded
+
+    def test_park_deadline_expires_mid_stream_requests(self, chaos):
+        """No survivor: mid-generation requests park when their server dies
+        and expire at the deadline into client-visible errors — explicit
+        degradation, not a silent stall."""
+        rt = Runtime(query_batch=8, park_deadline_ticks=3)
+        dev, srv, ps = _server(rt)
+        cls = [_client(rt, i, f"{i+1},{i+2}", "6") for i in range(2)]
+        harness = chaos(rt)
+        harness.kill_server(3, dev, ps.elements["ssrc"], crash=True)
+        harness.run(10)
+        fo = rt.stats()["failover"]
+        assert fo["parked_expired"] >= 2
+        for r in cls:
+            errs = r.sink_log.get("qc.error", [])
+            assert len(errs) >= 1
+            for e in errs:
+                assert e.meta["error"] == "park-deadline"
+                assert e.meta["operation"] == "lm"
+                assert e.tensors == ()
+        qb = rt.stats()["query_batching"]
+        assert qb["tokens_dropped"] > 0         # aborted streams declared
+        assert qb["tokens_in_flight"] == 0
+
+
+@pytest.mark.soak
+def test_decode_soak_conservation_through_churn(chaos):
+    """200-tick mixed streaming decode workload (DESIGN.md §7): 8 clients
+    with mixed prompt/generation cycles over 4 slots (constant FIFO churn),
+    one scripted kill + revival, one mid-run hot swap.  Global invariants:
+
+    * token conservation — ``generated == delivered + dropped + in_flight``
+      to the token at the end;
+    * every delivered answer is bitwise a sequential decode of its epoch's
+      params (pre- or post-swap), whatever the interleaving;
+    * the executable cache and the endpoint's per-client response channels
+      stay bounded through death/revival/swap."""
+    TICKS, KILL_AT, REVIVE_AT, SWAP_AT = 200, 60, 90, 140
+    N = 8
+    rt = Runtime(query_batch=8)
+    dev, srv, ps = _server(rt, slots=4)
+    gen_mix = ["4", "3;6", "5;2", "6"]
+    cls = [_client(rt, i, f"{i+1},{i+2}", gen_mix[i % 4]) for i in range(N)]
+
+    old_params = [None]
+
+    def swap():
+        old_params[0] = srv.params["lm"]
+        rt.reconfigure(srv, srv.pipe.reconfig().swap(
+            "lm", element_factory("model_serve", model="stablelm-smoke-flash",
+                                  slots="4", max_seq=str(MAX_SEQ))),
+            warm_ticks=1)
+
+    harness = chaos(rt)
+    harness.kill_server(KILL_AT, dev, ps.elements["ssrc"], crash=True)
+    harness.revive_server(REVIVE_AT, dev, ps.elements["ssrc"])
+    harness.at(SWAP_AT, swap, "hot swap lm mid-run")
+
+    harness.run(150)
+    cache_mid = executable_cache_info()
+    harness.run(TICKS - 150)
+
+    qb = rt.stats()["query_batching"]
+    assert qb["tokens_generated"] == qb["tokens_delivered"] + \
+        qb["tokens_dropped"] + qb["tokens_in_flight"]
+    assert qb["streams_finished"] >= N * 10      # the workload really churned
+    assert qb["tokens_dropped"] > 0              # the kill + swap declared
+
+    # every answer is bitwise sequential for ITS epoch's params
+    cfg = srv.pipe.elements["lm"].cfg
+    for i, run in enumerate(cls):
+        gens = [int(g) for g in gen_mix[i % 4].split(";")]
+        for j, ans in enumerate(_answers(run)):
+            g = gens[j % len(gens)]
+            ok = [_ref(pr, cfg, [i + 1, i + 2], g)
+                  for pr in (old_params[0], srv.params["lm"])]
+            assert ans in ok, f"client {i} answer {j} off-epoch"
+
+    # bounded caches and channels through death/revival/swap
+    cache_end = executable_cache_info()
+    assert cache_end["fingerprints"] <= cache_mid["fingerprints"]
+    assert cache_end["executables"] <= cache_mid["executables"]
+    assert len(ps.elements["ssrc"].endpoint.responses) <= N
+    assert rt.stats()["failover"]["parked_now"] == 0
