@@ -21,6 +21,8 @@
 #                                            sparse enc >=10x vs PR-4)
 #   model serving   -> bench_model_serving  (continuous-batched decode >=2x
 #                                            sequential at 8 streams gate)
+#   pp serving      -> bench_pp_serving     (2-stage among-device chain
+#                                            steady-state >=1.5x mono gate)
 import json
 import os
 import platform
@@ -28,15 +30,15 @@ import sys
 import time
 import traceback
 
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR7.json")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR8.json")
 
 
 def main() -> None:
     from . import (bench_compression, bench_failover, bench_kernels,
-                   bench_model_serving, bench_pubsub, bench_query,
-                   bench_query_batching, bench_reconfig, bench_roofline,
-                   bench_sharded_serving, bench_step_overhead, bench_sync,
-                   bench_wire_path)
+                   bench_model_serving, bench_pp_serving, bench_pubsub,
+                   bench_query, bench_query_batching, bench_reconfig,
+                   bench_roofline, bench_sharded_serving,
+                   bench_step_overhead, bench_sync, bench_wire_path)
     from .common import ROWS, reset_rows
 
     reset_rows()
@@ -48,6 +50,7 @@ def main() -> None:
         ("query_batching", bench_query_batching.run),
         ("wire_path", bench_wire_path.run),
         ("model_serving", bench_model_serving.run),
+        ("pp_serving", bench_pp_serving.run),
         ("sharded_serving", bench_sharded_serving.run),
         ("failover", bench_failover.run),
         ("reconfig", bench_reconfig.run),
@@ -73,7 +76,7 @@ def main() -> None:
     import jax
     payload = {
         "schema": 1,
-        "pr": 7,
+        "pr": 8,
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "suites_failed": failed,

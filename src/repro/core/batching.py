@@ -69,16 +69,19 @@ everywhere (the benchmark baseline).
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+import numpy as np
 
 from .buffers import StreamBuffer, structure_key, unstack_buffers
 from .query import QueryServerEndpoint
 from . import compression as comp
 
 __all__ = ["BatchingPolicy", "QueryBatcher", "StreamingQueryBatcher",
+           "StagedStreamingBatcher", "StageQueryBatcher",
            "DEFAULT_QUERY_BATCH"]
 
 DEFAULT_QUERY_BATCH = 8
@@ -559,11 +562,24 @@ class StreamingQueryBatcher(QueryBatcher):
     def __init__(self, *args, tick_source: Optional[Callable[[], int]] = None,
                  **kwargs):
         super().__init__(*args, **kwargs)
-        self.tick_source = tick_source or (lambda: -1)
+        if tick_source is None:
+            # standalone batcher (no scheduler): a monotonic counter, so
+            # EVERY flush is its own decode tick.  A constant default would
+            # satisfy the once-per-tick guard exactly once ever and then
+            # freeze decode forever (regression-pinned).
+            counter = itertools.count()
+            tick_source = lambda: next(counter)          # noqa: E731
+        self.tick_source = tick_source
         self._slots: Dict[int, Dict] = {}       # slot -> stream record
         self._waiting: List[Dict] = []          # FIFO, no free slot yet
         self._replay: List[Dict] = []           # re-prefill on the next admit
-        self._by_client: Dict[int, Dict] = {}
+        #: client_id -> FIFO of live stream records.  Keyed per REQUEST
+        #: (a list per client), not one record per client: a client may
+        #: pipeline a second prompt while its first stream is in flight,
+        #: and overwriting would orphan the first record — undercounting
+        #: inflight_tokens(), silently breaking conservation, and hiding
+        #: the orphan from _abort_streams (regression-pinned).
+        self._by_client: Dict[int, List[Dict]] = {}
         self._last_decode_tick: Optional[int] = None
         self.prefills = 0
         self.replays = 0
@@ -576,13 +592,33 @@ class StreamingQueryBatcher(QueryBatcher):
 
     # -- introspection ---------------------------------------------------------
     def in_flight(self, client_id: int) -> bool:
-        return client_id in self._by_client
+        return bool(self._by_client.get(client_id))
 
     def inflight_tokens(self) -> int:
-        return sum(len(rec["tokens"]) for rec in self._by_client.values())
+        return sum(len(rec["tokens"]) for recs in self._by_client.values()
+                   for rec in recs)
 
     def active_streams(self) -> int:
-        return len(self._by_client)
+        return sum(len(recs) for recs in self._by_client.values())
+
+    def _track(self, rec: Dict):
+        self._by_client.setdefault(rec["routing"]["client_id"],
+                                   []).append(rec)
+
+    def _untrack(self, rec: Dict):
+        """Drop ONE record by identity (two streams of the same prompt from
+        one client compare equal — ``list.remove`` would drop the wrong
+        one)."""
+        cid = rec["routing"]["client_id"]
+        recs = self._by_client.get(cid)
+        if not recs:
+            return
+        for i, r in enumerate(recs):
+            if r is rec:
+                del recs[i]
+                break
+        if not recs:
+            del self._by_client[cid]
 
     def _serve_elem(self):
         plan = self.run.pipe.plan
@@ -598,12 +634,15 @@ class StreamingQueryBatcher(QueryBatcher):
             return 0
         served = self._admit()
         tick = self.tick_source()
-        if tick != self._last_decode_tick and (self._slots or self._waiting):
+        if tick != self._last_decode_tick and self._has_decode_work():
             self._last_decode_tick = tick
             served += self._decode_tick()
         if served:
             self.flushes += 1
         return served
+
+    def _has_decode_work(self) -> bool:
+        return bool(self._slots or self._waiting)
 
     def _admit(self) -> int:
         """Pop + prefill every pending request; short generations answer
@@ -640,12 +679,12 @@ class StreamingQueryBatcher(QueryBatcher):
             rec = {"routing": routing, "tokens": [tok], "prompt":
                    clean.tensors[0], "gen": gen,
                    "remaining": max(0, gen - 1), "cache": cache}
+            self._track(rec)
             if rec["remaining"] <= 0:
                 self._finish(rec)
                 finished += 1
             else:
                 self._waiting.append(rec)
-                self._by_client[routing["client_id"]] = rec
         return finished
 
     def _decode_tick(self) -> int:
@@ -694,7 +733,6 @@ class StreamingQueryBatcher(QueryBatcher):
         """Deliver one completed stream: all its tokens as ONE answer
         through the real serversink apply (per-client codec encode +
         client-channel route — identical to the stateless routing path)."""
-        import numpy as np
         routing = rec["routing"]
         sink = self.run.pipe.plan.query_sinks[0]
         answer = StreamBuffer(
@@ -702,7 +740,7 @@ class StreamingQueryBatcher(QueryBatcher):
         sink.apply(self.run.params.get(sink.name, {}), [answer])
         self.tokens_delivered += len(rec["tokens"])
         self.streams_finished += 1
-        self._by_client.pop(routing["client_id"], None)
+        self._untrack(rec)
 
     def on_reconfig(self):
         """The serve topology was hot-swapped under live streams: a swapped
@@ -732,9 +770,12 @@ class StreamingQueryBatcher(QueryBatcher):
         loses zero tokens end-to-end."""
         if not self._by_client:
             return
-        for rec in self._by_client.values():
-            self.tokens_dropped += len(rec["tokens"])
-        self._orphan(len(self._by_client))
+        total = 0
+        for recs in self._by_client.values():
+            for rec in recs:
+                self.tokens_dropped += len(rec["tokens"])
+                total += 1
+        self._orphan(total)
         self._slots.clear()
         self._waiting.clear()
         self._replay.clear()
@@ -754,3 +795,483 @@ class StreamingQueryBatcher(QueryBatcher):
             "replays": self.replays,
         })
         return base
+
+
+class StageQueryBatcher(QueryBatcher):
+    """Hop server for a DOWNSTREAM ``model_serve_stage`` pipeline (stage
+    k >= 1 of an among-device chain, DESIGN.md §8).  Its endpoint receives
+    hop requests from the chain's StagedStreamingBatcher, never
+    client-facing prompts; ``meta["hop"]`` selects the verb:
+
+    * ``"prefill"`` — stage-local prefill of one stream's boundary
+      activations; the resulting b=1 cache PARKS here keyed by the
+      coordinator's stream id (caches never cross the wire — only
+      activations do), and the boundary output answers back.
+    * ``"replay"``  — one b=1 decode step folded into a parked cache: the
+      stage-local failover primitive (a replacement stage rebuilds exactly
+      its own slice of a dead stage's state from the coordinator's
+      retained activations).
+    * ``"decode"``  — one slot-table hop through ``compiled_serve_tick``:
+      ``meta["admit"]`` maps joining slots to parked stream ids (merged
+      under the admit mask inside the jit), ``meta["live"]`` prunes parked
+      caches of finished streams.
+
+    Epoch fencing: every §6 reconfig of this pipeline bumps
+    ``endpoint.spec["serve_epoch"]`` — the coordinator trusts a stage's
+    slot caches only while (endpoint identity, epoch) are unchanged, so a
+    hot-swapped stage is indistinguishable from a died-and-replaced one
+    and both recover through the same stage-local replay rule."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._parked: Dict[int, Any] = {}      # stream id -> b=1 stage cache
+        self.epoch = 0
+        self.endpoint.spec.setdefault("serve_epoch", 0)
+        self.prefills = 0
+        self.replay_steps = 0
+        self.decode_hops = 0
+        self.slot_steps = 0
+
+    def _serve_elem(self):
+        plan = self.run.pipe.plan
+        for op in plan.ops:
+            if getattr(op.elem, "is_stage_serve", False):
+                return op.elem
+        raise RuntimeError("StageQueryBatcher on a non-stage plan")
+
+    def flush(self) -> int:
+        if not self.endpoint.alive:
+            self._parked.clear()
+            return 0
+        served = 0
+        while self.pending() and self.endpoint.alive:
+            raw = self.endpoint.requests.pop()
+            self._serve_hop(raw)
+            served += 1
+        if served:
+            self.flushes += 1
+        return served
+
+    def _serve_hop(self, raw: StreamBuffer):
+        clean, routing = self._decode(raw)
+        kind = clean.meta.get("hop", "decode")
+        elem = self._serve_elem()
+        params = self.run.params.get(elem.name, {})
+        if kind == "prefill":
+            sid = int(clean.meta["sid"])
+            out, cache = elem.host_stage_prefill(params, clean.tensors[0])
+            self._parked[sid] = cache
+            self.prefills += 1
+        elif kind == "replay":
+            sid = int(clean.meta["sid"])
+            out, cache = elem.host_stage_decode(params, clean.tensors[0],
+                                                self._parked[sid])
+            self._parked[sid] = cache
+            self.replay_steps += 1
+        else:
+            out = self._serve_decode_hop(clean, elem)
+        sink = self.run.pipe.plan.query_sinks[0]
+        answer = StreamBuffer(tensors=(out,), meta=dict(routing))
+        sink.apply(self.run.params.get(sink.name, {}), [answer])
+
+    def _serve_decode_hop(self, clean: StreamBuffer, elem):
+        x, active = clean.tensors
+        admits = [(int(slot), self._parked.pop(int(sid)))
+                  for slot, sid in clean.meta.get("admit", ())]
+        live = clean.meta.get("live")
+        if live is not None:
+            keep = set(int(s) for s in live)
+            self._parked = {s: c for s, c in self._parked.items()
+                            if s in keep}
+        run = self.run
+        plan = run.pipe.plan
+        src = plan.query_sources[0].name
+        sink = plan.query_sinks[0].name
+        serve = plan.compiled_serve_tick(run.state)
+        outputs, run.state = serve(run.params, run.state,
+                                   {src: elem.build_hop(x, active, admits)})
+        self.decode_hops += 1
+        run.frames += 1
+        n_active = int(np.asarray(active).sum())
+        self.slot_steps += n_active
+        self.batched_frames += n_active
+        if n_active > 1:
+            self.batches += 1
+        return outputs[sink].tensors[0]
+
+    def on_reconfig(self):
+        """Stage hot-swapped under the chain: parked caches and slot rows
+        belong to the OLD epoch — drop the parked ones and bump the epoch
+        fence so the coordinator replays this stage before trusting it."""
+        super().on_reconfig()
+        self._parked.clear()
+        self.epoch += 1
+        self.endpoint.spec["serve_epoch"] = self.epoch
+
+    def stats(self) -> Dict[str, int]:
+        base = super().stats()
+        base.update({
+            "stage_prefills": self.prefills,
+            "stage_replay_steps": self.replay_steps,
+            "decode_hops": self.decode_hops,
+            "slot_steps": self.slot_steps,
+            "parked_caches": len(self._parked),
+        })
+        return base
+
+
+class StagedStreamingBatcher(StreamingQueryBatcher):
+    """The §8 chain coordinator: the streaming request lifecycle of
+    StreamingQueryBatcher, with the model split across N
+    ``model_serve_stage`` pipelines discovered over the broker.
+
+    It is wired on STAGE 0's endpoint (the client-facing ``query/<op>``
+    topic) and owns the slot table; stage 0 serves inline through its own
+    run's ``compiled_serve_tick``, stages 1..N-1 are reached as
+    among-device hops: a request pushed onto ``query/<op>/s<k>``'s
+    best-ranked endpoint, served by that stage's StageQueryBatcher, the
+    answer popped off the coordinator's response channel — the exact
+    mechanism ``tensor_query_client.apply`` uses, so broker ranking,
+    leases, win-back, and the §6 reconfig lifecycle all apply per stage.
+
+    Admission runs a PREFILL CHAIN: stage-0 host prefill parks its b=1
+    cache coordinator-side, each downstream stage prefills the upstream
+    boundary activations and parks its own slice, the last stage answers
+    the first token.  Decode runs one hop per stage per tick over the
+    whole slot table.  The coordinator RETAINS every stream's per-stage
+    boundary-activation history (prefill acts + one step per completed
+    hop) — the feedstock for the per-stage replay rule:
+
+    **Cache trust:** stage k's slot caches are trusted only while
+    (endpoint identity, serve_epoch) are unchanged since the last
+    successful hop.  On mismatch — death, lease expiry, failover to a
+    standby, win-back, or a §6 swap — the coordinator rebuilds ONLY stage
+    k: per live stream, replay the retained activations through the
+    stage's prefill/replay verbs (bitwise by construction: identical
+    traced programs on identical inputs), then re-merge parked caches
+    into slot rows under the next hop's admit mask.  Other stages are
+    untouched; no generation restarts; zero tokens drop.
+
+    A hop that fails MID-TICK stalls the tick: stages < k already
+    advanced this step, so the chain must resume FROM k — the pending-hop
+    record keeps the in-flight boundary activations and the next flush
+    re-dispatches after re-securing the stage.  Conservation holds per
+    stage: ``hops_dispatched[k] == hops_completed[k] + hops_failed[k]``
+    every flush, and the §7 token law holds at the coordinator."""
+
+    def __init__(self, *args, broker=None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.broker = broker
+        from .query import TensorQueryClient
+        self._hop_cid = next(TensorQueryClient._ids)
+        self._hops: Dict[int, Any] = {}         # stage -> Binding
+        self._trust: Dict[int, Optional[Tuple]] = {}
+        self._readmit: Dict[int, Dict[int, int]] = {}  # stage->{slot: sid}
+        self._pending_hop: Optional[Dict] = None
+        self._stalled: List[Dict] = []          # admission chains to retry
+        self._sids = itertools.count(1)
+        self.hops_dispatched: Dict[int, int] = {}
+        self.hops_completed: Dict[int, int] = {}
+        self.hops_failed: Dict[int, int] = {}
+        self.stage_replays: Dict[int, int] = {}
+        self.stage_replay_steps: Dict[int, int] = {}
+
+    @property
+    def n_stages(self) -> int:
+        return self._serve_elem().n_stages
+
+    def _has_decode_work(self) -> bool:
+        return bool(self._slots or self._waiting or self._stalled
+                    or self._pending_hop)
+
+    # -- stage discovery & trust ----------------------------------------------
+    def _stage_binding(self, k: int):
+        b = self._hops.get(k)
+        if b is None:
+            op = self.endpoint.operation
+            b = self._hops[k] = self.broker.subscribe(
+                f"query/{op}/s{k}",
+                prefer={"codec": "none", "stage": k})
+        return b
+
+    def _stage_endpoint(self, k: int):
+        from .broker import BrokerError
+        try:
+            binding = self._stage_binding(k)
+            ep = binding.endpoint
+            if not ep.alive:
+                binding._rebind()
+                ep = binding.endpoint
+        except BrokerError:
+            return None
+        return ep if ep.alive else None
+
+    def _ensure_stage(self, k: int):
+        """Resolve stage k's endpoint and make its caches trustworthy:
+        any change of (endpoint identity, serve_epoch) since the last hop
+        triggers the stage-local replay before the stage is used again."""
+        ep = self._stage_endpoint(k)
+        if ep is None:
+            return None
+        key = (ep.endpoint_id, ep.spec.get("serve_epoch", 0))
+        if self._trust.get(k) != key:
+            if not self._replay_stage(k, ep):
+                return None
+            self._trust[k] = key
+        return ep
+
+    def _replay_stage(self, k: int, ep) -> bool:
+        """Rebuild ONLY stage k's slice of every live stream's state from
+        the retained boundary activations (DESIGN.md §8 replay rule)."""
+        recs = [self._slots[s] for s in sorted(self._slots)] + \
+            [r for r in self._waiting if r.get("sid") is not None]
+        self.stage_replays[k] = self.stage_replays.get(k, 0) + 1
+        for rec in recs:
+            acts = rec["acts"][k]
+            if self._raw_hop(ep, (acts[0],),
+                             {"hop": "prefill", "sid": rec["sid"]}) is None:
+                return False
+            for step in acts[1:]:
+                if self._raw_hop(ep, (step,),
+                                 {"hop": "replay",
+                                  "sid": rec["sid"]}) is None:
+                    return False
+                self.stage_replay_steps[k] = \
+                    self.stage_replay_steps.get(k, 0) + 1
+        # slotted streams' rows on the new stage are garbage until their
+        # freshly parked caches re-merge at the next decode hop
+        rd = self._readmit.setdefault(k, {})
+        for slot, rec in self._slots.items():
+            rd[slot] = rec["sid"]
+        return True
+
+    # -- the hop itself --------------------------------------------------------
+    def _raw_hop(self, ep, tensors, meta) -> Optional[StreamBuffer]:
+        """One request → inline serve → answer round-trip against a
+        RESOLVED stage endpoint (the tensor_query_client mechanism, with
+        the coordinator as the client)."""
+        buf = StreamBuffer(tensors=tuple(tensors), meta=dict(meta))
+        payload, nbytes = comp.encode(buf, "none")
+        payload = payload.with_(meta={**payload.meta,
+                                      "client_id": self._hop_cid,
+                                      "codec": "none"})
+        ep.requests.push(payload, nbytes)
+        runner = ep.spec.get("inline_runner")
+        if runner is None or not ep.alive:
+            return None
+        runner()
+        raw = ep.client_channel(self._hop_cid).pop()
+        if raw is None:
+            return None
+        return comp.decode(raw, "none")
+
+    def _hop(self, k: int, tensors, meta) -> Optional[StreamBuffer]:
+        ep = self._ensure_stage(k)
+        self.hops_dispatched[k] = self.hops_dispatched.get(k, 0) + 1
+        ans = None if ep is None else self._raw_hop(ep, tensors, meta)
+        if ans is None:
+            self.hops_failed[k] = self.hops_failed.get(k, 0) + 1
+            self._trust[k] = None       # whatever happened, re-secure first
+        else:
+            self.hops_completed[k] = self.hops_completed.get(k, 0) + 1
+        return ans
+
+    # -- admission (prefill chain) ---------------------------------------------
+    def _admit(self) -> int:
+        finished = 0
+        elem = self._serve_elem()
+        params = self.run.params.get(elem.name, {})
+        if self._replay:
+            # stage-0 hot-swap replay (inherited §6 semantics): the whole
+            # chain re-prefills these streams on the new epoch
+            replays, self._replay = self._replay, []
+            for rec in replays:
+                for key in ("cache0", "sid", "acts", "chain_next",
+                            "chain_x"):
+                    rec.pop(key, None)
+                finished += self._start_stream(rec, elem, params)
+        if self._stalled:
+            stalled, self._stalled = self._stalled, []
+            for rec in stalled:
+                finished += self._resume_chain(rec)
+        while self.pending() and self.endpoint.alive:
+            raw = self.endpoint.requests.pop()
+            clean, routing = self._decode(raw)
+            gen = int(clean.meta.get("gen", 1))
+            rec = {"routing": routing, "tokens": [],
+                   "prompt": clean.tensors[0], "gen": gen, "remaining": 0}
+            self.streams_started += 1
+            self._track(rec)
+            finished += self._start_stream(rec, elem, params)
+        return finished
+
+    def _start_stream(self, rec: Dict, elem, params) -> int:
+        """Stage-0 prefill (parked coordinator-side) + downstream prefill
+        chain.  The stage-0 boundary activations are retained as acts[1]'s
+        seed; stage 0's own replay feedstock is ``rec["prompt"]``."""
+        out, cache0 = elem.host_stage_prefill(params, rec["prompt"])
+        self.prefills += 1
+        rec["tokens"] = []
+        rec["cache0"] = cache0
+        rec["sid"] = next(self._sids)
+        rec["acts"] = {k: [] for k in range(1, self.n_stages)}
+        rec["chain_next"] = 1
+        rec["chain_x"] = np.asarray(out)
+        return self._resume_chain(rec)
+
+    def _resume_chain(self, rec: Dict) -> int:
+        k = rec["chain_next"]
+        x = rec["chain_x"]
+        while k < self.n_stages:
+            rec["acts"][k] = [x]    # assign, not append: retries overwrite
+            ans = self._hop(k, (x,), {"hop": "prefill", "sid": rec["sid"]})
+            if ans is None:
+                rec["chain_next"], rec["chain_x"] = k, x
+                self._stalled.append(rec)
+                return 0
+            x = np.asarray(ans.tensors[0])
+            k += 1
+        del rec["chain_next"], rec["chain_x"]
+        rec["tokens"] = [int(np.asarray(x).reshape(()))]
+        self.tokens_generated += 1
+        rec["remaining"] = max(0, rec["gen"] - 1)
+        if rec["remaining"] <= 0:
+            self._finish(rec)
+            return 1
+        self._waiting.append(rec)
+        return 0
+
+    # -- the per-tick decode chain ---------------------------------------------
+    def _decode_tick(self) -> int:
+        if self._pending_hop is not None:
+            # a stage died mid-tick: stages < k already advanced this
+            # step — resume the SAME step from stage k, never re-run it
+            return self._run_chain()
+        run = self.run
+        elem = self._serve_elem()
+        free = sorted(s for s in range(elem.slots) if s not in self._slots)
+        admits0 = []
+        while free and self._waiting:
+            rec = self._waiting.pop(0)
+            slot = free.pop(0)
+            admits0.append((slot, rec["cache0"]))
+            rec["cache0"] = None    # stage 0's slice lives in plan state now
+            self._slots[slot] = rec
+            for k in range(1, self.n_stages):
+                self._readmit.setdefault(k, {})[slot] = rec["sid"]
+        if not self._slots:
+            return 0
+        s = elem.slots
+        active = np.zeros((s,), np.bool_)
+        tok = np.zeros((s,), np.int32)
+        for slot, rec in self._slots.items():
+            active[slot] = True
+            tok[slot] = rec["tokens"][-1]
+        plan = run.pipe.plan
+        src = plan.query_sources[0].name
+        sink = plan.query_sinks[0].name
+        serve = plan.compiled_serve_tick(run.state)
+        outputs, run.state = serve(run.params, run.state,
+                                   {src: elem.build_hop(tok, active,
+                                                        admits0)})
+        y = np.asarray(jax.device_get(outputs[sink].tensors[0]))
+        self.decode_ticks += 1
+        run.frames += 1
+        n_active = int(active.sum())
+        self.batched_frames += n_active
+        if n_active > 1:
+            self.batches += 1
+        self._pending_hop = {"k": 1, "x": y, "active": active}
+        return self._run_chain()
+
+    def _run_chain(self) -> int:
+        ph = self._pending_hop
+        x, active = ph["x"], ph["active"]
+        k = ph["k"]
+        live = tuple(sorted(rec["sid"] for rec in self._iter_recs()
+                            if rec.get("sid") is not None))
+        while k < self.n_stages:
+            # secure the stage BEFORE assembling the admit list: a trust
+            # break replays into _readmit[k], and those freshly parked
+            # caches must merge on THIS hop — assembling first would ship
+            # an empty admit and decode the standby's zero rows
+            self._ensure_stage(k)
+            rd = self._readmit.get(k, {})
+            admit = tuple((int(slot), int(sid))
+                          for slot, sid in sorted(rd.items())
+                          if active[slot])
+            ans = self._hop(k, (x, active),
+                            {"hop": "decode", "admit": admit, "live": live})
+            if ans is None:
+                ph["k"], ph["x"] = k, x
+                return 0
+            # x is now part of stage k's committed history — retain it as
+            # replay feedstock (AFTER the hop: an in-flight step must not
+            # be replayed into a cache it never reached)
+            for slot, rec in self._slots.items():
+                rec["acts"][k].append(x[slot:slot + 1])
+            self._readmit[k] = {}
+            x = np.asarray(ans.tensors[0])
+            k += 1
+        self._pending_hop = None
+        done = 0
+        for slot in sorted(self._slots):
+            rec = self._slots[slot]
+            rec["tokens"].append(int(x[slot]))
+            self.tokens_generated += 1
+            rec["remaining"] -= 1
+            if rec["remaining"] <= 0:
+                self._finish(rec)
+                del self._slots[slot]
+                for rd in self._readmit.values():
+                    rd.pop(slot, None)
+                done += 1
+        return done
+
+    def _iter_recs(self):
+        yield from self._slots.values()
+        yield from self._waiting
+        yield from self._stalled
+
+    # -- lifecycle edges --------------------------------------------------------
+    def on_reconfig(self):
+        """Stage 0's pipeline was hot-swapped: inherited whole-stream
+        replay (stage 0's slice re-initialized at commit) plus chain
+        bookkeeping reset — stalled admissions rejoin the replay queue and
+        downstream stages simply see fresh stream ids (their stale parked
+        caches prune via the next hop's live list)."""
+        stalled, self._stalled = self._stalled, []
+        super().on_reconfig()
+        for rec in stalled:
+            self.replays += 1
+            rec["tokens"] = []
+            self._replay.append(rec)
+        self._pending_hop = None
+        self._readmit = {}
+
+    def _abort_streams(self):
+        super()._abort_streams()
+        self._stalled.clear()
+        self._pending_hop = None
+        self._readmit = {}
+        self._trust = {}
+
+    def stats(self) -> Dict[str, int]:
+        base = super().stats()
+        base.update({
+            "hops_dispatched": sum(self.hops_dispatched.values()),
+            "hops_completed": sum(self.hops_completed.values()),
+            "hops_failed": sum(self.hops_failed.values()),
+            "stage_replays": sum(self.stage_replays.values()),
+            "stage_replay_steps": sum(self.stage_replay_steps.values()),
+        })
+        return base
+
+    def stage_ledger(self, k: int) -> Dict[str, int]:
+        """Per-stage hop conservation record (pinned per stage by the
+        staged soak): every dispatched hop is completed or failed."""
+        return {"dispatched": self.hops_dispatched.get(k, 0),
+                "completed": self.hops_completed.get(k, 0),
+                "failed": self.hops_failed.get(k, 0),
+                "replays": self.stage_replays.get(k, 0),
+                "replay_steps": self.stage_replay_steps.get(k, 0)}

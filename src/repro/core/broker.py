@@ -193,19 +193,29 @@ class Broker:
                  prefer: Optional[Dict[str, Any]] = None) -> Tuple:
         """Sort key for capability-aware selection — LOWER ranks better.
 
-        Order of importance: (1) preferred-codec support (a server declaring
+        Order of importance: (1) pipeline-stage fit (an among-device chain
+        coordinator asking for stage k ranks servers declaring a DIFFERENT
+        ``stage`` behind those declaring k or nothing — a wildcard
+        subscription over a chain's topics must never bind a hop to the
+        wrong layer slice), (2) preferred-codec support (a server declaring
         ``codecs=(...)`` that lacks the client's codec ranks behind one that
-        has it — absent declaration means "anything goes"), (2) declared
-        ``throughput`` (higher better), (3) current ``load`` (lower better),
-        (4) registration order — the deterministic tiebreak that preserves
+        has it — absent declaration means "anything goes"), (3) declared
+        ``throughput`` (higher better), (4) current ``load`` (lower better),
+        (5) registration order — the deterministic tiebreak that preserves
         the pre-ranking first-match behavior when nobody declares anything.
         """
         prefer = prefer or {}
+        stage = prefer.get("stage")
+        declared_stage = reg.specs.get("stage")
+        stage_miss = 1 if (stage is not None and declared_stage is not None
+                           and int(_as_float(declared_stage, -1))
+                           != int(stage)) else 0
         codec = prefer.get("codec")
         declared = reg.specs.get("codecs")
         codec_miss = 1 if (codec not in (None, "none") and declared is not None
                            and codec not in declared) else 0
-        return (codec_miss, -_as_float(reg.specs.get("throughput")),
+        return (stage_miss, codec_miss,
+                -_as_float(reg.specs.get("throughput")),
                 _as_float(reg.load), reg.reg_id)
 
     def subscribe(self, topic_filter: str,

@@ -34,8 +34,8 @@ from .buffers import StreamBuffer
 from .element import Element, PipelineContext, register_element
 from .formats import Caps
 
-__all__ = ["ModelServeElement", "TokenPromptSrc", "SERVE_MODELS",
-           "register_serve_model"]
+__all__ = ["ModelServeElement", "ModelServeStageElement", "TokenPromptSrc",
+           "SERVE_MODELS", "register_serve_model"]
 
 # Preset registry: ``model_serve model=<key>`` resolves through here, so
 # pipeline descriptions stay gst-launch strings.  Values are zero-arg
@@ -224,12 +224,20 @@ class ModelServeElement(Element):
         """No-join tick: a structurally TINY bundle (mask only, flagged by
         static meta) — the steady-state decode tick must not ship a zero
         slot-stacked cache across the host edge just to say 'nobody
-        joined'."""
-        if getattr(self, "_empty_admit", None) is None:
-            self._empty_admit = StreamBuffer(
-                tensors=(np.zeros((self.slots,), np.bool_),),
-                meta={"empty": True})
-        return self._empty_admit
+        joined'.
+
+        A FRESH buffer (fresh meta dict) every call: ``apply`` hands
+        ``inputs[0].with_(...)`` downstream and the serversink routing
+        idiom re-attaches meta, so one cached buffer shared across every
+        no-join tick of every stage would let any consumer's meta mutation
+        corrupt all later ticks.  The mask ndarray is shared but
+        write-protected — aliasing it is safe, writing it raises."""
+        if getattr(self, "_empty_mask", None) is None:
+            mask = np.zeros((self.slots,), np.bool_)
+            mask.flags.writeable = False
+            self._empty_mask = mask
+        return StreamBuffer(tensors=(self._empty_mask,),
+                            meta={"empty": True})
 
     def _zero_admit(self):
         """Zero full-width admit rows build_admit scatters into."""
@@ -262,6 +270,189 @@ class ModelServeElement(Element):
                     jax.device_get(cache))):
                 dst[slot] = src
         return StreamBuffer(tensors=(mask, tok, rem, *leaves), meta={})
+
+
+@register_element("model_serve_stage")
+class ModelServeStageElement(ModelServeElement):
+    """One pipeline-parallel stage of a model behind the query fabric
+    (DESIGN.md §8): layers ``[stage*R/N, (stage+1)*R/N)`` of the preset
+    plus that slice of the slot-stacked decode cache as plan state.  The
+    first stage embeds tokens, the last norms + unembeds; per-slot
+    boundary activations hop stage → stage over the pub/sub + query
+    fabric, driven by the StagedStreamingBatcher on stage 0.
+
+    State is the stage cache ONLY — the coordinator owns the slot table
+    (active/token/remaining lanes) and ships ``active`` as a tensor each
+    hop, so downstream stages are pure cache-holders whose stale rows are
+    inert until re-admitted.
+
+    Input frame (a hop bundle assembled host-side):
+      ``(x_in[S,...], active[S])`` + ``meta={"empty": True}`` steady-state,
+      or ``(x_in, active, admit_mask[S], *admit_cache_leaves)`` on a tick
+      with joins (parked b=1 prefill caches scattered into slot rows).
+      ``x_in`` is ``token[S] int32`` on stage 0, acts ``[S, 1, d]`` after.
+    Output frame: next-stage acts ``[S, 1, d]`` (zeroed where inactive),
+      or ``token[S] int32`` from the last stage.
+    """
+
+    #: stage pipelines get hop-serving batchers, not the client-facing
+    #: streaming lifecycle (scheduler._wire dispatches on this + stage)
+    is_stage_serve = True
+
+    def __init__(self, name=None, model="stablelm-smoke-flash", slots=8,
+                 max_seq=64, stage=0, n_stages=1, **props):
+        super().__init__(name=name, model=model, slots=slots,
+                         max_seq=max_seq, **props)
+        self.stage = int(props.get("stage", stage))
+        self.n_stages = int(props.get("n_stages", n_stages))
+
+    @property
+    def is_first(self) -> bool:
+        return self.stage == 0
+
+    @property
+    def is_last(self) -> bool:
+        return self.stage == self.n_stages - 1
+
+    def _cache_template(self):
+        from ..models import transformer
+        return transformer.stage_cache_init(self.cfg, self.stage,
+                                            self.n_stages, 1, self.max_seq)
+
+    # -- params / state -------------------------------------------------------
+    def init_params(self, rng) -> dict:
+        """Init the FULL model from ``rng`` then slice this stage's share.
+        Every stage pipeline puts its model element at the same position
+        (``ssrc ! stage ! ssink``), so Pipeline.init hands each stage the
+        SAME sub-rng the monolithic server's model element gets — the full
+        trees are identical and the slices compose back to the monolithic
+        params exactly (the staged-vs-single bitwise pin rests on this)."""
+        from ..models import transformer
+        full = transformer.init_params(rng, self.cfg)
+        return transformer.stage_params(full, self.cfg, self.stage,
+                                        self.n_stages)
+
+    def init_state(self) -> dict:
+        s = self.slots
+        cache = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((s,) + tuple(jnp.shape(l)), l.dtype),
+            self._cache_template())
+        return {"cache": cache}
+
+    # -- the jitted stage hop -------------------------------------------------
+    def apply(self, params, inputs: List[StreamBuffer],
+              ctx: PipelineContext = None) -> List[StreamBuffer]:
+        from ..models import transformer
+        cfg = self.cfg
+        st = ctx.get_state(self.name)
+        ts = inputs[0].tensors
+        x_in, active = ts[0], ts[1]
+        if inputs[0].meta.get("empty"):
+            cache = st["cache"]
+        else:
+            treedef = jax.tree_util.tree_structure(self._cache_template())
+            admit_mask = ts[2]
+            admit_cache = jax.tree_util.tree_unflatten(treedef, list(ts[3:]))
+
+            def merge(old, new):
+                m = admit_mask.reshape((-1,) + (1,) * (old.ndim - 1))
+                return jnp.where(m, new, old)
+            cache = jax.tree_util.tree_map(merge, st["cache"], admit_cache)
+
+        stage, n_stages = self.stage, self.n_stages
+
+        def slot_step(c, x, act):
+            out, new_c = transformer.stage_decode(params, cfg, stage,
+                                                  n_stages, x[None], c)
+            c_out = jax.tree_util.tree_map(
+                lambda old, new: jnp.where(act, new, old), c, new_c)
+            if stage == n_stages - 1:
+                y = jnp.argmax(out[0], axis=-1).astype(jnp.int32)
+                return c_out, jnp.where(act, y, 0)
+            return c_out, jnp.where(act, out[0], jnp.zeros_like(out[0]))
+
+        cache, y = jax.vmap(slot_step)(cache, x_in, active)
+        ctx.set_state(self.name, {"cache": cache})
+        return [inputs[0].with_(tensors=(y,), meta={})]
+
+    # -- host half (hop bundle assembly + stage-local prefill/replay) ---------
+    def _zero_hop(self):
+        """Zero admit-cache rows ``build_hop`` scatters parked caches into."""
+        if getattr(self, "_zero_hop_base", None) is None:
+            s = self.slots
+            leaves = [np.zeros((s,) + tuple(jnp.shape(l)),
+                               np.dtype(str(l.dtype)))
+                      for l in jax.tree_util.tree_leaves(self._cache_template())]
+            self._zero_hop_base = (np.zeros((s,), np.bool_), *leaves)
+        return self._zero_hop_base
+
+    def build_hop(self, x_in, active, admits) -> StreamBuffer:
+        """Assemble one decode-hop bundle.  ``admits`` is a list of
+        ``(slot, b1_cache)`` parked prefill caches joining this tick; empty
+        admits give the structurally tiny steady-state bundle."""
+        if not admits:
+            return StreamBuffer(tensors=(x_in, active),
+                                meta={"empty": True})
+        base = self._zero_hop()
+        mask = base[0].copy()
+        leaves = [l.copy() for l in base[1:]]
+        for slot, cache in admits:
+            mask[slot] = True
+            for dst, src in zip(leaves, jax.tree_util.tree_leaves(
+                    jax.device_get(cache))):
+                dst[slot] = src
+        return StreamBuffer(tensors=(x_in, active, mask, *leaves), meta={})
+
+    def host_stage_prefill(self, params, x):
+        """Stage-local prefill: tokens int32[L] (stage 0) or boundary acts
+        float[1, L, d] -> (boundary out, b=1 stage cache).  Jitted per
+        input shape (element-local cache, workload-bounded like
+        ``host_prefill``).  The last stage argmaxes inside the jit — the
+        same program position the monolithic ``host_prefill`` uses."""
+        from ..models import transformer
+        if getattr(self, "_stage_prefill_jits", None) is None:
+            self._stage_prefill_jits = {}
+        x = np.asarray(x)
+        key = (x.shape, str(x.dtype))
+        fn = self._stage_prefill_jits.get(key)
+        if fn is None:
+            cfg, max_seq = self.cfg, self.max_seq
+            stage, n_stages = self.stage, self.n_stages
+
+            def prefill(p, xx):
+                if stage == 0:
+                    xx = xx[None]       # [L] tokens -> [1, L]
+                out, cache = transformer.stage_prefill(p, cfg, stage,
+                                                       n_stages, xx, max_seq)
+                if stage == n_stages - 1:
+                    out = jnp.argmax(out[0], axis=-1).astype(jnp.int32)
+                return out, cache
+            fn = self._stage_prefill_jits[key] = jax.jit(prefill)
+        out, cache = fn(params, jnp.asarray(x))
+        return np.asarray(out), cache
+
+    def host_stage_decode(self, params, x, cache):
+        """One b=1 decode step through this stage against a parked cache —
+        the stage-local REPLAY primitive (DESIGN.md §8): re-running the
+        retained boundary activations through this rebuilds a dead stage's
+        cache without touching any other stage, bitwise by construction
+        (identical traced program on identical inputs)."""
+        from ..models import transformer
+        if getattr(self, "_stage_decode_jit", None) is None:
+            cfg = self.cfg
+            stage, n_stages = self.stage, self.n_stages
+
+            def decode(p, xx, c):
+                if stage == 0:
+                    xx = xx.reshape((1,)).astype(jnp.int32)
+                out, new_c = transformer.stage_decode(p, cfg, stage,
+                                                      n_stages, xx, c)
+                if stage == n_stages - 1:
+                    out = jnp.argmax(out[0], axis=-1).astype(jnp.int32)
+                return out, new_c
+            self._stage_decode_jit = jax.jit(decode)
+        out, cache = self._stage_decode_jit(params, jnp.asarray(x), cache)
+        return np.asarray(out), cache
 
 
 @register_element("token_prompt_src")

@@ -197,6 +197,18 @@ class ExecutionPlan:
         #: the stateless stack-scan-split over independent frames
         self.stream_serving = self.query_batchable and any(
             getattr(op.elem, "is_stream_serve", False) for op in ops)
+        #: stream-serving pipeline that is ONE STAGE of an among-device
+        #: pipeline-parallel chain (DESIGN.md §8): the serve element owns a
+        #: contiguous layer slice plus that slice of the slot-stacked
+        #: decode cache; (stage, n_stages) is the hop signature — part of
+        #: the multi-hop serve fingerprint, so two stages of one chain (or
+        #: the same stage of two chains of different depth) never share a
+        #: serve_tick executable even when their cache structures agree
+        stage_elems = [op.elem for op in ops
+                       if getattr(op.elem, "is_stage_serve", False)]
+        self.stage_serving = self.stream_serving and bool(stage_elems)
+        self.serve_stage = ((stage_elems[0].stage, stage_elems[0].n_stages)
+                            if self.stage_serving else None)
         #: op indices of the query clients, in schedule order (the deferred
         #: walk's pause points — static, because topology is static)
         self.client_idxs = tuple(i for i, op in enumerate(ops)
@@ -623,7 +635,7 @@ class ExecutionPlan:
         full cache key so reconfigure warming can replicate it (see
         ``reconfig._warm``)."""
         fns = self._cache()["fns"]
-        key = ("serve_tick", donate, state_key)
+        key = ("serve_tick", donate, self.serve_stage, state_key)
         if key not in fns:
             def serve_tick(params, state, inputs, _self=self):
                 return _self.run(params, state, inputs,

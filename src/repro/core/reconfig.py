@@ -312,11 +312,13 @@ class Reconfiguration:
                         donate=key[1], mesh=mesh if key[2] == mesh_fp
                         else None, codec=key[3])
                 elif key[0] == "serve_tick":
-                    # stateful streaming executable: key[2] is the state
-                    # structure axis — identical serve topology re-keys to
-                    # the same entry, so a mid-decode hot swap dispatches
-                    # warm on its first post-commit tick
-                    plan._serve_tick_fn(key[1], key[2])
+                    # stateful streaming executable: key[-1] is the state
+                    # structure axis (key[2] is the multi-hop stage
+                    # signature, re-derived from the shadow plan itself) —
+                    # identical serve topology re-keys to the same entry,
+                    # so a mid-decode hot swap dispatches warm on its
+                    # first post-commit tick
+                    plan._serve_tick_fn(key[1], key[-1])
             except Exception:
                 pass  # warm is best-effort; commit never depends on it
         if plan.deferred_compilable:

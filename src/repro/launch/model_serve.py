@@ -18,7 +18,7 @@ from ..core.modelserve import SERVE_MODELS, register_serve_model
 from ..models.config import ModelConfig
 
 __all__ = ["serve_pipeline", "client_pipeline", "sequential_decode",
-           "SERVE_MODELS"]
+           "stage_pipeline", "staged_serve_pipelines", "SERVE_MODELS"]
 
 
 def _stablelm_smoke_flash() -> ModelConfig:
@@ -41,9 +41,17 @@ def _recurrentgemma_smoke() -> ModelConfig:
     return recurrentgemma_9b.config().smoke()
 
 
+def _stablelm_smoke_4l() -> ModelConfig:
+    """4-layer smoke variant: the pipeline-parallel staging testbed — its
+    layer count divides evenly into 2 and 4 stages (DESIGN.md §8)."""
+    from ..configs import stablelm_1_6b
+    return dataclasses.replace(stablelm_1_6b.config().smoke(), n_layers=4)
+
+
 register_serve_model("stablelm-smoke-flash", _stablelm_smoke_flash)
 register_serve_model("stablelm-smoke", _stablelm_smoke)
 register_serve_model("recurrentgemma-smoke", _recurrentgemma_smoke)
+register_serve_model("stablelm-smoke-4l", _stablelm_smoke_4l)
 
 
 def serve_pipeline(operation: str = "lm", model: str = "stablelm-smoke-flash",
@@ -55,6 +63,41 @@ def serve_pipeline(operation: str = "lm", model: str = "stablelm-smoke-flash",
         f"name=lm ! tensor_query_serversink name=ssink")
     ps.elements["ssink"].pair_with(ps.elements["ssrc"])
     return ps
+
+
+def stage_pipeline(operation: str = "lm", model: str = "stablelm-smoke-4l",
+                   slots: int = 8, max_seq: int = 32, stage: int = 0,
+                   n_stages: int = 2):
+    """ONE hop of an among-device pipeline-parallel chain (DESIGN.md §8).
+
+    Stage 0 serves the client-facing operation topic (clients need no idea
+    the model is staged); downstream stages serve ``{operation}/s{k}`` —
+    the topic the coordinator's per-stage bindings subscribe, with
+    ``stage`` declared as a ranking spec so a wildcard never binds a hop
+    to the wrong layer slice."""
+    topic = operation if stage == 0 else f"{operation}/s{stage}"
+    ps = parse_launch(
+        f"tensor_query_serversrc operation={topic} stage={stage} "
+        f"name=ssrc ! "
+        f"model_serve_stage model={model} slots={slots} max_seq={max_seq} "
+        f"stage={stage} n_stages={n_stages} name=lm ! "
+        f"tensor_query_serversink name=ssink")
+    ps.elements["ssink"].pair_with(ps.elements["ssrc"])
+    return ps
+
+
+def staged_serve_pipelines(operation: str = "lm",
+                           model: str = "stablelm-smoke-4l",
+                           slots: int = 8, max_seq: int = 32,
+                           n_stages: int = 2):
+    """The full N-hop chain: one ``stage_pipeline`` per layer slice.
+
+    Deploy each on its own Device: stage k's per-slot boundary activations
+    stream to stage k+1 over the same query fabric clients use, so broker
+    discovery ranks stages, leases detect stage death, and §6 reconfig
+    covers stage swap — among-device hops, not intra-process shards."""
+    return [stage_pipeline(operation, model, slots, max_seq, k, n_stages)
+            for k in range(n_stages)]
 
 
 def client_pipeline(operation: str = "lm", prompts: str = "1,2,3",

@@ -304,6 +304,97 @@ def lm_prefill_embedded(params, cfg: ModelConfig, x, max_seq: int
     return logits, {"pos": jnp.int32(x.shape[1]), "layers": caches}
 
 
+# ---------------------------------------------------------------------------
+# pipeline-stage entry points (among-device hops, DESIGN.md §8)
+#
+# A stage is a contiguous slice [lo, hi) of the layer stack running as its
+# own pipeline on its own device: stage 0 embeds, the last stage norms and
+# unembeds, middle stages map activations to activations.  Layer kinds and
+# cache shapes are indexed by GLOBAL layer number, so an N-stage chain runs
+# layer-for-layer the identical traced blocks ``lm_decode``/``lm_prefill``
+# run — chaining the stages reproduces the monolithic model bitwise (pinned
+# in tests/test_pp_staged_serving.py).
+# ---------------------------------------------------------------------------
+
+def stage_bounds(cfg: ModelConfig, stage: int, n_stages: int
+                 ) -> Tuple[int, int]:
+    """Global layer range [lo, hi) owned by ``stage`` of ``n_stages``."""
+    if not 0 <= stage < n_stages:
+        raise ValueError(f"stage {stage} not in [0, {n_stages})")
+    if cfg.n_layers % n_stages:
+        raise ValueError(f"n_layers={cfg.n_layers} not divisible by "
+                         f"n_stages={n_stages}")
+    r = cfg.n_layers // n_stages
+    return stage * r, (stage + 1) * r
+
+
+def stage_params(params: Dict, cfg: ModelConfig, stage: int, n_stages: int
+                 ) -> Dict:
+    """Slice a full list-layout param tree down to one stage's share.
+    ``embed`` rides on the first stage (token embedding) AND the last
+    (unembed reads ``params["embed"]`` — tied or ``head``)."""
+    lo, hi = stage_bounds(cfg, stage, n_stages)
+    out: Dict = {"layers": params["layers"][lo:hi]}
+    if stage == 0 or stage == n_stages - 1:
+        out["embed"] = params["embed"]
+    if stage == n_stages - 1:
+        out["final_norm"] = params["final_norm"]
+    return out
+
+
+def stage_cache_init(cfg: ModelConfig, stage: int, n_stages: int, batch: int,
+                     max_seq: int) -> Dict:
+    """Zero decode cache covering only this stage's layers (its slice of
+    the monolithic ``cache_init`` tree, same per-layer shapes)."""
+    lo, hi = stage_bounds(cfg, stage, n_stages)
+    return {"pos": jnp.int32(0),
+            "layers": [layer_cache_init(cfg, i, batch, max_seq)
+                       for i in range(lo, hi)]}
+
+
+def stage_prefill(params, cfg: ModelConfig, stage: int, n_stages: int, x,
+                  max_seq: int) -> Tuple[jnp.ndarray, Dict]:
+    """Prefill one stage: tokens ``[b, L]`` in for stage 0, activations
+    ``[b, L, d]`` for later stages; out is the boundary activations (or
+    final-position logits ``[b, vocab]`` on the last stage) plus this
+    stage's decode cache."""
+    lo, hi = stage_bounds(cfg, stage, n_stages)
+    if stage == 0:
+        x = L.embed(params["embed"], cfg, x)
+    caches: List[Dict] = []
+    for j in range(hi - lo):
+        x, cache, _ = block_prefill(params["layers"][j], cfg, cfg.kind(lo + j),
+                                    x, max_seq)
+        caches.append(cache)
+    out = x
+    if stage == n_stages - 1:
+        hfin = L.apply_norm(params["final_norm"], x, cfg)
+        out = L.unembed(params["embed"], cfg, hfin[:, -1:])[:, 0]
+    return out, {"pos": jnp.int32(x.shape[1]), "layers": caches}
+
+
+def stage_decode(params, cfg: ModelConfig, stage: int, n_stages: int, x,
+                 cache) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step through one stage: token ``[b]`` in for stage 0,
+    activations ``[b, 1, d]`` for later stages; out is activations
+    ``[b, 1, d]`` (or logits ``[b, vocab]`` on the last stage) plus the
+    advanced stage cache."""
+    lo, hi = stage_bounds(cfg, stage, n_stages)
+    pos = cache["pos"]
+    if stage == 0:
+        x = L.embed(params["embed"], cfg, x[:, None])
+    new_layers = []
+    for j in range(hi - lo):
+        x, c = block_decode(params["layers"][j], cfg, cfg.kind(lo + j), x,
+                            cache["layers"][j], pos)
+        new_layers.append(c)
+    out = x
+    if stage == n_stages - 1:
+        h = L.apply_norm(params["final_norm"], x, cfg)
+        out = L.unembed(params["embed"], cfg, h)[:, 0]
+    return out, {"pos": pos + 1, "layers": new_layers}
+
+
 def _rglru_prefill_cache(p, cfg: ModelConfig, x) -> Dict:
     u = x @ p["w_rec"]
     u_conv, conv_state = RG._conv4(u, p["conv"])

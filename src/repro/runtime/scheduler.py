@@ -93,6 +93,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 
 from ..core.batching import (BatchingPolicy, QueryBatcher,
+                             StagedStreamingBatcher, StageQueryBatcher,
                              StreamingQueryBatcher, DEFAULT_QUERY_BATCH)
 from ..core.broker import Broker, BrokerError
 from ..core.buffers import (StreamBuffer, stack_buffers, structure_key,
@@ -261,7 +262,32 @@ class Runtime:
                 # go through the deferred queue-gather-flush path
                 stream = any(getattr(el, "is_stream_serve", False)
                              for el in run.pipe.elements.values())
-                if stream:
+                staged = [el for el in run.pipe.elements.values()
+                          if getattr(el, "is_stage_serve", False)]
+                if staged and staged[0].stage > 0:
+                    # downstream hop of an among-device pipeline-parallel
+                    # chain (DESIGN.md §8): serves prefill/replay/decode-hop
+                    # verbs against its layer slice, parking b=1 caches by
+                    # stream id — no admission lifecycle of its own
+                    batcher = StageQueryBatcher(
+                        e.endpoint, run, self.batching,
+                        inline_step=lambda r=run: self._run_once(r),
+                        mesh=self.mesh, shard_mode=self.shard_mode,
+                        fused=self.fused_wire,
+                        on_orphans=self._count_orphans)
+                elif staged:
+                    # stage-0 coordinator: owns the admission lifecycle AND
+                    # drives the per-tick hop chain to downstream stages it
+                    # discovers through the broker
+                    batcher = StagedStreamingBatcher(
+                        e.endpoint, run, self.batching,
+                        inline_step=lambda r=run: self._run_once(r),
+                        mesh=self.mesh, shard_mode=self.shard_mode,
+                        fused=self.fused_wire,
+                        on_orphans=self._count_orphans,
+                        tick_source=lambda: self.ticks,
+                        broker=self.broker)
+                elif stream:
                     # streaming serve pipeline (model_serve): requests live
                     # across ticks in plan-state slots, so the endpoint gets
                     # the continuous-batching lifecycle instead of the

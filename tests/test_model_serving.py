@@ -25,6 +25,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import compression as comp
+from repro.core.batching import StreamingQueryBatcher
+from repro.core.buffers import StreamBuffer
 from repro.core.element import element_factory
 from repro.core.plan import executable_cache_info
 from repro.launch import model_serve as ms
@@ -282,6 +285,120 @@ class TestChaosStatefulFailover:
         qb = rt.stats()["query_batching"]
         assert qb["tokens_dropped"] > 0         # aborted streams declared
         assert qb["tokens_in_flight"] == 0
+
+
+def _push_raw(ep, client_id, prompt, gen):
+    """Push one wire-form streaming request straight onto the endpoint —
+    the regression tests drive the batcher below the scheduler."""
+    buf = StreamBuffer(tensors=(np.asarray(prompt, np.int32),),
+                       meta={"gen": gen, "client_id": client_id,
+                             "codec": "none"})
+    payload, nbytes = comp.encode(buf, "none")
+    ep.requests.push(payload, nbytes)
+
+
+def _pop_answers(ep, client_id):
+    out = []
+    ch = ep.client_channel(client_id)
+    while True:
+        raw = ch.pop()
+        if raw is None:
+            return out
+        out.append(np.asarray(comp.decode(raw, "none").tensors[0]).tolist())
+
+
+class TestStreamingBatcherRegressions:
+    def test_pipelined_prompts_same_client_both_complete(self):
+        """A client pipelines a SECOND prompt while its first stream is
+        mid-generation.  ``_by_client`` keys per REQUEST (a FIFO of records
+        per client) — the old one-record-per-client table overwrote the
+        first stream on admit, orphaning it from ``inflight_tokens()`` and
+        ``_abort_streams`` (regression)."""
+        rt = Runtime(query_batch=8)
+        _, srv, ps = _server(rt)
+        ep = ps.elements["ssrc"].endpoint
+        b = rt._batchers[ep.endpoint_id]
+        _push_raw(ep, 777, [1, 2], 6)
+        _push_raw(ep, 777, [3, 4], 6)
+        rt.ticks += 1
+        b.flush()
+        assert b.active_streams() == 2          # BOTH tracked
+        assert b.in_flight(777)
+        # one prefill + one decoded token each (the flush admits AND runs
+        # the tick's decode) — the overwrite bug would count only stream 2
+        assert b.inflight_tokens() == 4
+        for _ in range(8):                      # decode both to completion
+            rt.ticks += 1
+            b.flush()
+        got = _pop_answers(ep, 777)
+        assert len(got) == 2
+        params, cfg = srv.params["lm"], ps.elements["lm"].cfg
+        assert got[0] == _ref(params, cfg, [1, 2], 6)
+        assert got[1] == _ref(params, cfg, [3, 4], 6)
+        st = b.stats()
+        assert st["tokens_generated"] == st["tokens_delivered"] + \
+            st["tokens_dropped"] + st["tokens_in_flight"]
+
+    def test_pipelined_prompts_same_client_through_kill(self):
+        """Kill the endpoint with two live streams from ONE client: both
+        records' partial tokens must be declared drops — the overwrite bug
+        hid the first stream from ``_abort_streams``, silently breaking
+        the conservation law."""
+        rt = Runtime(query_batch=8)
+        _, srv, ps = _server(rt)
+        ep = ps.elements["ssrc"].endpoint
+        b = rt._batchers[ep.endpoint_id]
+        _push_raw(ep, 777, [1, 2], 6)
+        _push_raw(ep, 777, [3, 4], 6)
+        for _ in range(3):
+            rt.ticks += 1
+            b.flush()
+        generated = b.tokens_generated
+        assert b.active_streams() == 2 and generated >= 4
+        ep.alive = False
+        b.flush()
+        assert b.active_streams() == 0
+        assert b.tokens_dropped == generated    # BOTH streams' partials
+        st = b.stats()
+        assert st["tokens_in_flight"] == 0
+        assert st["tokens_generated"] == st["tokens_delivered"] + \
+            st["tokens_dropped"]
+
+    def test_standalone_batcher_decodes_every_flush(self):
+        """A batcher built WITHOUT a tick_source (no scheduler) must treat
+        every flush as its own decode tick.  The old ``lambda: -1`` default
+        satisfied the once-per-tick guard exactly once ever and then froze
+        decode forever (regression)."""
+        rt = Runtime(query_batch=8)
+        _, srv, ps = _server(rt)
+        ep = ps.elements["ssrc"].endpoint
+        b = StreamingQueryBatcher(ep, srv, rt.batching)   # standalone
+        _push_raw(ep, 555, [5, 6], 4)
+        for _ in range(5):
+            b.flush()
+        assert b.decode_ticks >= 3              # decoded every flush
+        assert b.streams_finished == 1
+        params, cfg = srv.params["lm"], ps.elements["lm"].cfg
+        assert _pop_answers(ep, 555) == [_ref(params, cfg, [5, 6], 4)]
+
+
+class TestEmptyAdmitAliasing:
+    def test_fresh_buffer_write_protected_mask(self):
+        """``empty_admit`` returns a FRESH buffer (fresh meta dict) every
+        call over ONE write-protected mask: the old single cached buffer
+        shared its meta dict with every consumer, so one downstream meta
+        mutation corrupted every later no-join tick (regression)."""
+        elem = element_factory("model_serve", model="stablelm-smoke",
+                               slots="4", max_seq="32")
+        a, b = elem.empty_admit(), elem.empty_admit()
+        assert a is not b
+        assert a.meta is not b.meta
+        a.meta["corrupted"] = True
+        assert "corrupted" not in b.meta
+        assert "corrupted" not in elem.empty_admit().meta
+        assert a.tensors[0] is b.tensors[0]     # the mask itself may alias...
+        with pytest.raises(ValueError):
+            a.tensors[0][0] = True              # ...because writes raise
 
 
 @pytest.mark.soak
