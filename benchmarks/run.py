@@ -23,6 +23,9 @@
 #                                            sequential at 8 streams gate)
 #   pp serving      -> bench_pp_serving     (2-stage among-device chain
 #                                            steady-state >=1.5x mono gate)
+#   qos serving     -> bench_qos            (1k-client Zipf+burst load: overload
+#                                            p99 isolation <=1.5x gate, zero
+#                                            silent drops, goodput >=0.9x gate)
 import json
 import os
 import platform
@@ -30,14 +33,14 @@ import sys
 import time
 import traceback
 
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR8.json")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR9.json")
 
 
 def main() -> None:
     from . import (bench_compression, bench_failover, bench_kernels,
                    bench_model_serving, bench_pp_serving, bench_pubsub,
-                   bench_query, bench_query_batching, bench_reconfig,
-                   bench_roofline, bench_sharded_serving,
+                   bench_qos, bench_query, bench_query_batching,
+                   bench_reconfig, bench_roofline, bench_sharded_serving,
                    bench_step_overhead, bench_sync, bench_wire_path)
     from .common import ROWS, reset_rows
 
@@ -51,6 +54,7 @@ def main() -> None:
         ("wire_path", bench_wire_path.run),
         ("model_serving", bench_model_serving.run),
         ("pp_serving", bench_pp_serving.run),
+        ("qos", bench_qos.run),
         ("sharded_serving", bench_sharded_serving.run),
         ("failover", bench_failover.run),
         ("reconfig", bench_reconfig.run),
@@ -76,7 +80,7 @@ def main() -> None:
     import jax
     payload = {
         "schema": 1,
-        "pr": 8,
+        "pr": 9,
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "suites_failed": failed,

@@ -11,6 +11,8 @@ from .elements import register_model, MODEL_REGISTRY
 from .pipeline import Pipeline, parse_launch, parse_caps
 from .plan import (ExecutionPlan, PendingQuery, clear_executable_cache,
                    executable_cache_info)
+from .admission import (AdmissionQueue, QoSConfig, TenantSpec,
+                        DEFAULT_TENANT)
 from .batching import BatchingPolicy, QueryBatcher
 from .broker import Broker, BrokerError, topic_matches
 from .pubsub import Channel, MqttSink, MqttSrc, Transport
@@ -32,6 +34,7 @@ __all__ = [
     "Pipeline", "parse_launch", "parse_caps",
     "ExecutionPlan", "PendingQuery", "clear_executable_cache",
     "executable_cache_info",
+    "AdmissionQueue", "QoSConfig", "TenantSpec", "DEFAULT_TENANT",
     "BatchingPolicy", "QueryBatcher",
     "Broker", "BrokerError", "topic_matches",
     "Channel", "MqttSink", "MqttSrc", "Transport",

@@ -66,6 +66,16 @@ and sync once per flush.  Groups a mesh may take keep the PR-4 eager wire
 path (host decode → placement probe → sharded serve → host encode), so the
 sharding guarantees are untouched; ``fused=False`` restores the eager path
 everywhere (the benchmark baseline).
+
+Admission layer (DESIGN.md §9): every batcher's queueing now runs through
+one shared :class:`~repro.core.admission.AdmissionQueue` — requests pop
+off the endpoint Channel into per-tenant session queues at flush time, and
+the dequeue is the scheduling function (pure global FIFO when QoS is off —
+bitwise the old channel ``pop_n`` — weighted-fair across priority classes
+with EDF within a class when a :class:`~repro.core.admission.QoSConfig` is
+installed).  Scheduling changes ordering and admission, never answers:
+whatever ``take`` returns flows through the exact serve paths documented
+above, so the parity pins are out of scope by construction.
 """
 from __future__ import annotations
 
@@ -76,6 +86,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from .admission import AdmissionQueue, QoSConfig
 from .buffers import StreamBuffer, structure_key, unstack_buffers
 from .query import QueryServerEndpoint
 from . import compression as comp
@@ -88,7 +99,9 @@ DEFAULT_QUERY_BATCH = 8
 
 #: buffer meta keys that carry per-request routing, not payload semantics —
 #: hoisted out before stacking and re-attached to the routed answer
-_ROUTING_KEYS = ("client_id", "codec")
+#: (``tenant_id`` rides along so admission can book the request before the
+#: hoist and the answer still names its tenant)
+_ROUTING_KEYS = ("client_id", "codec", "tenant_id")
 
 
 @dataclass(frozen=True)
@@ -133,7 +146,9 @@ class QueryBatcher:
                  policy: BatchingPolicy,
                  inline_step: Optional[Callable[[], Any]] = None,
                  mesh=None, shard_mode: str = "auto", fused: bool = True,
-                 on_orphans: Optional[Callable[[int], None]] = None):
+                 on_orphans: Optional[Callable[[int], None]] = None,
+                 *, qos: Optional[QoSConfig] = None,
+                 clock: Optional[Callable[[], int]] = None):
         if shard_mode not in ("auto", "always", "never"):
             raise ValueError(f"shard_mode {shard_mode!r} not in "
                              f"('auto', 'always', 'never')")
@@ -141,6 +156,10 @@ class QueryBatcher:
         self.run = run
         self.policy = policy
         self.inline_step = inline_step
+        #: THE queueing/shedding/accounting core (module docstring): with
+        #: qos=None this is an exact global-FIFO pass-through and the only
+        #: change vs popping the channel directly is the per-tenant ledger
+        self.admission = AdmissionQueue(qos=qos, clock=clock)
         #: called with the number of popped-but-unserved requests a flush
         #: abandons when its endpoint dies mid-flush (the runtime adds them
         #: to its orphan ledger; the paused frames re-dispatch from their
@@ -173,24 +192,25 @@ class QueryBatcher:
 
     # -- public API ------------------------------------------------------------
     def in_flight(self, client_id: int) -> bool:
-        """Whether ``client_id`` has a stream mid-generation on this server.
-        Stateless batching answers every request within its flush, so the
-        base batcher is never in flight; the streaming subclass overrides."""
-        return False
+        """Whether ``client_id`` has work the scheduler must keep waiting
+        on at this server.  Stateless batching answers every DEQUEUED
+        request within its flush, but a QoS serve budget may hold the
+        request queued across ticks — still in flight, not lost; the
+        streaming subclass additionally tracks mid-generation streams."""
+        return self.admission.queued_for(client_id) > 0
 
     def pending(self) -> int:
-        return len(self.endpoint.requests)
+        return len(self.endpoint.requests) + len(self.admission)
 
     def full(self) -> bool:
-        pending = self.pending()
         # backpressure floor, independent of policy: the request Channel is
         # bounded (leaky-drop), so once the gather reaches its capacity we
         # MUST serve — one more send would silently drop a client's request
         # and its frame would then die with 'no answer' at the deadline
-        if pending >= self.endpoint.requests.capacity:
+        if len(self.endpoint.requests) >= self.endpoint.requests.capacity:
             return True
         return self.policy.flush_on_full and \
-            pending >= max(1, self.policy.max_batch)
+            self.pending() >= max(1, self.policy.max_batch)
 
     def flush(self) -> int:
         """Serve every pending request; returns the number served.
@@ -200,10 +220,16 @@ class QueryBatcher:
         keep their serve-before-return contract unchanged.
         """
         if not self.endpoint.alive:
-            # dead server: never serve — requests still on the endpoint are
-            # orphans the scheduler re-dispatches from its own PendingQuery
-            # records (the runtime purges the channel on the down event)
+            # dead server: never serve — requests still on the endpoint
+            # channel are orphans the scheduler re-dispatches from its own
+            # PendingQuery records (the runtime purges the channel on the
+            # down event); requests already ADMITTED here close on this
+            # queue's ledger as server-died sheds (their re-dispatch is a
+            # fresh admission at the survivor, so conservation holds both
+            # per queue and summed)
+            self._shed_dead()
             return 0
+        adm = self.admission
         served = 0
         plan = self.run.pipe.plan
         # max_batch == 1 is still batching-enabled: a group of one serves
@@ -212,24 +238,34 @@ class QueryBatcher:
         batchable = self.policy.enabled and plan.query_batchable
         # liveness is re-checked before EVERY group, not only at entry: a
         # mark_down can land mid-flush (the serving chain itself announces
-        # a death), and frames this flush already popped off the request
-        # channel are invisible to the down event's purge — a corpse must
-        # not keep serving them, so the remainder goes to the orphan ledger
-        # and re-dispatches like any channel-purged orphan
-        while self.pending() and self.endpoint.alive:
+        # a death), and frames this flush already dequeued are invisible to
+        # the down event's purge — a corpse must not keep serving them, so
+        # the remainder goes to the orphan ledger and re-dispatches like
+        # any channel-purged orphan
+        while self.endpoint.alive:
+            # re-ingest every round: serving can land new requests on the
+            # channel (inline chains), exactly as the old per-iteration
+            # channel check saw them
+            adm.ingest_channel(self.endpoint.requests)
+            adm.expire()
+            if not len(adm):
+                break
             if not batchable:
-                while self.pending():
-                    if not self.endpoint.alive:
-                        break
-                    self._serve_sequential()
-                    served += 1
+                recs = adm.take(1)
+                if not recs:
+                    break               # serve budget spent this tick
+                self._serve_sequential(recs[0])
+                served += 1
                 continue
-            raws = self.endpoint.requests.pop_n(self.policy.max_batch)
+            recs = adm.take(self.policy.max_batch)
+            if not recs:
+                break                   # serve budget spent this tick
+            raws = [r.raw for r in recs]
+            idx = 0
             if self.fused:
-                groups = list(self._group_wire(raws))
-                for gi, (pairs, codec) in enumerate(groups):
+                for pairs, codec in self._group_wire(raws):
                     if not self.endpoint.alive:
-                        self._orphan(sum(len(p) for p, _ in groups[gi:]))
+                        self._shed_flush_remainder(recs[idx:])
                         break
                     if codec.partition(":")[0] == "none" or \
                             self._mesh_may_take(len(pairs)):
@@ -247,14 +283,19 @@ class QueryBatcher:
                              in zip(decoded, pairs)])
                     else:
                         self._serve_batched_wire(pairs, codec)
+                    for rec in recs[idx:idx + len(pairs)]:
+                        adm.mark_served(rec)
+                    idx += len(pairs)
                     served += len(pairs)
             else:
-                groups = list(self._group(raws))
-                for gi, group in enumerate(groups):
+                for group in self._group(raws):
                     if not self.endpoint.alive:
-                        self._orphan(sum(len(g) for g in groups[gi:]))
+                        self._shed_flush_remainder(recs[idx:])
                         break
                     self._serve_batched(group)
+                    for rec in recs[idx:idx + len(group)]:
+                        adm.mark_served(rec)
+                    idx += len(group)
                     served += len(group)
         if served:
             self.flushes += 1
@@ -267,6 +308,22 @@ class QueryBatcher:
         self.orphaned += n
         if self.on_orphans is not None:
             self.on_orphans(n)
+
+    def _shed_flush_remainder(self, recs):
+        """Close the dequeued-but-unserved tail of a dying flush: shed on
+        the tenant ledger (reason ``server-died``, no client notice — the
+        scheduler re-dispatches these from their PendingQuery records and
+        the client gets a real answer elsewhere) + the orphan ledger."""
+        for rec in recs:
+            self.admission.mark_shed(rec, "server-died", notify=False)
+        self._orphan(len(recs))
+
+    def _shed_dead(self) -> int:
+        """Endpoint is dead: everything still queued in admission sheds
+        (``server-died``) and joins the orphan ledger for re-dispatch."""
+        n = self.admission.shed_queued("server-died")
+        self._orphan(n)
+        return n
 
     def on_reconfig(self):
         """The served pipeline was hot-swapped under this batcher: calibrated
@@ -359,13 +416,21 @@ class QueryBatcher:
             self.placements.get(n) != "single"
 
     # -- serving ---------------------------------------------------------------
-    def _serve_sequential(self):
+    def _serve_sequential(self, rec=None):
         """Legacy one-request interpreted step (also the fallback for server
-        plans the hoisted scan cannot express)."""
+        plans the hoisted scan cannot express).  ``rec`` is the admission
+        record whose raw request this step serves: it re-enters the HEAD of
+        the request channel (``appendleft`` — no double byte/msg
+        accounting) so the interpreted serversrc pull sees exactly the
+        pre-admission world, then closes served on the ledger."""
         if self.inline_step is None:
             raise RuntimeError("sequential fallback needs an inline_step")
+        if rec is not None:
+            self.endpoint.requests.q.appendleft(rec.raw)
         self.inline_step()
         self.sequential_frames += 1
+        if rec is not None:
+            self.admission.mark_served(rec)
 
     def _pick_placement(self, n: int, frames_in: Tuple) -> bool:
         """Whether THIS group serves through the mesh-sharded executable.
@@ -521,6 +586,11 @@ class QueryBatcher:
         run.last_outputs = app_outs
 
     def stats(self) -> Dict[str, int]:
+        """Unified base schema every batcher shares (subclasses EXTEND this
+        dict, never replace keys): flush/dispatch counters plus the
+        admission totals whose conservation law ``admitted == served +
+        shed + queued + in_flight`` Runtime.stats() asserts."""
+        adm = self.admission.stats()
         return {"flushes": self.flushes, "batches": self.batches,
                 "batched_frames": self.batched_frames,
                 "sequential_frames": self.sequential_frames,
@@ -528,7 +598,16 @@ class QueryBatcher:
                 "sharded_frames": self.sharded_frames,
                 "fused_batches": self.fused_batches,
                 "fused_frames": self.fused_frames,
-                "flush_orphans": self.orphaned}
+                "flush_orphans": self.orphaned,
+                "admitted_requests": sum(t["admitted"] for t in
+                                         adm.values()),
+                "served_requests": sum(t["served"] for t in adm.values()),
+                "shed_requests": sum(t["shed"] for t in adm.values()),
+                "queued_requests": sum(t["queued"] for t in adm.values())}
+
+    def tenant_stats(self) -> Dict[str, Dict]:
+        """Per-tenant ledgers for ``Runtime.stats()["tenants"]``."""
+        return self.admission.stats()
 
 
 class StreamingQueryBatcher(QueryBatcher):
@@ -592,7 +671,8 @@ class StreamingQueryBatcher(QueryBatcher):
 
     # -- introspection ---------------------------------------------------------
     def in_flight(self, client_id: int) -> bool:
-        return bool(self._by_client.get(client_id))
+        return bool(self._by_client.get(client_id)) or \
+            super().in_flight(client_id)
 
     def inflight_tokens(self) -> int:
         return sum(len(rec["tokens"]) for recs in self._by_client.values()
@@ -645,9 +725,13 @@ class StreamingQueryBatcher(QueryBatcher):
         return bool(self._slots or self._waiting)
 
     def _admit(self) -> int:
-        """Pop + prefill every pending request; short generations answer
-        here, the rest join the waiting FIFO (slot assignment happens at
-        the next decode tick, so admission order is arrival order)."""
+        """Ingest + prefill every admitted request; short generations
+        answer here, the rest join the waiting pool (slot assignment
+        happens at the next decode tick — arrival order when QoS is off,
+        ``(priority, deadline, arrival)`` order when it is on: slot
+        admission honors tenant priority, and since a slotted stream is
+        never evicted before its ``finished`` lane fires, preemption only
+        ever happens at generation boundaries)."""
         finished = 0
         elem = self._serve_elem()
         params = self.run.params.get(elem.name, {})
@@ -668,9 +752,15 @@ class StreamingQueryBatcher(QueryBatcher):
                     finished += 1
                 else:
                     self._waiting.append(rec)
-        while self.pending() and self.endpoint.alive:
-            raw = self.endpoint.requests.pop()
-            clean, routing = self._decode(raw)
+        adm = self.admission
+        while self.endpoint.alive:
+            adm.ingest_channel(self.endpoint.requests)
+            adm.expire()
+            recs = adm.take(1)
+            if not recs:
+                break
+            arec = recs[0]
+            clean, routing = self._decode(arec.raw)
             gen = int(clean.meta.get("gen", 1))
             tok, cache = elem.host_prefill(params, clean.tensors[0])
             self.prefills += 1
@@ -678,7 +768,8 @@ class StreamingQueryBatcher(QueryBatcher):
             self.tokens_generated += 1
             rec = {"routing": routing, "tokens": [tok], "prompt":
                    clean.tensors[0], "gen": gen,
-                   "remaining": max(0, gen - 1), "cache": cache}
+                   "remaining": max(0, gen - 1), "cache": cache,
+                   "adm": arec}
             self._track(rec)
             if rec["remaining"] <= 0:
                 self._finish(rec)
@@ -686,6 +777,18 @@ class StreamingQueryBatcher(QueryBatcher):
             else:
                 self._waiting.append(rec)
         return finished
+
+    def _next_waiting(self) -> Dict:
+        """The waiting stream the next free slot goes to: plain FIFO when
+        QoS is off (the pre-QoS semantics, bit for bit), else the best
+        ``(priority, deadline, arrival)`` key — tenant priority decides
+        slot admission, never slot eviction."""
+        if not self.admission.enabled or len(self._waiting) <= 1:
+            return self._waiting.pop(0)
+        best = min(range(len(self._waiting)),
+                   key=lambda i: self._waiting[i]["adm"].order_key()
+                   if "adm" in self._waiting[i] else (-1, 0.0, -1))
+        return self._waiting.pop(best)
 
     def _decode_tick(self) -> int:
         """ONE stateful dispatch over the whole slot table: waiting streams
@@ -697,7 +800,7 @@ class StreamingQueryBatcher(QueryBatcher):
         free = sorted(s for s in range(elem.slots) if s not in self._slots)
         admits = []
         while free and self._waiting:
-            rec = self._waiting.pop(0)
+            rec = self._next_waiting()
             slot = free.pop(0)
             admits.append((slot, rec["tokens"][-1], rec["remaining"],
                            rec["cache"]))
@@ -740,6 +843,9 @@ class StreamingQueryBatcher(QueryBatcher):
         sink.apply(self.run.params.get(sink.name, {}), [answer])
         self.tokens_delivered += len(rec["tokens"])
         self.streams_finished += 1
+        arec = rec.pop("adm", None)
+        if arec is not None:
+            self.admission.mark_served(arec)
         self._untrack(rec)
 
     def on_reconfig(self):
@@ -768,12 +874,17 @@ class StreamingQueryBatcher(QueryBatcher):
         drops (conservation law) — the orphaned PendingQuery records
         re-dispatch with prefill replay on a survivor, so the client still
         loses zero tokens end-to-end."""
+        self._shed_dead()
         if not self._by_client:
             return
         total = 0
         for recs in self._by_client.values():
             for rec in recs:
                 self.tokens_dropped += len(rec["tokens"])
+                arec = rec.pop("adm", None)
+                if arec is not None:
+                    self.admission.mark_shed(arec, "server-died",
+                                             notify=False)
                 total += 1
         self._orphan(total)
         self._slots.clear()
@@ -842,11 +953,23 @@ class StageQueryBatcher(QueryBatcher):
     def flush(self) -> int:
         if not self.endpoint.alive:
             self._parked.clear()
+            self._shed_dead()
             return 0
+        # hop traffic shares the admission core for its ledger, but is
+        # ALWAYS pass-through FIFO regardless of runtime QoS: each hop is
+        # one step of a stream the coordinator already admitted under its
+        # tenant's budget — re-scheduling mid-chain would deadlock the
+        # synchronous hop round-trip (the runtime wires stage batchers
+        # with qos=None for exactly this reason)
+        adm = self.admission
         served = 0
-        while self.pending() and self.endpoint.alive:
-            raw = self.endpoint.requests.pop()
-            self._serve_hop(raw)
+        while self.endpoint.alive:
+            adm.ingest_channel(self.endpoint.requests)
+            recs = adm.take(1)
+            if not recs:
+                break
+            self._serve_hop(recs[0].raw)
+            adm.mark_served(recs[0])
             served += 1
         if served:
             self.flushes += 1
@@ -1094,12 +1217,19 @@ class StagedStreamingBatcher(StreamingQueryBatcher):
             stalled, self._stalled = self._stalled, []
             for rec in stalled:
                 finished += self._resume_chain(rec)
-        while self.pending() and self.endpoint.alive:
-            raw = self.endpoint.requests.pop()
-            clean, routing = self._decode(raw)
+        adm = self.admission
+        while self.endpoint.alive:
+            adm.ingest_channel(self.endpoint.requests)
+            adm.expire()
+            recs = adm.take(1)
+            if not recs:
+                break
+            arec = recs[0]
+            clean, routing = self._decode(arec.raw)
             gen = int(clean.meta.get("gen", 1))
             rec = {"routing": routing, "tokens": [],
-                   "prompt": clean.tensors[0], "gen": gen, "remaining": 0}
+                   "prompt": clean.tensors[0], "gen": gen, "remaining": 0,
+                   "adm": arec}
             self.streams_started += 1
             self._track(rec)
             finished += self._start_stream(rec, elem, params)

@@ -197,11 +197,14 @@ class Broker:
         coordinator asking for stage k ranks servers declaring a DIFFERENT
         ``stage`` behind those declaring k or nothing — a wildcard
         subscription over a chain's topics must never bind a hop to the
-        wrong layer slice), (2) preferred-codec support (a server declaring
-        ``codecs=(...)`` that lacks the client's codec ranks behind one that
-        has it — absent declaration means "anything goes"), (3) declared
-        ``throughput`` (higher better), (4) current ``load`` (lower better),
-        (5) registration order — the deterministic tiebreak that preserves
+        wrong layer slice), (2) tenant affinity (a replica declaring
+        ``tenants=(...)`` that lacks the client's tenant ranks behind one
+        that pins it or declares nothing — soft isolation, DESIGN.md §9),
+        (3) preferred-codec support (a server declaring ``codecs=(...)``
+        that lacks the client's codec ranks behind one that has it — absent
+        declaration means "anything goes"), (4) declared ``throughput``
+        (higher better), (5) current ``load`` (lower better),
+        (6) registration order — the deterministic tiebreak that preserves
         the pre-ranking first-match behavior when nobody declares anything.
         """
         prefer = prefer or {}
@@ -210,13 +213,40 @@ class Broker:
         stage_miss = 1 if (stage is not None and declared_stage is not None
                            and int(_as_float(declared_stage, -1))
                            != int(stage)) else 0
+        tenant = prefer.get("tenant")
+        declared_tenants = reg.specs.get("tenants")
+        tenant_miss = 1 if (tenant is not None
+                            and declared_tenants is not None
+                            and tenant not in declared_tenants) else 0
         codec = prefer.get("codec")
         declared = reg.specs.get("codecs")
         codec_miss = 1 if (codec not in (None, "none") and declared is not None
                            and codec not in declared) else 0
-        return (stage_miss, codec_miss,
+        return (stage_miss, tenant_miss, codec_miss,
                 -_as_float(reg.specs.get("throughput")),
                 _as_float(reg.load), reg.reg_id)
+
+    def scaling_signal(self, topic_filter: str = "query/#"
+                       ) -> Dict[str, Dict[str, float]]:
+        """Per-topic capacity picture for elastic serving (DESIGN.md §9):
+        live replica count plus summed / mean / max observed ``reg.load``
+        (the runtime refreshes load every heartbeat from each endpoint's
+        queue depth + admission backlog + active decode slots).  The
+        autoscaler turns this into §6 add/remove reconfigurations — the
+        broker only OBSERVES; it never owns replica lifecycle."""
+        topics: Dict[str, Dict[str, float]] = {}
+        for reg in self._regs.values():
+            if not reg.alive or not topic_matches(topic_filter, reg.topic):
+                continue
+            t = topics.setdefault(reg.topic, {"replicas": 0, "load": 0.0,
+                                              "max_load": 0.0})
+            t["replicas"] += 1
+            t["load"] += _as_float(reg.load)
+            t["max_load"] = max(t["max_load"], _as_float(reg.load))
+        for t in topics.values():
+            t["mean_load"] = t["load"] / t["replicas"] if t["replicas"] \
+                else 0.0
+        return topics
 
     def subscribe(self, topic_filter: str,
                   prefer: Optional[Dict[str, Any]] = None,

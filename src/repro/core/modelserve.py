@@ -203,6 +203,25 @@ class ModelServeElement(Element):
         return [inputs[0].with_(tensors=(token, emitted, finished), meta={})]
 
     # -- host half (StreamingQueryBatcher calls) ------------------------------
+    def active_slots(self, state) -> int:
+        """Occupied decode slots right now — the serve-capacity half of the
+        broker's scaling signal (DESIGN.md §9: a streaming server's load is
+        its queue depth PLUS the streams already holding slots across
+        ticks).  Reads the plan-state active mask; cheap enough for the
+        per-tick heartbeat.
+
+        Slot admission is where tenant priority acts (the batcher's waiting
+        pool orders by the admission record's ``(priority, deadline,
+        arrival)`` key); once a stream holds a slot it is NEVER evicted
+        before its ``finished`` lane fires — preemption happens only at
+        generation boundaries, so a slot's cache lineage stays intact."""
+        st = state.get(self.name, {})
+        active = st.get("active")
+        if active is None:
+            return 0
+        import numpy as _np
+        return int(_np.asarray(jax.device_get(active)).sum())
+
     def host_prefill(self, params, prompt):
         """Prefill one request: prompt int32[L] -> (first token int, b=1
         decode cache).  Jitted per prompt length (element-local cache, NOT

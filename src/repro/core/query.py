@@ -79,7 +79,8 @@ class TensorQueryClient(Element):
     _ids = itertools.count(1)
 
     def __init__(self, name=None, operation="", transport="hybrid",
-                 codec="none", broker: Optional[Broker] = None, **props):
+                 codec="none", broker: Optional[Broker] = None,
+                 tenant=None, **props):
         super().__init__(name=name, **props)
         self.operation = props.get("operation", operation)
         self.transport = (QueryTransport.MQTT_HYBRID if transport in ("hybrid", "mqtt")
@@ -87,9 +88,20 @@ class TensorQueryClient(Element):
         self.codec = codec
         self.broker = broker
         self.client_id = next(self._ids)
+        #: tenant this client's requests bill against (DESIGN.md §9).  None
+        #: (the default) tags NOTHING — untagged requests book under the
+        #: admission layer's default tenant, so single-tenant deployments
+        #: and every pre-QoS pipeline string are untouched on the wire.
+        self.tenant = props.get("tenant", tenant)
         self.binding = None
         self._direct: Optional[QueryServerEndpoint] = None
         self.require = {k[8:]: v for k, v in props.items() if k.startswith("require_")}
+
+    def _routing_meta(self) -> Dict:
+        meta = {"client_id": self.client_id, "codec": self.codec}
+        if self.tenant is not None:
+            meta["tenant_id"] = self.tenant
+        return meta
 
     def connect(self, broker: Broker):
         self.broker = broker
@@ -111,9 +123,13 @@ class TensorQueryClient(Element):
                 raise BrokerError(f"{self.name}: MQTT-hybrid requires a broker")
             # capability-aware selection: rank servers by codec support /
             # throughput / load (DESIGN.md §3) on top of the hard require-*
-            # spec filters
+            # spec filters; a tenant-tagged client also prefers replicas
+            # that declare affinity for its tenant (soft, like codec)
+            prefer = {"codec": self.codec}
+            if self.tenant is not None:
+                prefer["tenant"] = self.tenant
             self.binding = self.broker.subscribe(
-                f"query/{self.operation}", prefer={"codec": self.codec},
+                f"query/{self.operation}", prefer=prefer,
                 **self.require)
         ep = self.binding.endpoint
         if not ep.alive:
@@ -134,8 +150,7 @@ class TensorQueryClient(Element):
         if ep is None:
             ep = self._endpoint()
         payload, nbytes = comp.encode(buf, self.codec)
-        payload = payload.with_(meta={**payload.meta, "client_id": self.client_id,
-                                      "codec": self.codec})
+        payload = payload.with_(meta={**payload.meta, **self._routing_meta()})
         if self.transport == QueryTransport.MQTT_HYBRID and self.broker is not None:
             # control message (topic resolution ping) — tiny, broker-borne
             self.broker.relay_msgs += 0  # control msgs are not data-relayed
@@ -150,8 +165,7 @@ class TensorQueryClient(Element):
         :meth:`send_query`; the payload/nbytes must be what ``encode``
         would have produced — bitwise, pinned by the codec batch tests."""
         payload = payload.with_(meta={**payload.meta,
-                                      "client_id": self.client_id,
-                                      "codec": self.codec})
+                                      **self._routing_meta()})
         ep.requests.push(payload, nbytes)
         return ep
 

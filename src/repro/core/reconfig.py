@@ -374,6 +374,11 @@ class Reconfiguration:
         rt._wire(dev, run)
         run.step_fn = run.pipe.compiled_step() \
             if (run.jit and run.pipe.plan.pure) else run.pipe.step
+        # grow-from-empty (elastic scale-up, DESIGN.md §9): a placeholder
+        # run starts retired (nothing to serve pre-commit) and goes live
+        # here, in the same commit that registers its endpoints — the
+        # replica is discoverable and runnable atomically
+        run.retired = False
         for b in rt._batchers.values():
             if b.run is run:
                 b.on_reconfig()

@@ -18,7 +18,8 @@ from ..core.modelserve import SERVE_MODELS, register_serve_model
 from ..models.config import ModelConfig
 
 __all__ = ["serve_pipeline", "client_pipeline", "sequential_decode",
-           "stage_pipeline", "staged_serve_pipelines", "SERVE_MODELS"]
+           "stage_pipeline", "staged_serve_pipelines", "SERVE_MODELS",
+           "three_tier_qos"]
 
 
 def _stablelm_smoke_flash() -> ModelConfig:
@@ -101,12 +102,51 @@ def staged_serve_pipelines(operation: str = "lm",
 
 
 def client_pipeline(operation: str = "lm", prompts: str = "1,2,3",
-                    gens: str = "4", codec: str = "none"):
-    """Streaming client: one prompt request per frame, cycling prompts/gens."""
+                    gens: str = "4", codec: str = "none",
+                    tenant: Optional[str] = None):
+    """Streaming client: one prompt request per frame, cycling prompts/gens.
+
+    ``tenant`` tags every request with a tenant id so the serve side's
+    admission layer can schedule it under that tenant's QoS contract;
+    ``None`` keeps the pre-QoS wire format byte-identical."""
+    tenant_prop = f" tenant={tenant}" if tenant is not None else ""
     return parse_launch(
         f"token_prompt_src prompts={prompts} gens={gens} ! "
-        f"tensor_query_client operation={operation} codec={codec} "
-        f"name=qc ! appsink name=res")
+        f"tensor_query_client operation={operation} codec={codec}"
+        f"{tenant_prop} name=qc ! appsink name=res")
+
+
+def three_tier_qos(rate: Optional[int] = None,
+                   deadline_ticks: Optional[int] = None,
+                   max_queue: Optional[int] = None,
+                   serve_per_tick: Optional[int] = None):
+    """The canonical three-tenant serving contract (DESIGN.md §9).
+
+    * ``realtime``    — priority 0, strict per-tick deadline, never sheds
+      for rate (interactive traffic is assumed pre-shaped upstream);
+    * ``standard``    — priority 1, rate-limited to ``rate`` req/tick with
+      a matching burst, bounded queue;
+    * ``best-effort`` — priority 2, same rate budget, shortest deadline and
+      smallest queue: the tier that sheds FIRST under overload, explicitly.
+
+    Unknown tenant ids fall into ``best-effort`` (the ``default`` spec), so
+    an unregistered tenant can never crowd out paying tiers."""
+    from ..core.admission import QoSConfig, TenantSpec
+    best_effort = TenantSpec("best-effort", priority=2, rate=rate,
+                             deadline_ticks=deadline_ticks, max_queue=max_queue)
+    return QoSConfig(
+        tenants=(
+            TenantSpec("realtime", priority=0,
+                       deadline_ticks=deadline_ticks),
+            TenantSpec("standard", priority=1, rate=rate,
+                       deadline_ticks=(None if deadline_ticks is None
+                                       else 2 * deadline_ticks),
+                       max_queue=(None if max_queue is None
+                                  else 2 * max_queue)),
+            best_effort,
+        ),
+        default=best_effort,
+        serve_per_tick=serve_per_tick)
 
 
 def sequential_decode(params, cfg: ModelConfig, prompt, gen: int,

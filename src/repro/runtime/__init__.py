@@ -1,1 +1,4 @@
+from .autoscale import Autoscaler
 from .scheduler import Device, Runtime
+
+__all__ = ["Autoscaler", "Device", "Runtime"]

@@ -1,0 +1,202 @@
+"""Elastic server fleets — autoscaling as a reconfiguration (DESIGN.md §9).
+
+The ROADMAP's production-traffic item asks for "the broker spins pipeline
+replicas up/down from observed queue depth, reusing the PR-3 lease/rank
+machinery as the scaling signal".  This module is deliberately thin: ALL
+the hard problems are already solved elsewhere, and the autoscaler only
+composes them —
+
+* the **signal** is :meth:`Broker.scaling_signal` — live replica count and
+  per-replica load, maintained by the runtime's per-tick heartbeat from
+  each endpoint's queue depth + admission backlog + active decode slots;
+* **scale-up** is a §6 reconfiguration: a fresh device gets an EMPTY
+  placeholder run (retired — the scheduler skips it), and a single
+  ``add``/``link`` edit script grows the replica pipeline into it through
+  ``ReconfigManager``'s prepare → warm → commit lifecycle.  The replica
+  registers its endpoints inside the commit, so it becomes discoverable
+  and runnable atomically; clients rebalance through the broker's ordinary
+  win-back + the runtime's QoS join-shortest-queue dispatch.  A replica
+  whose device dies mid-warm ROLLS BACK through the same ``target-dead``
+  path any planned reconfig uses — the chaos pin for elastic serving.
+* **scale-down** is a remove-all reconfiguration of an IDLE replica (no
+  queued requests, no admission backlog, no active streams — checked at
+  request time and re-checked by the §6 drain guard), so draining a
+  replica can lose nothing by construction; its per-tenant ledgers fold
+  into the runtime's archive at retire time.
+
+Autoscaling is a reconfig, not a new mechanism: there is no new failure
+mode to pin, because every transition IS one of the already-pinned §6
+transitions.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from ..core.pipeline import Pipeline
+from .scheduler import Device, Runtime
+
+__all__ = ["Autoscaler"]
+
+
+class Autoscaler:
+    """Queue-depth driven replica controller for one serve topic.
+
+    ``factory(index)`` builds a FRESH replica pipeline (same model preset,
+    same topic) — e.g. ``lambda i: serve_pipeline(model, operation=op)``.
+    ``rng`` seeds every replica's params (same seed => replicas answer
+    bitwise identically, so rebalancing never changes numerics).
+
+    Thresholds are in heartbeat-load units (requests + backlog + active
+    slots): scale up when the topic's MEAN load per replica crosses
+    ``high_load`` with every replica ALSO above ``low_load`` (one hot
+    replica next to idle ones is a dispatch-balance problem, not a
+    capacity problem); scale down when the mean drops to ``low_load`` and
+    one of OUR replicas is drained idle.  ``cooldown_ticks`` separates
+    actions so a reconfig in flight is never raced by the next decision.
+    """
+
+    def __init__(self, runtime: Runtime, topic: str,
+                 factory: Callable[[int], Pipeline],
+                 high_load: float = 8.0, low_load: float = 0.5,
+                 max_replicas: int = 4, min_replicas: int = 1,
+                 cooldown_ticks: int = 8, warm_ticks: int = 1,
+                 rng=None):
+        self.rt = runtime
+        self.topic = topic
+        self.factory = factory
+        self.high_load = float(high_load)
+        self.low_load = float(low_load)
+        self.max_replicas = int(max_replicas)
+        self.min_replicas = int(min_replicas)
+        self.cooldown_ticks = int(cooldown_ticks)
+        self.warm_ticks = int(warm_ticks)
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        #: replicas THIS controller grew: list of {"device", "run"}
+        self.replicas: List[Dict] = []
+        self._pending: Optional[Dict] = None     # in-flight reconfig
+        self._next_index = 0
+        self._last_action_tick = -(10 ** 9)
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.rollbacks = 0
+        runtime.autoscalers.append(self)
+
+    # -- the per-tick decision -------------------------------------------------
+    def step(self):
+        """Called by ``Runtime.tick`` right after pending reconfigs settle:
+        reap the in-flight transition, then decide at most ONE action."""
+        self._reap_pending()
+        if self._pending is not None:
+            return
+        if self.rt.ticks - self._last_action_tick < self.cooldown_ticks:
+            return
+        sig = self.rt.broker.scaling_signal(self.topic).get(self.topic)
+        if sig is None or sig["replicas"] <= 0:
+            return
+        if sig["replicas"] < self.max_replicas and \
+                sig["mean_load"] >= self.high_load:
+            self._scale_up()
+        elif sig["replicas"] > max(self.min_replicas, 1) and \
+                sig["mean_load"] <= self.low_load:
+            victim = self._idle_replica()
+            if victim is not None:
+                self._scale_down(victim)
+
+    def _reap_pending(self):
+        p = self._pending
+        if p is None:
+            return
+        status = p["handle"].status
+        if status not in ("committed", "rolled_back"):
+            return
+        self._pending = None
+        self._last_action_tick = self.rt.ticks
+        if status == "committed":
+            if p["kind"] == "up":
+                self.replicas.append({"device": p["device"],
+                                      "run": p["run"]})
+                self.scale_ups += 1
+            else:
+                self.replicas = [r for r in self.replicas
+                                 if r["run"] is not p["run"]]
+                self.scale_downs += 1
+        else:
+            # rolled back (target died mid-warm, prepare failed): the
+            # placeholder run stays retired, the fleet stays as it was —
+            # the §6 lifecycle guarantees no half-replica ever serves
+            self.rollbacks += 1
+
+    # -- transitions (both are §6 reconfigs) -----------------------------------
+    def _scale_up(self):
+        idx = self._next_index
+        self._next_index += 1
+        template = self.factory(idx)
+        dev = Device(f"{self.topic.replace('/', '-')}-replica{idx}")
+        run = dev.add_pipeline(Pipeline(name=f"replica{idx}"), jit=False)
+        run.retired = True          # nothing to run until the commit
+        self.rt.add_device(dev)
+
+        def edit(plan):
+            for elem in template.elements.values():
+                plan.add(elem)
+            for link in template.links:
+                plan.link(link.src.name, link.dst.name,
+                          link.src_pad, link.dst_pad)
+        handle = self.rt.reconfigure(run, edit, warm_ticks=self.warm_ticks,
+                                     rng=self.rng)
+        self._pending = {"kind": "up", "handle": handle, "device": dev,
+                         "run": run}
+
+    def _idle_replica(self) -> Optional[Dict]:
+        """A replica of OURS that is fully drained: empty request channel,
+        empty admission queue, no live streams, no occupied decode slots —
+        removing it can lose nothing by construction."""
+        for rep in self.replicas:
+            run = rep["run"]
+            if run.retired or not rep["device"].alive:
+                continue
+            if self._replica_idle(run):
+                return rep
+        return None
+
+    def _replica_idle(self, run) -> bool:
+        for e in run.pipe.elements.values():
+            ep = getattr(e, "endpoint", None)
+            if ep is None or not hasattr(ep, "requests"):
+                continue
+            batcher = self.rt._batchers.get(ep.endpoint_id)
+            if len(ep.requests):
+                return False
+            if batcher is not None:
+                if len(batcher.admission):
+                    return False
+                if getattr(batcher, "active_streams", None) is not None \
+                        and batcher.active_streams():
+                    return False
+            if getattr(e, "is_stream_serve", False) and \
+                    hasattr(e, "active_slots") and \
+                    e.active_slots(run.state):
+                return False
+        return True
+
+    def _scale_down(self, rep: Dict):
+        run = rep["run"]
+
+        def edit(plan):
+            for name in list(run.pipe.elements):
+                plan.remove(name)
+        handle = self.rt.reconfigure(run, edit,
+                                     warm_ticks=self.warm_ticks)
+        self._pending = {"kind": "down", "handle": handle,
+                         "device": rep["device"], "run": run}
+
+    # -- introspection ---------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {"topic": self.topic,
+                "managed_replicas": len(self.replicas),
+                "scale_ups": self.scale_ups,
+                "scale_downs": self.scale_downs,
+                "rollbacks": self.rollbacks,
+                "pending": (self._pending or {}).get("kind")}

@@ -92,6 +92,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 
+from ..core.admission import (DEFAULT_TENANT, QoSConfig, merge_tenant_stats,
+                              percentile_from_hist)
 from ..core.batching import (BatchingPolicy, QueryBatcher,
                              StagedStreamingBatcher, StageQueryBatcher,
                              StreamingQueryBatcher, DEFAULT_QUERY_BATCH)
@@ -181,7 +183,8 @@ class Runtime:
                  lease_ticks: Optional[int] = None,
                  mesh=None, shard_mode: str = "auto",
                  fused_wire: bool = True,
-                 park_deadline_ticks: Optional[int] = None):
+                 park_deadline_ticks: Optional[int] = None,
+                 qos: Optional[QoSConfig] = None):
         self.broker = broker or Broker()
         if lease_ticks is not None:
             self.broker.default_lease_ticks = lease_ticks
@@ -208,6 +211,25 @@ class Runtime:
         #: fused batched wire path (module docstring; DESIGN.md §5) —
         #: False restores the PR-4 eager codec path end to end
         self.fused_wire = bool(fused_wire)
+        #: tenant-aware admission policy (DESIGN.md §9): None keeps every
+        #: batcher's AdmissionQueue in exact global-FIFO pass-through —
+        #: the pre-QoS fabric, bit for bit
+        self.qos = qos
+        #: elastic-serving controllers (runtime/autoscale.py) — stepped at
+        #: every tick boundary right after pending reconfigs; an Autoscaler
+        #: registers itself here
+        self.autoscalers: List = []
+        #: transient per-tick dispatch load (QoS join-shortest-queue): a
+        #: round's requests spread over replicas whose heartbeat load has
+        #: not seen this tick's dispatches yet; cleared every tick
+        self._load_bumps: Dict[int, int] = {}
+        #: tenant sheds the RUNTIME owns (park/deadline expiries — frames
+        #: that never reached a server's admission queue), same schema as
+        #: AdmissionQueue.stats() entries so the ledgers merge
+        self._tenant_shed: Dict[str, Dict] = {}
+        #: per-tenant ledgers of batchers a reconfiguration retired —
+        #: conservation must survive replica scale-down
+        self._tenant_archive: Dict[str, Dict] = {}
         #: query micro-batching policy (int = max batch; 0 disables —
         #: legacy synchronous round-trips inside the client's apply)
         self.batching = BatchingPolicy.of(query_batch)
@@ -274,7 +296,11 @@ class Runtime:
                         inline_step=lambda r=run: self._run_once(r),
                         mesh=self.mesh, shard_mode=self.shard_mode,
                         fused=self.fused_wire,
-                        on_orphans=self._count_orphans)
+                        on_orphans=self._count_orphans,
+                        # hop traffic is NEVER re-scheduled (each hop is one
+                        # step of a stream the stage-0 coordinator already
+                        # admitted under its tenant's budget) — qos stays off
+                        qos=None, clock=lambda: self.ticks)
                 elif staged:
                     # stage-0 coordinator: owns the admission lifecycle AND
                     # drives the per-tick hop chain to downstream stages it
@@ -286,7 +312,8 @@ class Runtime:
                         fused=self.fused_wire,
                         on_orphans=self._count_orphans,
                         tick_source=lambda: self.ticks,
-                        broker=self.broker)
+                        broker=self.broker,
+                        qos=self.qos, clock=lambda: self.ticks)
                 elif stream:
                     # streaming serve pipeline (model_serve): requests live
                     # across ticks in plan-state slots, so the endpoint gets
@@ -298,14 +325,16 @@ class Runtime:
                         mesh=self.mesh, shard_mode=self.shard_mode,
                         fused=self.fused_wire,
                         on_orphans=self._count_orphans,
-                        tick_source=lambda: self.ticks)
+                        tick_source=lambda: self.ticks,
+                        qos=self.qos, clock=lambda: self.ticks)
                 else:
                     batcher = QueryBatcher(
                         e.endpoint, run, self.batching,
                         inline_step=lambda r=run: self._run_once(r),
                         mesh=self.mesh, shard_mode=self.shard_mode,
                         fused=self.fused_wire,
-                        on_orphans=self._count_orphans)
+                        on_orphans=self._count_orphans,
+                        qos=self.qos, clock=lambda: self.ticks)
                 self._batchers[e.endpoint.endpoint_id] = batcher
                 e.connect(self.broker, inline_runner=batcher.flush)
         # (re)negotiate with broker wiring in place so mqttsink registers;
@@ -370,7 +399,12 @@ class Runtime:
             e.binding = None
         ep = getattr(e, "endpoint", None)
         if isinstance(ep, QueryServerEndpoint):
-            self._batchers.pop(ep.endpoint_id, None)
+            b = self._batchers.pop(ep.endpoint_id, None)
+            if b is not None:
+                # fold the retired batcher's per-tenant ledgers into the
+                # archive — scale-down must not forget served/shed history
+                # or the conservation law breaks at the next stats() call
+                merge_tenant_stats(self._tenant_archive, b.tenant_stats())
 
     # -- liveness: heartbeats, leases -----------------------------------------
     def _heartbeat_and_lease(self):
@@ -387,8 +421,22 @@ class Runtime:
                         continue
                     self.broker.heartbeat(reg)
                     if isinstance(e, TensorQueryServerSrc):
-                        # "server workload status": instantaneous backlog
-                        reg.load = float(len(e.endpoint.requests))
+                        # "server workload status": instantaneous backlog —
+                        # channel depth plus whatever admission already
+                        # ingested; under QoS the load signal also counts
+                        # active decode slots (streams occupying capacity
+                        # across ticks), which the autoscaler and the JSQ
+                        # dispatch read.  Pre-QoS deployments keep the
+                        # channel-only signal bit for bit (binding choices
+                        # in the failover pins depend on it).
+                        load = float(len(e.endpoint.requests))
+                        b = self._batchers.get(e.endpoint.endpoint_id)
+                        if b is not None:
+                            load += float(len(b.admission))
+                            if self.qos is not None and \
+                                    hasattr(b, "active_streams"):
+                                load += float(b.active_streams())
+                        reg.load = load
         self.broker.tick()
 
     # -- readiness ---------------------------------------------------------------
@@ -487,7 +535,7 @@ class Runtime:
         for run, pq in fresh:
             qc = pq.client
             try:
-                ep = qc._endpoint()
+                ep = self._select_endpoint(qc)
             except BrokerError:
                 # keep pq.endpoint (the dead server) — a later successful
                 # dispatch of this parked frame is still a failover hop
@@ -522,7 +570,7 @@ class Runtime:
         when no live server matches (the caller parks the frame)."""
         qc = pq.client
         try:
-            ep = qc._endpoint()
+            ep = self._select_endpoint(qc)
         except BrokerError:
             # keep pq.endpoint (the dead server) — a later successful
             # dispatch of this parked frame is still a failover hop and
@@ -541,6 +589,35 @@ class Runtime:
         elif batcher.full():
             batcher.flush()
         return True
+
+    def _select_endpoint(self, qc) -> QueryServerEndpoint:
+        """Endpoint for one dispatch.  Pre-QoS this is exactly the sticky
+        binding (``qc._endpoint()`` — the failover pins depend on its
+        exactly-once win-back semantics).  Under QoS with multiple live
+        replicas it becomes join-shortest-queue: requests spread over the
+        candidates by heartbeat load PLUS this tick's own dispatches
+        (``_load_bumps`` — heartbeat load lags by a tick, and without the
+        bump every frame of a round would pile onto the same replica).
+        Hard preferences (stage, tenant affinity, codec) still dominate;
+        the binding itself is untouched, so win-back behavior and the
+        recorded failover semantics are identical."""
+        ep = qc._endpoint()
+        if self.qos is None or qc.binding is None:
+            return ep
+        cands = [r for r in qc.binding._candidates()
+                 if getattr(r.endpoint, "alive", True)]
+        if len(cands) <= 1:
+            return ep
+        prefer = qc.binding.prefer
+
+        def key(r):
+            hard = self.broker.rank_key(r, prefer)[:3]
+            return (hard, r.load + self._load_bumps.get(r.reg_id, 0),
+                    r.reg_id)
+        best = min(cands, key=key)
+        self._load_bumps[best.reg_id] = \
+            self._load_bumps.get(best.reg_id, 0) + 1
+        return best.endpoint
 
     def _park(self, run: _PipeRun, pq: PendingQuery,
               t0: Optional[int] = None):
@@ -563,24 +640,57 @@ class Runtime:
                 self._park(run, pq, t0)
         return pending
 
+    def _park_limit(self, qc) -> Optional[int]:
+        """Ticks a frame of this client may stay parked: the tighter of the
+        runtime-wide ``park_deadline_ticks`` and the client tenant's own
+        ``deadline_ticks`` (DESIGN.md §9 — the deadline clock keeps running
+        while a request is parked: parked time IS queue time, the tenant
+        just never reached a server's queue)."""
+        limits = [self.park_deadline_ticks]
+        if self.qos is not None:
+            tenant = getattr(qc, "tenant", None) or DEFAULT_TENANT
+            limits.append(self.qos.spec(tenant).deadline_ticks)
+        limits = [m for m in limits if m is not None]
+        return min(limits) if limits else None
+
     def _expire_parked(self):
-        """Park deadline (DESIGN.md §6 satellite): a frame parked longer
-        than ``park_deadline_ticks`` stops burning a busy-skip per tick and
-        degrades EXPLICITLY — counted in ``parked_expired`` and answered
-        with a client-visible error buffer in the pipeline's sink log; the
-        pipeline is freed to start fresh frames next tick."""
-        if self.park_deadline_ticks is None or not self._parked:
+        """Park deadline (DESIGN.md §6 satellite, §9 tenant interaction): a
+        frame parked past its limit stops burning a busy-skip per tick and
+        degrades EXPLICITLY — counted in ``parked_expired`` AND on its
+        tenant's shed ledger, and answered with a client-visible error
+        buffer in the pipeline's sink log; the pipeline is freed to start
+        fresh frames next tick."""
+        if not self._parked:
             return
         keep = []
         for run, pq, t0 in self._parked:
-            if self.ticks - t0 >= self.park_deadline_ticks:
+            limit = self._park_limit(pq.client)
+            if limit is not None and self.ticks - t0 >= limit:
                 self.parked_expired += 1
-                self._expire_query(run, pq)
+                self._account_tenant_shed(pq.client, "deadline",
+                                          self.ticks - t0)
+                self._expire_query(run, pq, parked_ticks=limit)
             else:
                 keep.append((run, pq, t0))
         self._parked = keep
 
-    def _expire_query(self, run: _PipeRun, pq: PendingQuery):
+    def _account_tenant_shed(self, qc, reason: str, waited: int = 0):
+        """Book a runtime-owned shed (park/deadline expiry — the request
+        never reached a server's admission queue) on the tenant's ledger in
+        the AdmissionQueue.stats() schema: one admission, one shed, so the
+        merged conservation law stays exact."""
+        tenant = getattr(qc, "tenant", None) or DEFAULT_TENANT
+        led = self._tenant_shed.setdefault(tenant, {
+            "admitted": 0, "served": 0, "shed": 0, "queued": 0,
+            "in_flight": 0, "shed_reasons": {}, "latency_hist": {}})
+        if self.qos is not None:
+            led["priority"] = self.qos.spec(tenant).priority
+        led["admitted"] += 1
+        led["shed"] += 1
+        led["shed_reasons"][reason] = led["shed_reasons"].get(reason, 0) + 1
+
+    def _expire_query(self, run: _PipeRun, pq: PendingQuery,
+                      parked_ticks: Optional[int] = None):
         """Answer an expired park with an error frame: empty tensors, meta
         naming the operation that never found a server — logged under
         ``<client>.error`` so clients distinguish degradation from silence.
@@ -589,8 +699,23 @@ class Runtime:
         err = StreamBuffer(tensors=(), meta={
             "error": "park-deadline",
             "operation": qc.operation,
-            "parked_ticks": self.park_deadline_ticks,
+            "parked_ticks": (parked_ticks if parked_ticks is not None
+                             else self.park_deadline_ticks),
             "redispatches": pq.redispatches,
+            "tick": self.ticks})
+        run.sink_log.setdefault(f"{qc.name}.error", []).append(err)
+
+    def _shed_query(self, run: _PipeRun, pq: PendingQuery, reason: str):
+        """Answer an admission-shed request with an explicit client-visible
+        error (zero silent drops — the §9 contract): the server's admission
+        layer refused the request (rate budget, queue cap, or deadline
+        expiry) and already booked the shed on the tenant ledger; here the
+        paused frame learns WHY and is freed."""
+        qc = pq.client
+        err = StreamBuffer(tensors=(), meta={
+            "error": "shed", "reason": reason,
+            "operation": qc.operation,
+            "tenant": getattr(qc, "tenant", None) or DEFAULT_TENANT,
             "tick": self.ticks})
         run.sink_log.setdefault(f"{qc.name}.error", []).append(err)
 
@@ -627,13 +752,24 @@ class Runtime:
                 if raw is None:
                     if ep is not None and ep.alive:
                         b = self._batchers.get(ep.endpoint_id)
-                        if b is not None and b.in_flight(qc.client_id):
-                            # streaming serve: the request is mid-generation
-                            # in a plan-state slot — not an error, it needs
-                            # more decode ticks.  Leave the drain (bounding
-                            # this round) and re-enter next tick.
-                            self._inflight.append((run, pq))
-                            continue
+                        if b is not None:
+                            reason = b.admission.pop_notice(qc.client_id)
+                            if reason is not None:
+                                # admission refused the request (rate /
+                                # queue-full / deadline): the shed is on the
+                                # tenant ledger, the client gets an explicit
+                                # error — never a silent drop, never a
+                                # failover (the server is fine)
+                                self._shed_query(run, pq, reason)
+                                continue
+                            if b.in_flight(qc.client_id):
+                                # streaming serve mid-generation, or a QoS
+                                # serve budget holding the request queued —
+                                # not an error, it needs more ticks.  Leave
+                                # the drain (bounding this round) and
+                                # re-enter next tick.
+                                self._inflight.append((run, pq))
+                                continue
                         raise BrokerError(
                             f"{qc.name}: no answer from {qc.operation!r}")
                     if self._dispatch_query(pq):
@@ -756,6 +892,14 @@ class Runtime:
         # back) BEFORE any frame of this tick starts — a swap never lands
         # under a frame mid-walk
         self.reconfig.step()
+        # elastic serving (DESIGN.md §9): autoscalers read the broker's
+        # scaling signal AFTER pending reconfigs settled and request their
+        # own add/remove reconfigs — which commit through the same §6
+        # lifecycle on later ticks (autoscaling is a reconfig, not a new
+        # mechanism)
+        for scaler in list(self.autoscalers):
+            scaler.step()
+        self._load_bumps.clear()
         self._expire_parked()
         # frames parked from earlier ticks go first (a server may be back);
         # their pipelines must not start a second concurrent frame
@@ -845,4 +989,22 @@ class Runtime:
             for k, v in b.stats().items():
                 agg[k] = agg.get(k, 0) + v
         out["query_batching"] = {"max_batch": self.batching.max_batch, **agg}
+        # unified per-tenant SLO accounting (DESIGN.md §9): live batcher
+        # ledgers + retired-replica archive + runtime-owned sheds (park
+        # expiries), with exact tick-latency percentiles — and the
+        # conservation law asserted over the merged whole
+        tenants: Dict[str, Dict] = {}
+        for b in self._batchers.values():
+            merge_tenant_stats(tenants, b.tenant_stats())
+        merge_tenant_stats(tenants, self._tenant_archive)
+        merge_tenant_stats(tenants, self._tenant_shed)
+        for tid, t in tenants.items():
+            t["p50_ticks"] = percentile_from_hist(t["latency_hist"], 0.50)
+            t["p99_ticks"] = percentile_from_hist(t["latency_hist"], 0.99)
+            assert t["admitted"] == t["served"] + t["shed"] + \
+                t["queued"] + t["in_flight"], \
+                f"tenant {tid!r} leaks requests: {t}"
+        out["tenants"] = tenants
+        if self.autoscalers:
+            out["autoscale"] = [s.stats() for s in self.autoscalers]
         return out

@@ -46,7 +46,71 @@ runtime's failover fabric watches — one copy of the fault semantics.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+def lcg_stream(seed: int = 0):
+    """Deterministic uniform(0,1) stream (32-bit LCG) — the chaos harness's
+    stand-in for randomness: same seed, same traffic, every run."""
+    state = (int(seed) & 0xFFFFFFFF) or 1
+    while True:
+        state = (1664525 * state + 1013904223) & 0xFFFFFFFF
+        yield state / 2.0 ** 32
+
+
+def zipf_tenants(n: int, tenants: Sequence[str], s: float = 1.1,
+                 seed: int = 0) -> List[str]:
+    """Assign ``n`` clients to tenant ids with a Zipf(s) popularity skew —
+    tenant k's mass ∝ 1/(k+1)^s, so the first tenant dominates the way a
+    real fleet's biggest customer does.  Deterministic in ``seed``."""
+    weights = [1.0 / (k + 1) ** s for k in range(len(tenants))]
+    total = sum(weights)
+    cumulative, acc = [], 0.0
+    for w in weights:
+        acc += w / total
+        cumulative.append(acc)
+    rng = lcg_stream(seed)
+    out: List[str] = []
+    for _ in range(int(n)):
+        u = next(rng)
+        for tid, edge in zip(tenants, cumulative):
+            if u <= edge:
+                out.append(tid)
+                break
+        else:
+            out.append(tenants[-1])
+    return out
+
+
+def burst_schedule(n_ticks: int, base: int = 1, burst: int = 0,
+                   burst_at: Iterable[int] = (), width: int = 1
+                   ) -> List[int]:
+    """Arrivals-per-tick script: ``base`` sustained load with scripted
+    overload windows of ``burst`` arrivals starting at each tick in
+    ``burst_at`` (0-based, ``width`` ticks wide).  Ticks are script indices
+    — the caller maps them onto runtime ticks."""
+    sched = [int(base)] * int(n_ticks)
+    for t0 in burst_at:
+        for t in range(int(t0), min(int(n_ticks), int(t0) + int(width))):
+            sched[t] = int(burst)
+    return sched
+
+
+def tenant_arrivals(n_ticks: int, tenants: Sequence[str],
+                    schedule: Sequence[int], s: float = 1.1,
+                    seed: int = 0) -> List[List[str]]:
+    """Per-tick tenant-tagged request script: tick t injects
+    ``schedule[t]`` requests, each drawn from the Zipf tenant skew.  The
+    flattened draw order is identical to ``zipf_tenants(sum(schedule))``,
+    so per-tenant totals are reproducible whatever the tick shaping."""
+    flat = zipf_tenants(sum(int(c) for c in schedule[:n_ticks]),
+                        tenants, s=s, seed=seed)
+    out, i = [], 0
+    for t in range(int(n_ticks)):
+        c = int(schedule[t]) if t < len(schedule) else 0
+        out.append(flat[i:i + c])
+        i += c
+    return out
 
 
 class Chaos:

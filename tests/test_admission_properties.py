@@ -1,0 +1,232 @@
+"""Property tests for the QoS admission core (DESIGN.md §9).
+
+``AdmissionQueue`` is the one scheduling function behind all four
+batchers, so its algebra gets the property treatment the broker got:
+generated tenant mixes and arrival interleavings against brute-force
+oracles.  Pinned laws:
+
+* pass-through mode (``qos=None``) IS the pre-QoS global FIFO — exact
+  arrival order, nothing shed, nothing reordered (the bitwise-parity
+  contract rests on this);
+* weighted-fair scheduling preserves PER-TENANT FIFO: whatever the
+  class interleaving, one tenant's requests serve in arrival order;
+* no non-empty priority class starves — service share is bounded below
+  by its weight fraction (stride-scheduling oracle);
+* shedding is deterministic: the same scripted arrivals + tick script
+  produce the identical per-tenant ledger, run after run;
+* conservation: ``admitted == served + shed + queued + in_flight`` at
+  every observable instant.
+
+Runs under real hypothesis when installed, else the deterministic
+vendored shim (tests/_vendor).
+"""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from chaoslib import burst_schedule, tenant_arrivals, zipf_tenants
+from repro.core.admission import (AdmissionQueue, QoSConfig, TenantSpec,
+                                  percentile_from_hist)
+
+TENANTS = ["rt", "std", "batch"]
+TENANT = st.sampled_from(TENANTS)
+ARRIVALS = st.lists(TENANT, min_size=1, max_size=24)
+TAKE_SIZES = st.lists(st.integers(min_value=1, max_value=4),
+                      min_size=1, max_size=12)
+
+
+class _Raw:
+    """Stand-in wire buffer: the admission layer only reads ``.meta``."""
+
+    def __init__(self, tenant=None, client=None, tag=None):
+        self.meta = {}
+        if tenant is not None:
+            self.meta["tenant_id"] = tenant
+        if client is not None:
+            self.meta["client_id"] = client
+        self.tag = tag
+
+
+def _qos(serve_per_tick=None, **overrides):
+    """Three-class config mirroring the launch preset's shape."""
+    specs = [TenantSpec("rt", priority=0),
+             TenantSpec("std", priority=1),
+             TenantSpec("batch", priority=2)]
+    specs = [overrides.get(s.tenant_id, s) for s in specs]
+    return QoSConfig(tenants=tuple(specs), default=TenantSpec(priority=2),
+                     serve_per_tick=serve_per_tick)
+
+
+def _conservation(adm):
+    for tid, t in adm.stats().items():
+        assert t["admitted"] == (t["served"] + t["shed"] + t["queued"]
+                                 + t["in_flight"]), (tid, t)
+
+
+class TestPassthroughIsGlobalFifo:
+    @given(ARRIVALS, TAKE_SIZES)
+    @settings(max_examples=60, deadline=None)
+    def test_arrival_order_exact(self, tenants, takes):
+        adm = AdmissionQueue()  # qos=None: the load-bearing default
+        for i, tid in enumerate(tenants):
+            adm.ingest(_Raw(tenant=tid, tag=i))
+        served = []
+        for k in takes:
+            for rec in adm.take(k):
+                adm.mark_served(rec)
+                served.append(rec.raw.tag)
+        drained = [r.raw.tag for r in adm.take(None)]
+        for rec_tag in drained:
+            served.append(rec_tag)
+        # global FIFO: the concatenation of takes is the arrival prefix
+        assert served == list(range(len(served)))
+        assert len(adm) == len(tenants) - len(served)
+        _conservation(adm)
+
+    @given(ARRIVALS)
+    @settings(max_examples=30, deadline=None)
+    def test_nothing_shed_ever(self, tenants):
+        adm = AdmissionQueue()
+        for tid in tenants:
+            adm.ingest(_Raw(tenant=tid, client=7))
+        adm.expire()
+        assert adm.pop_notice(7) is None
+        assert all(t["shed"] == 0 for t in adm.stats().values())
+
+
+class TestQosPreservesPerTenantFifo:
+    @given(ARRIVALS, TAKE_SIZES)
+    @settings(max_examples=60, deadline=None)
+    def test_per_tenant_order(self, tenants, takes):
+        adm = AdmissionQueue(qos=_qos())
+        for i, tid in enumerate(tenants):
+            adm.ingest(_Raw(tenant=tid, tag=i))
+        served = {t: [] for t in TENANTS}
+        for k in takes + [len(tenants)]:
+            for rec in adm.take(k):
+                adm.mark_served(rec)
+                served[rec.tenant].append(rec.raw.tag)
+        # every admitted request was served (no deadline/rate in this mix)
+        assert sum(len(v) for v in served.values()) == len(tenants)
+        for tid, tags in served.items():
+            assert tags == sorted(tags), f"tenant {tid} reordered"
+            assert tags == [i for i, t in enumerate(tenants) if t == tid]
+        _conservation(adm)
+
+
+class TestNoStarvation:
+    @given(st.lists(st.integers(min_value=0, max_value=2),
+                    min_size=2, max_size=3),
+           st.integers(min_value=20, max_value=60))
+    @settings(max_examples=40, deadline=None)
+    def test_share_bounded_below_by_weight(self, priorities, rounds):
+        """Keep every class continuously backlogged and count service:
+        stride scheduling must give class c at least
+        ``floor(rounds * w_c / W) - 2`` dequeues (slack for the entry
+        floor) — no class starves however urgent the others."""
+        priorities = sorted(set(priorities))
+        specs = {p: TenantSpec(f"t{p}", priority=p) for p in priorities}
+        adm = AdmissionQueue(qos=QoSConfig(tenants=tuple(specs.values())))
+        total_w = sum(s.effective_weight for s in specs.values())
+        got = {p: 0 for p in priorities}
+        for _ in range(rounds):
+            for p in priorities:  # top up: every class always has work
+                adm.ingest(_Raw(tenant=f"t{p}"))
+            recs = adm.take(1)
+            assert len(recs) == 1
+            adm.mark_served(recs[0])
+            got[int(recs[0].tenant[1:])] += 1
+        for p in priorities:
+            floor_share = math.floor(
+                rounds * specs[p].effective_weight / total_w) - 2
+            assert got[p] >= floor_share, (p, got, floor_share)
+        _conservation(adm)
+
+    def test_bounded_wait_window(self):
+        """While a class stays backlogged, its gap between services never
+        exceeds ceil(W / w_c) + 1 dequeues — the stride-scheduler bound."""
+        specs = [TenantSpec("t0", priority=0), TenantSpec("t1", priority=1),
+                 TenantSpec("t2", priority=2)]
+        adm = AdmissionQueue(qos=QoSConfig(tenants=tuple(specs)))
+        total_w = sum(s.effective_weight for s in specs)
+        waits = {s.tenant_id: 0 for s in specs}
+        bound = {s.tenant_id: math.ceil(total_w / s.effective_weight) + 1
+                 for s in specs}
+        for _ in range(200):
+            for s in specs:
+                adm.ingest(_Raw(tenant=s.tenant_id))
+            rec = adm.take(1)[0]
+            adm.mark_served(rec)
+            for tid in waits:
+                waits[tid] = 0 if tid == rec.tenant else waits[tid] + 1
+                assert waits[tid] <= bound[tid], (tid, waits, bound)
+
+
+class TestDeterministicShed:
+    def _run(self, script, deadlines):
+        tick = [0]
+        adm = AdmissionQueue(
+            qos=_qos(rt=TenantSpec("rt", priority=0,
+                                   deadline_ticks=deadlines),
+                     std=TenantSpec("std", priority=1, rate=1, burst=2),
+                     batch=TenantSpec("batch", priority=2, max_queue=2)),
+            clock=lambda: tick[0])
+        for arrivals in script:
+            tick[0] += 1
+            for i, tid in enumerate(arrivals):
+                adm.ingest(_Raw(tenant=tid, client=100 + i))
+            adm.expire()
+            for rec in adm.take(1):   # starved server: 1 req/tick capacity
+                adm.mark_served(rec)
+            _conservation(adm)
+        return adm.stats()
+
+    @given(st.integers(min_value=0, max_value=9),
+           st.integers(min_value=1, max_value=4))
+    @settings(max_examples=25, deadline=None)
+    def test_same_script_same_ledger(self, seed, deadlines):
+        sched = burst_schedule(12, base=2, burst=6, burst_at=(4,), width=3)
+        script = tenant_arrivals(12, TENANTS, sched, seed=seed)
+        a, b = self._run(script, deadlines), self._run(script, deadlines)
+        assert a == b
+        # the overload burst overruns the 1/tick server: SOMETHING shed,
+        # and every shed is attributed to a reason (no silent drops)
+        shed = sum(t["shed"] for t in a.values())
+        reasons = sum(sum(t["shed_reasons"].values()) for t in a.values())
+        assert shed == reasons
+        assert shed > 0
+
+    def test_rate_shed_is_notified(self):
+        tick = [0]
+        adm = AdmissionQueue(
+            qos=_qos(std=TenantSpec("std", priority=1, rate=1, burst=1)),
+            clock=lambda: tick[0])
+        tick[0] = 1
+        assert adm.ingest(_Raw(tenant="std", client=5)) is not None
+        assert adm.ingest(_Raw(tenant="std", client=5)) is None
+        assert adm.pop_notice(5) == "rate"
+        assert adm.pop_notice(5) is None
+        st_ = adm.stats()["std"]
+        assert st_["shed_reasons"] == {"rate": 1}
+        _conservation(adm)
+
+
+class TestGenerators:
+    def test_zipf_is_deterministic_and_skewed(self):
+        a = zipf_tenants(500, TENANTS, seed=3)
+        assert a == zipf_tenants(500, TENANTS, seed=3)
+        counts = {t: a.count(t) for t in TENANTS}
+        assert counts["rt"] > counts["std"] > counts["batch"] > 0
+
+    def test_burst_schedule_shapes(self):
+        s = burst_schedule(8, base=1, burst=5, burst_at=(2,), width=3)
+        assert s == [1, 1, 5, 5, 5, 1, 1, 1]
+        script = tenant_arrivals(8, TENANTS, s, seed=0)
+        assert [len(t) for t in script] == s
+
+    def test_percentile_from_hist(self):
+        assert percentile_from_hist({}, 0.99) == 0.0
+        hist = {1: 50, 2: 49, 100: 1}
+        assert percentile_from_hist(hist, 0.5) == 1.0
+        assert percentile_from_hist(hist, 0.99) == 2.0  # rank 98.01 of 100
+        assert percentile_from_hist(hist, 1.0) == 100.0

@@ -1,0 +1,238 @@
+"""Tenant-aware admission + elastic serving, end to end (DESIGN.md §9).
+
+The §9 contract on the live fabric: tenants tagged at the client ride the
+routing meta into every batcher's shared ``AdmissionQueue``; scheduling
+changes ORDERING and ADMISSION, never answers; sheds are explicit
+client-visible errors with exact per-tenant accounting
+(``Runtime.stats()["tenants"]`` asserts the conservation law on every
+call); and the fleet elastically scales through ordinary §6
+reconfigurations — replica spin-up that dies mid-warm ROLLS BACK on the
+same ``target-dead`` path as any planned reconfig.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from chaoslib import Chaos
+from repro.core import TensorSpec, parse_launch
+from repro.core.admission import QoSConfig, TenantSpec
+from repro.core.elements import register_model
+from repro.launch.model_serve import three_tier_qos
+from repro.runtime import Device, Runtime
+from repro.runtime.autoscale import Autoscaler
+
+pytestmark = pytest.mark.qos
+
+
+@pytest.fixture(scope="module", autouse=True)
+def models():
+    def init(rng):
+        return {"w": jnp.full((12, 4), 0.5)}
+
+    def apply(p, x):
+        return x.astype(jnp.float32).reshape(1, -1) @ p["w"]
+
+    register_model("qsvc", init, apply,
+                   out_specs=(TensorSpec((1, 4), "float32"),))
+
+
+def _serve_ps(operation="op"):
+    ps = parse_launch(
+        f"tensor_query_serversrc operation={operation} name=ssrc ! "
+        f"tensor_filter model=qsvc ! tensor_query_serversink name=ssink")
+    ps.elements["ssink"].pair_with(ps.elements["ssrc"])
+    return ps
+
+
+def _server(rt, name="hub", operation="op"):
+    dev = Device(name)
+    ps = _serve_ps(operation)
+    dev.add_pipeline(ps, jit=False)
+    rt.add_device(dev)
+    return dev, ps.elements["ssrc"]
+
+
+def _client(rt, name="tv", operation="op", tenant=None):
+    dev = Device(name)
+    tprop = f" tenant={tenant}" if tenant else ""
+    pc = parse_launch(
+        f"testsrc width=2 height=2 ! tensor_converter ! "
+        f"tensor_query_client operation={operation}{tprop} name=qc ! "
+        f"appsink name=res")
+    dev.add_pipeline(pc, jit=False)
+    rt.add_device(dev)
+    return dev, pc.elements["qc"]
+
+
+class TestQosParity:
+    def test_qos_on_answers_bitwise_equal(self):
+        """Scheduling changes ordering and admission, never answers: an
+        uncontended QoS runtime produces byte-identical results to the
+        pre-QoS fabric."""
+        outs = {}
+        for key, qos in (("off", None), ("on", three_tier_qos())):
+            rt = Runtime(qos=qos)
+            _server(rt)
+            cdev, _ = _client(rt, tenant="realtime" if qos else None)
+            rt.run(4)
+            run = cdev.runs[0]
+            assert run.frames == 4
+            outs[key] = np.asarray(run.last_outputs["res"].tensor)
+        np.testing.assert_array_equal(outs["off"], outs["on"])
+
+    def test_unified_stats_schema_and_conservation(self):
+        rt = Runtime(qos=three_tier_qos())
+        _server(rt)
+        _client(rt, name="tv1", tenant="realtime")
+        _client(rt, name="tv2")          # untagged -> "default" ledger
+        rt.run(3)
+        stats = rt.stats()               # asserts conservation internally
+        tenants = stats["tenants"]
+        assert set(tenants) >= {"realtime", "default"}
+        for t in tenants.values():
+            assert set(t) >= {"priority", "admitted", "served", "shed",
+                              "queued", "in_flight", "shed_reasons",
+                              "p50_ticks", "p99_ticks"}
+        assert tenants["realtime"]["served"] == 3
+        assert tenants["realtime"]["shed"] == 0
+        # the batcher-level schema is unified across all four batchers
+        b = next(iter(rt._batchers.values()))
+        bs = b.stats()
+        assert set(bs) >= {"admitted_requests", "served_requests",
+                           "shed_requests", "queued_requests"}
+
+
+class TestPriorityScheduling:
+    def test_realtime_outranks_best_effort_under_starved_server(self):
+        """serve_per_tick=1 against two 1-req/tick tenants: stride
+        scheduling gives the priority-0 class ~4x the service of the
+        priority-2 class (weights 1 vs 1/4) and strictly lower queue
+        latency — and NOTHING is silently lost: every admitted request is
+        served or still queued/in-flight."""
+        qos = QoSConfig(tenants=(TenantSpec("rt", priority=0),
+                                 TenantSpec("be", priority=2)),
+                        serve_per_tick=1)
+        rt = Runtime(qos=qos)
+        _server(rt)
+        _client(rt, name="tv-rt", tenant="rt")
+        _client(rt, name="tv-be", tenant="be")
+        rt.run(20)
+        t = rt.stats()["tenants"]
+        assert t["rt"]["served"] > t["be"]["served"]
+        assert t["rt"]["shed"] == 0 and t["be"]["shed"] == 0
+        assert t["rt"]["p50_ticks"] <= t["be"]["p50_ticks"]
+
+    def test_rate_shed_is_explicit_client_error(self):
+        """A tenant over its token-bucket budget sheds with reason
+        ``"rate"`` — booked on the ledger AND answered to the client as an
+        explicit error frame (zero silent drops)."""
+        qos = QoSConfig(tenants=(
+            TenantSpec("metered", priority=1, rate=0.25, burst=1),))
+        rt = Runtime(qos=qos)
+        _server(rt)
+        cdev, _ = _client(rt, name="tv-m", tenant="metered")
+        rt.run(8)
+        t = rt.stats()["tenants"]["metered"]
+        assert t["shed"] > 0
+        assert t["shed_reasons"].get("rate", 0) == t["shed"]
+        errs = cdev.runs[0].sink_log.get("qc.error", [])
+        assert len(errs) == t["shed"]
+        assert all(e.meta["error"] == "shed" and e.meta["reason"] == "rate"
+                   and e.meta["tenant"] == "metered" for e in errs)
+        # conservation with sheds in the mix
+        assert t["admitted"] == t["served"] + t["shed"] + t["queued"] + \
+            t["in_flight"]
+
+
+class TestParkedDeadline:
+    def test_tenant_deadline_tightens_park_expiry(self):
+        """No server at all: frames park.  The tenant's ``deadline_ticks``
+        keeps running while parked (parked time IS queue time) and beats a
+        looser global ``park_deadline_ticks``; the expiry lands on the
+        tenant's shed ledger with reason ``"deadline"``."""
+        qos = QoSConfig(tenants=(
+            TenantSpec("gold", priority=0, deadline_ticks=3),))
+        rt = Runtime(qos=qos, park_deadline_ticks=50)
+        cdev, _ = _client(rt, name="tv-g", tenant="gold")
+        rt.run(6)
+        assert rt.parked_expired >= 1
+        t = rt.stats()["tenants"]["gold"]
+        assert t["shed_reasons"].get("deadline", 0) == rt.parked_expired
+        errs = cdev.runs[0].sink_log.get("qc.error", [])
+        assert errs and errs[0].meta["error"] == "park-deadline"
+        assert errs[0].meta["parked_ticks"] == 3   # tenant limit, not 50
+
+
+def _fleet(n_clients=6, serve_per_tick=2, **asc_kw):
+    """Overloaded single server + autoscaler managing topic query/op."""
+    qos = QoSConfig(serve_per_tick=serve_per_tick)
+    rt = Runtime(qos=qos)
+    _server(rt)
+    clients = [_client(rt, name=f"tv{i}")[0] for i in range(n_clients)]
+    asc = Autoscaler(rt, "query/op", lambda i: _serve_ps(),
+                     high_load=3.0, low_load=0.5, max_replicas=3,
+                     min_replicas=1, cooldown_ticks=3, warm_ticks=1,
+                     **asc_kw)
+    return rt, clients, asc
+
+
+class TestAutoscale:
+    def test_scale_up_rebalances_and_scale_down_drains_zero_loss(self):
+        """The full elastic loop: sustained overload (6 req/tick against a
+        2/tick-capacity replica) drives queue depth up -> the broker's
+        scaling signal crosses threshold -> replicas grow as §6 reconfigs
+        and load rebalances across them; when traffic stops, drained idle
+        replicas are REMOVED as §6 reconfigs with zero loss — every
+        admitted request was served, none shed, no error frames."""
+        rt, clients, asc = _fleet()
+        rt.run(20)
+        assert asc.scale_ups >= 1
+        sig = rt.broker.scaling_signal("query/op")["query/op"]
+        assert sig["replicas"] == 1 + len(asc.replicas) >= 2
+        # load rebalanced: the new replicas actually served requests
+        replica_served = sum(
+            sum(t["served"] for t in
+                rt._batchers[e.endpoint.endpoint_id].tenant_stats().values())
+            for rep in asc.replicas
+            for e in rep["run"].pipe.elements.values()
+            if hasattr(e, "endpoint") and hasattr(e.endpoint, "requests"))
+        assert replica_served > 0
+        served_before = sum(c.runs[0].frames for c in clients)
+        assert served_before > 0
+
+        for c in clients:               # traffic stops; fleet drains
+            c.alive = False
+        rt.run(25)
+        assert asc.scale_downs >= 1
+        t = rt.stats()["tenants"]["default"]
+        assert t["shed"] == 0 and t["queued"] == 0 and t["in_flight"] == 0
+        assert t["admitted"] == t["served"]
+        for c in clients:               # zero loss: no error frames ever
+            assert not c.runs[0].sink_log.get("qc.error")
+
+    def test_replica_killed_mid_scale_up_rolls_back(self):
+        """The §9 chaos pin: the device hosting a half-warmed replica dies
+        -> the grow reconfig rolls back on the ordinary ``target-dead``
+        path, the fleet keeps serving on the survivor, and the autoscaler
+        simply tries again after cooldown."""
+        rt, clients, asc = _fleet()
+        asc.warm_ticks = 4              # wide warm window to die inside
+        chaos = Chaos(rt)
+        killed = []
+
+        def kill_pending():
+            p = asc._pending
+            if p is not None and p["kind"] == "up" and not killed:
+                p["device"].alive = False
+                killed.append(rt.ticks)
+        for t in range(2, 12):
+            chaos.at(t, kill_pending, label=None)
+        chaos.run(30)
+        assert killed, "scale-up never started"
+        assert asc.rollbacks >= 1
+        assert all(not r["device"].alive or r["run"].retired is False
+                   for r in asc.replicas)
+        # the fleet survived: clients kept getting answers after the kill
+        assert sum(c.runs[0].frames for c in clients) > 0
+        log = [row for row in rt.reconfig.log if row[2] == "rolled_back"]
+        assert log and log[0][3] == "target-dead"
