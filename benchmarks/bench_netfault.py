@@ -1,0 +1,200 @@
+"""Adversarial network fabric: delivery-layer overhead and lossy-link
+recovery (DESIGN.md §10 — the PR-10 tentpole gates).
+
+Two measurements:
+
+* **fault-free overhead** — steady-state µs/tick of the identical serving
+  workload with the delivery layer on (delivery ids + CRC stamping +
+  guard triage on every frame) vs off (the PR-9 fabric).  GATE: <= 1.10x
+  — reliability must be nearly free when the network behaves;
+* **recovery under 5% loss** — both directions of the query fabric drop
+  5% of frames; every client must still COMPLETE a fixed request budget
+  (at-least-once retransmits + idempotent dedup), with the realized
+  goodput and retransmit volume reported.  GATE: all requests complete,
+  bitwise the fault-free answers, zero conservation leaks.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TensorSpec, parse_launch
+from repro.core.elements import register_model
+from repro.core.netfault import DeliveryPolicy, FaultFabric, FaultPolicy
+from repro.runtime import Device, Runtime
+
+from .common import emit
+
+# reuse the chaos harness's lossy-link installer so the benchmark gates on
+# exactly the fault semantics the tests pin — no second copy to drift
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+from chaoslib import lossy_endpoint  # noqa: E402
+
+GATE_OVERHEAD = 1.10
+N_CLIENTS = 4
+LOSS = FaultPolicy(seed=77, drop=0.05)
+
+
+def _ensure_model():
+    """A serving workload with real compute (48 -> 1024 -> 1024 -> 16 MLP):
+    the overhead gate divides the delivery layer's fixed per-frame cost by
+    a REALISTIC tick, not a degenerate 12-byte toy whose serve is cheaper
+    than any bookkeeping — the paper's among-device hops carry model
+    inference, so that is the denominator the 1.10x promise is about."""
+    key = "netfault_svc"
+
+    def init(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {"w1": jax.random.normal(k1, (48, 1024)) * 0.05,
+                "w2": jax.random.normal(k2, (1024, 1024)) * 0.05,
+                "w3": jax.random.normal(k3, (1024, 16)) * 0.05}
+
+    def apply(p, x):
+        h = x.astype(jnp.float32).reshape(1, -1) @ p["w1"]
+        h = jax.nn.relu(h) @ p["w2"]
+        return jax.nn.relu(h) @ p["w3"]
+
+    register_model(key, init, apply,
+                   out_specs=(TensorSpec((1, 16), "float32"),))
+    return key
+
+
+def _fleet(delivery=None):
+    rt = Runtime(query_batch=8, delivery=delivery)
+    model = _ensure_model()
+    dev = Device("hub")
+    ps = parse_launch(
+        f"tensor_query_serversrc operation=svc name=ssrc ! "
+        f"tensor_filter model={model} ! tensor_query_serversink name=ssink")
+    ps.elements["ssink"].pair_with(ps.elements["ssrc"])
+    dev.add_pipeline(ps, jit=False)
+    rt.add_device(dev)
+    clients = []
+    for i in range(N_CLIENTS):
+        cdev = Device(f"tv{i}")
+        pc = parse_launch(
+            "testsrc width=4 height=4 ! tensor_converter ! "
+            "tensor_query_client operation=svc name=qc ! appsink name=res")
+        clients.append(cdev.add_pipeline(pc, jit=False))
+        rt.add_device(cdev)
+    return rt, ps.elements["ssrc"], clients
+
+
+def _barrier(clients):
+    """Block until every client's newest answer is materialized.  The
+    answers chain through the server's serve state, so this drains ALL
+    device work queued behind jax's async dispatch — without it the timed
+    window only charges dispatch, and whichever config ran second would
+    absorb the other's background compute."""
+    for c in clients:
+        log = c.sink_log.get("res", ())
+        if log:
+            np.asarray(log[-1].tensor)
+
+
+def bench_fault_free_overhead(rounds: int = 20, chunk: int = 10):
+    """Interleave timed chunks of the two configs — ALTERNATING which goes
+    first each round — and keep the per-config minimum (the heartbeat-
+    penalty bench discipline, hardened): the delta is the delivery layer,
+    not allocator drift, async-dispatch bleed, or which config happened to
+    share its rounds with a noisy neighbor."""
+    rts = {}
+    for label, delivery in (("delivery_on", DeliveryPolicy()),
+                            ("delivery_off", None)):
+        rt, _, clients = _fleet(delivery)
+        rt.run(10)                           # warm compile caches
+        _barrier(clients)
+        rts[label] = (rt, clients)
+    best = {label: float("inf") for label in rts}
+    order = list(rts.items())
+    for r in range(rounds):
+        for label, (rt, clients) in (order if r % 2 == 0 else order[::-1]):
+            t0 = time.perf_counter()
+            rt.run(chunk)
+            _barrier(clients)
+            best[label] = min(best[label],
+                              (time.perf_counter() - t0) / chunk * 1e6)
+    for label, us in best.items():
+        emit(f"netfault/{label}", us, f"us_per_tick={us:.1f}")
+    d = rts["delivery_on"][0].stats()["delivery"]
+    overhead = best["delivery_on"] / best["delivery_off"]
+    ok = overhead <= GATE_OVERHEAD
+    emit("netfault/fault_free_overhead", 0.0,
+         f"delivery_on_vs_off={overhead:.3f}x;gate<={GATE_OVERHEAD}x;"
+         f"pass={ok}",
+         overhead=round(overhead, 4), gate=GATE_OVERHEAD,
+         gate_pass=bool(ok), retransmits=d["retransmits"])
+    if d["retransmits"] or d["deduped"] or d["rejected_corrupt"]:
+        raise AssertionError(
+            f"clean links must never trip the delivery layer: {d}")
+    if not ok:
+        raise AssertionError(
+            f"fault-free delivery overhead {overhead:.3f}x "
+            f"exceeds {GATE_OVERHEAD}x")
+
+
+def bench_recovery_under_loss(budget: int = 20, max_ticks: int = 80):
+    """5% drop on the request link and every answer link.  Completion is
+    the gate: every client accumulates its full answer budget, each answer
+    bitwise the fault-free run's, and the per-link message ledgers
+    balance exactly."""
+    rt0, _, ref_clients = _fleet(DeliveryPolicy())
+    rt0.run(budget)
+    ref = [[np.asarray(b.tensor) for b in c.sink_log["res"]]
+           for c in ref_clients]
+
+    rt, ssrc, clients = _fleet(DeliveryPolicy())
+    fabric = FaultFabric()
+    rt.fabric = fabric
+    lossy_endpoint(fabric, ssrc.endpoint, LOSS, LOSS, name="svc")
+    ticks = 0
+    t0 = time.perf_counter()
+    while ticks < max_ticks and any(
+            len(c.sink_log.get("res", ())) < budget for c in clients):
+        rt.tick()
+        ticks += 1
+    us_per_tick = (time.perf_counter() - t0) / max(ticks, 1) * 1e6
+
+    done = [len(c.sink_log.get("res", ())) for c in clients]
+    complete = all(n >= budget for n in done)
+    mismatches = 0
+    for rc, c in zip(ref, clients):
+        got = [np.asarray(b.tensor) for b in c.sink_log.get("res", ())]
+        for x, y in zip(rc, got):
+            if not np.array_equal(x, y):
+                mismatches += 1
+    fabric.assert_conservation()             # zero silent loss, exactly
+    d = rt.stats()["delivery"]
+    dropped = sum(link.dropped_fault for link in fabric.links.values())
+    emit("netfault/lossy_recovery", us_per_tick,
+         f"ticks_to_complete={ticks};budget={budget}x{N_CLIENTS};"
+         f"dropped={dropped};retransmits={d['retransmits']};"
+         f"replays={d['replayed']};complete={complete};"
+         f"bitwise={mismatches == 0}",
+         ticks_to_complete=ticks, budget=budget, dropped=dropped,
+         retransmits=d["retransmits"], replayed=d["replayed"],
+         deduped=d["deduped"], complete=bool(complete),
+         gate_pass=bool(complete and mismatches == 0))
+    if not complete:
+        raise AssertionError(
+            f"5% loss: clients finished {done}, wanted {budget} each "
+            f"within {max_ticks} ticks")
+    if mismatches:
+        raise AssertionError(
+            f"{mismatches} answers diverged from the fault-free run")
+    if not dropped or not d["retransmits"]:
+        raise AssertionError("the loss schedule never bit — vacuous gate")
+
+
+def run():
+    bench_fault_free_overhead()
+    bench_recovery_under_loss()
+
+
+if __name__ == "__main__":
+    run()

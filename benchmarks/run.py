@@ -26,6 +26,9 @@
 #   qos serving     -> bench_qos            (1k-client Zipf+burst load: overload
 #                                            p99 isolation <=1.5x gate, zero
 #                                            silent drops, goodput >=0.9x gate)
+#   netfault        -> bench_netfault       (delivery layer <=1.10x fault-free
+#                                            gate; 5% loss: complete + bitwise +
+#                                            conservation gate)
 import json
 import os
 import platform
@@ -33,15 +36,16 @@ import sys
 import time
 import traceback
 
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR9.json")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR10.json")
 
 
 def main() -> None:
     from . import (bench_compression, bench_failover, bench_kernels,
-                   bench_model_serving, bench_pp_serving, bench_pubsub,
-                   bench_qos, bench_query, bench_query_batching,
-                   bench_reconfig, bench_roofline, bench_sharded_serving,
-                   bench_step_overhead, bench_sync, bench_wire_path)
+                   bench_model_serving, bench_netfault, bench_pp_serving,
+                   bench_pubsub, bench_qos, bench_query,
+                   bench_query_batching, bench_reconfig, bench_roofline,
+                   bench_sharded_serving, bench_step_overhead, bench_sync,
+                   bench_wire_path)
     from .common import ROWS, reset_rows
 
     reset_rows()
@@ -55,6 +59,7 @@ def main() -> None:
         ("model_serving", bench_model_serving.run),
         ("pp_serving", bench_pp_serving.run),
         ("qos", bench_qos.run),
+        ("netfault", bench_netfault.run),
         ("sharded_serving", bench_sharded_serving.run),
         ("failover", bench_failover.run),
         ("reconfig", bench_reconfig.run),
@@ -80,7 +85,7 @@ def main() -> None:
     import jax
     payload = {
         "schema": 1,
-        "pr": 9,
+        "pr": 10,
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "suites_failed": failed,

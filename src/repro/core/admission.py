@@ -400,10 +400,13 @@ class AdmissionQueue:
             self._notices.setdefault(rec.client_id,
                                      deque()).append(reason)
 
-    def shed_queued(self, reason: str, notify: bool = False) -> int:
+    def shed_queued(self, reason: str, notify: bool = False,
+                    on_shed=None) -> int:
         """Shed EVERYTHING still queued (endpoint death: requests already
         ingested are invisible to the down event's channel purge and must
-        reach the ledger explicitly)."""
+        reach the ledger explicitly).  ``on_shed(rec)``, when given, fires
+        per record — the delivery guard uses it to forget a shed request's
+        dedup id so its failover re-dispatch is admittable (§10)."""
         total = 0
         for ts in self._tenants.values():
             while ts.queue:
@@ -414,6 +417,8 @@ class AdmissionQueue:
                 if notify and rec.client_id is not None:
                     self._notices.setdefault(rec.client_id,
                                              deque()).append(reason)
+                if on_shed is not None:
+                    on_shed(rec)
                 total += 1
         return total
 

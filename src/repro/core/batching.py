@@ -90,6 +90,7 @@ from .admission import AdmissionQueue, QoSConfig
 from .buffers import StreamBuffer, structure_key, unstack_buffers
 from .query import QueryServerEndpoint
 from . import compression as comp
+from . import netfault
 
 __all__ = ["BatchingPolicy", "QueryBatcher", "StreamingQueryBatcher",
            "StagedStreamingBatcher", "StageQueryBatcher",
@@ -100,8 +101,10 @@ DEFAULT_QUERY_BATCH = 8
 #: buffer meta keys that carry per-request routing, not payload semantics —
 #: hoisted out before stacking and re-attached to the routed answer
 #: (``tenant_id`` rides along so admission can book the request before the
-#: hoist and the answer still names its tenant)
-_ROUTING_KEYS = ("client_id", "codec", "tenant_id")
+#: hoist and the answer still names its tenant; ``dseq`` — the §10 delivery
+#: id — varies per frame, so leaving it in meta would split every stacking
+#: group down to singletons)
+_ROUTING_KEYS = ("client_id", "codec", "tenant_id", "dseq")
 
 
 @dataclass(frozen=True)
@@ -165,6 +168,11 @@ class QueryBatcher:
         #: to its orphan ledger; the paused frames re-dispatch from their
         #: PendingQuery records exactly like channel-purged orphans)
         self.on_orphans = on_orphans
+        #: delivery guard (DESIGN.md §10), installed by the runtime when a
+        #: DeliveryPolicy is on: every request this batcher ingests passes
+        #: CRC + dedup triage first.  None (the default) is the pre-§10
+        #: wire, bit for bit.
+        self.guard = None
         #: codec-fused serving (module docstring); False = PR-4 eager codec
         self.fused = fused
         #: jax Mesh to lay batches out on (None = single-device serving)
@@ -246,7 +254,7 @@ class QueryBatcher:
             # re-ingest every round: serving can land new requests on the
             # channel (inline chains), exactly as the old per-iteration
             # channel check saw them
-            adm.ingest_channel(self.endpoint.requests)
+            self._ingest()
             adm.expire()
             if not len(adm):
                 break
@@ -301,6 +309,47 @@ class QueryBatcher:
             self.flushes += 1
         return served
 
+    def _ingest(self):
+        """Drain the endpoint channel into admission — through the delivery
+        guard when the runtime installed one (DESIGN.md §10).  Guard triage:
+        corrupt frames are rejected and counted (never silently consumed),
+        duplicates dedup against the LRU window and re-fire the committed
+        answer's bitwise replay (a retransmit means the client never saw
+        it), and accepted frames shed their wire checksum — it
+        authenticated THIS hop; the answer gets its own — before admitting
+        exactly as the guard-less path would."""
+        ch = self.endpoint.requests
+        if self.guard is None:
+            self.admission.ingest_channel(ch)
+            return
+        while True:
+            raw = ch.pop()
+            if raw is None:
+                return
+            verdict = self.guard.check(raw, ch)
+            if verdict == "ok":
+                meta = raw.meta or {}
+                if "crc" in meta:
+                    # the wire frame owns its meta dict (every send path
+                    # builds it fresh), so shed the checksum in place —
+                    # a with_ copy per accepted request is pure overhead
+                    del meta["crc"]
+                self.admission.ingest(raw)
+            elif verdict == "dup":
+                self.guard.replay_answer((raw.meta or {}).get("dseq"))
+            # "corrupt": counted by the guard; the frame dies here
+
+    def _forget_delivery(self, rec):
+        """Evict a shed-unserved request's delivery id from the dedup
+        window: its failover re-dispatch reuses the id (idempotence key),
+        and a window that still remembers it would dedup the retry into a
+        void — a silent loss the §10 conservation law forbids."""
+        if self.guard is None or rec is None:
+            return
+        raw = getattr(rec, "raw", None)
+        if raw is not None:
+            self.guard.forget((raw.meta or {}).get("dseq"))
+
     def _orphan(self, n: int):
         """Account requests a dying flush popped but never served."""
         if n <= 0:
@@ -316,12 +365,13 @@ class QueryBatcher:
         the client gets a real answer elsewhere) + the orphan ledger."""
         for rec in recs:
             self.admission.mark_shed(rec, "server-died", notify=False)
+            self._forget_delivery(rec)
         self._orphan(len(recs))
 
     def _shed_dead(self) -> int:
         """Endpoint is dead: everything still queued in admission sheds
         (``server-died``) and joins the orphan ledger for re-dispatch."""
-        n = self.admission.shed_queued("server-died")
+        n = self.admission.shed_queued("server-died", on_shed=self._forget_delivery)
         self._orphan(n)
         return n
 
@@ -754,7 +804,7 @@ class StreamingQueryBatcher(QueryBatcher):
                     self._waiting.append(rec)
         adm = self.admission
         while self.endpoint.alive:
-            adm.ingest_channel(self.endpoint.requests)
+            self._ingest()
             adm.expire()
             recs = adm.take(1)
             if not recs:
@@ -885,6 +935,7 @@ class StreamingQueryBatcher(QueryBatcher):
                 if arec is not None:
                     self.admission.mark_shed(arec, "server-died",
                                              notify=False)
+                    self._forget_delivery(arec)
                 total += 1
         self._orphan(total)
         self._slots.clear()
@@ -964,7 +1015,7 @@ class StageQueryBatcher(QueryBatcher):
         adm = self.admission
         served = 0
         while self.endpoint.alive:
-            adm.ingest_channel(self.endpoint.requests)
+            self._ingest()
             recs = adm.take(1)
             if not recs:
                 break
@@ -987,8 +1038,12 @@ class StageQueryBatcher(QueryBatcher):
             self.prefills += 1
         elif kind == "replay":
             sid = int(clean.meta["sid"])
-            out, cache = elem.host_stage_decode(params, clean.tensors[0],
-                                                self._parked[sid])
+            # the hop's delivery id (if any) keys the stage element's
+            # idempotence memo: even a duplicate that slipped past an
+            # evicted dedup window cannot double-advance this cache
+            out, cache = elem.host_stage_decode_idempotent(
+                params, clean.tensors[0], self._parked[sid],
+                hop_id=routing.get("dseq"))
             self._parked[sid] = cache
             self.replay_steps += 1
         else:
@@ -1098,6 +1153,15 @@ class StagedStreamingBatcher(StreamingQueryBatcher):
         self.hops_failed: Dict[int, int] = {}
         self.stage_replays: Dict[int, int] = {}
         self.stage_replay_steps: Dict[int, int] = {}
+        #: delivery policy for the among-device hops (DESIGN.md §10),
+        #: installed by the runtime alongside the batcher guards.  None
+        #: keeps the pre-§10 single-shot hop, bit for bit.
+        self.delivery: Optional[netfault.DeliveryPolicy] = None
+        self._hop_seq = 0
+        self.hop_retransmits = 0
+        self.hop_dups = 0
+        self.hop_corrupt = 0
+        self.hop_push_drops = 0
 
     @property
     def n_stages(self) -> int:
@@ -1172,21 +1236,65 @@ class StagedStreamingBatcher(StreamingQueryBatcher):
     def _raw_hop(self, ep, tensors, meta) -> Optional[StreamBuffer]:
         """One request → inline serve → answer round-trip against a
         RESOLVED stage endpoint (the tensor_query_client mechanism, with
-        the coordinator as the client)."""
+        the coordinator as the client).
+
+        With a delivery policy the hop becomes at-least-once: the request
+        carries a delivery id + CRC, and up to ``hop_retries`` synchronous
+        retransmits reuse the SAME id — the stage guard dedups replays and
+        re-fires the committed answer bitwise, so a duplicated or replayed
+        hop can never double-advance a slot (§10).  Hops can't wait a
+        tick (the chain holds the slot), hence the inline loop rather
+        than the scheduler's backoff clock."""
         buf = StreamBuffer(tensors=tuple(tensors), meta=dict(meta))
         payload, nbytes = comp.encode(buf, "none")
-        payload = payload.with_(meta={**payload.meta,
-                                      "client_id": self._hop_cid,
-                                      "codec": "none"})
-        ep.requests.push(payload, nbytes)
-        runner = ep.spec.get("inline_runner")
-        if runner is None or not ep.alive:
-            return None
-        runner()
-        raw = ep.client_channel(self._hop_cid).pop()
-        if raw is None:
-            return None
-        return comp.decode(raw, "none")
+        hmeta = {**payload.meta, "client_id": self._hop_cid,
+                 "codec": "none"}
+        delivery = self.delivery
+        dseq = None
+        crc = None
+        if delivery is not None:
+            self._hop_seq += 1
+            dseq = (self._hop_cid, self._hop_seq)
+            hmeta["dseq"] = dseq
+            hmeta["crc"] = crc = netfault.checksum(payload)
+        payload = payload.with_(meta=hmeta)
+        if crc is not None:
+            netfault.memoize_crc(payload, crc)
+        attempts = max(1, delivery.hop_retries) if delivery is not None \
+            else 1
+        for attempt in range(attempts):
+            if attempt:
+                self.hop_retransmits += 1
+            if not ep.requests.push(payload, nbytes):
+                self.hop_push_drops += 1
+            runner = ep.spec.get("inline_runner")
+            if runner is None or not ep.alive:
+                return None
+            runner()
+            ch = ep.client_channel(self._hop_cid)
+            while True:
+                raw = ch.pop()
+                if raw is None:
+                    break
+                rmeta = raw.meta or {}
+                if delivery is not None:
+                    crc = rmeta.get("crc")
+                    if crc is not None and \
+                            netfault.checksum(raw) != int(crc):
+                        self.hop_corrupt += 1
+                        netfault.note(ch, "rejected_corrupt")
+                        continue
+                    rds = rmeta.get("dseq")
+                    if rds is not None and rds != dseq:
+                        # late duplicate of an EARLIER hop's answer —
+                        # that hop already consumed one copy; this one
+                        # dedups here, never advances anything
+                        self.hop_dups += 1
+                        netfault.note(ch, "deduped")
+                        continue
+                    netfault.note(ch, "accepted")
+                return comp.decode(raw, "none")
+        return None
 
     def _hop(self, k: int, tensors, meta) -> Optional[StreamBuffer]:
         ep = self._ensure_stage(k)
@@ -1219,7 +1327,7 @@ class StagedStreamingBatcher(StreamingQueryBatcher):
                 finished += self._resume_chain(rec)
         adm = self.admission
         while self.endpoint.alive:
-            adm.ingest_channel(self.endpoint.requests)
+            self._ingest()
             adm.expire()
             recs = adm.take(1)
             if not recs:
@@ -1394,6 +1502,10 @@ class StagedStreamingBatcher(StreamingQueryBatcher):
             "hops_failed": sum(self.hops_failed.values()),
             "stage_replays": sum(self.stage_replays.values()),
             "stage_replay_steps": sum(self.stage_replay_steps.values()),
+            "hop_retransmits": self.hop_retransmits,
+            "hop_dups": self.hop_dups,
+            "hop_corrupt": self.hop_corrupt,
+            "hop_push_drops": self.hop_push_drops,
         })
         return base
 

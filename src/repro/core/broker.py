@@ -80,6 +80,13 @@ class Registration:
     #: why the registration went down ("crash" | "lease-expired"), for
     #: diagnostics and the chaos harness's assertions
     down_reason: Optional[str] = None
+    #: lease-expiry is SUSPICION, not declared death (DESIGN.md §10): under
+    #: a lossy control plane a silent server may be alive behind a
+    #: partition.  A suspected registration fails over exactly like a
+    #: crashed one (clients must not wait on a maybe-corpse), but it stays
+    #: eligible for :meth:`Broker.heal` when its beats resume — a crash
+    #: notice clears the flag (that death is declared, not inferred).
+    suspected: bool = False
 
     def describe(self) -> str:
         extra = ", ".join(f"{k}={v}" for k, v in self.specs.items())
@@ -108,6 +115,10 @@ class Broker:
         #: lease clock (advanced by :meth:`tick`)
         self.now = 0
         self.expiries = 0
+        # suspicion ledger (DESIGN.md §10): lease expiries that were only
+        # ever suspicion, and how many of those healed when beats resumed
+        self.suspicions = 0
+        self.heals = 0
         # data-plane accounting for RELAY transport benchmarking
         self.relay_bytes = 0
         self.relay_msgs = 0
@@ -134,7 +145,11 @@ class Broker:
 
     def mark_down(self, reg: Registration, reason: str = "crash"):
         """Liveness loss without clean unregister (device crash / lease
-        expiry).  Idempotent: a registration already down fires nothing."""
+        expiry).  Idempotent: a registration already down fires nothing.
+        A crash is DECLARED death — it clears any standing suspicion (the
+        device really is gone; there is nothing left to heal)."""
+        if reason == "crash":
+            reg.suspected = False
         if not reg.alive:
             return
         reg.alive = False
@@ -155,6 +170,7 @@ class Broker:
         ``reg_id`` — the device came back and reclaims the rank it held
         before the outage.  Fires ``"register"``; idempotent on live regs."""
         self._regs.setdefault(reg.reg_id, reg)
+        reg.suspected = False
         if reg.alive:
             return reg
         reg.alive = True
@@ -162,6 +178,20 @@ class Broker:
         reg.last_beat = self.now
         self._notify("register", reg)
         return reg
+
+    def heal(self, reg: Registration) -> bool:
+        """Clear a FALSE suspicion: the device's heartbeats resumed, so the
+        lease expiry was delay/partition, not death (DESIGN.md §10).  The
+        win-back is the ordinary revive ``"register"`` event — in-flight
+        work already re-dispatched to survivors is NOT recalled (it was
+        at-least-once the moment it retransmitted; receiver dedup makes the
+        double-serve harmless).  Returns False unless the registration is
+        down under standing suspicion."""
+        if reg.alive or not reg.suspected:
+            return False
+        self.heals += 1
+        self.revive(reg)
+        return True
 
     def tick(self, n: int = 1):
         """Advance the lease clock; expire registrations whose lease lapsed.
@@ -173,6 +203,11 @@ class Broker:
                 if reg.alive and reg.lease_ticks is not None and \
                         self.now - reg.last_beat > reg.lease_ticks:
                     self.expiries += 1
+                    # silence is evidence, not proof: the expiry fails the
+                    # registration over like a crash, but as SUSPICION —
+                    # resumed beats can heal it (§10)
+                    reg.suspected = True
+                    self.suspicions += 1
                     self.mark_down(reg, reason="lease-expired")
 
     # -- discovery -------------------------------------------------------------

@@ -149,9 +149,10 @@ class StreamBuffer:
         return self.tensors[0]
 
     def with_(self, **kw) -> "StreamBuffer":
-        d = dict(tensors=self.tensors, pts=self.pts, headers=self.headers,
-                 meta=dict(self.meta))
+        d = dict(tensors=self.tensors, pts=self.pts, headers=self.headers)
         d.update(kw)
+        if "meta" not in kw:
+            d["meta"] = dict(self.meta)
         return StreamBuffer(**d)
 
     def nbytes(self) -> int:

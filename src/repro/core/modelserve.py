@@ -473,6 +473,28 @@ class ModelServeStageElement(ModelServeElement):
         out, cache = self._stage_decode_jit(params, jnp.asarray(x), cache)
         return np.asarray(out), cache
 
+    def host_stage_decode_idempotent(self, params, x, cache, hop_id=None):
+        """``host_stage_decode`` with at-most-once effect per ``hop_id``
+        (the hop's §10 delivery id): a replayed hop whose id was already
+        served returns the memoized (out, cache) instead of advancing the
+        parked cache a second time.  This is the stage element's backstop
+        BENEATH the batcher's dedup window — a duplicate that slips past
+        an evicted window still cannot double-step generation state.
+        ``hop_id=None`` (delivery off) is plain ``host_stage_decode``."""
+        if hop_id is None:
+            return self.host_stage_decode(params, x, cache)
+        if getattr(self, "_hop_memo", None) is None:
+            from collections import OrderedDict
+            self._hop_memo = OrderedDict()
+        hit = self._hop_memo.get(hop_id)
+        if hit is not None:
+            return hit
+        out = self.host_stage_decode(params, x, cache)
+        self._hop_memo[hop_id] = out
+        while len(self._hop_memo) > 64:
+            self._hop_memo.popitem(last=False)
+        return out
+
 
 @register_element("token_prompt_src")
 class TokenPromptSrc(Element):

@@ -767,7 +767,8 @@ class PendingQuery:
 
     __slots__ = ("plan", "params", "inputs", "ctx", "vals", "outputs",
                  "op_idx", "request", "endpoint", "redispatches",
-                 "state", "next_state", "live", "is_compiled")
+                 "state", "next_state", "live", "is_compiled",
+                 "dseq", "retries", "next_retry")
 
     def __init__(self, plan: ExecutionPlan, params: dict, inputs: dict,
                  ctx: PipelineContext, vals: List[Any],
@@ -785,6 +786,13 @@ class PendingQuery:
         self.endpoint = None
         #: failover hops this frame survived (scheduler-owned)
         self.redispatches = 0
+        #: delivery id + retransmit clock (scheduler-owned, DESIGN.md §10).
+        #: ``dseq`` is minted ONCE per logical request and reused verbatim
+        #: by every retransmit and failover re-dispatch — idempotence by
+        #: dedup rests on the id surviving the frame's whole lifetime.
+        self.dseq = None
+        self.retries = 0
+        self.next_retry = 0
         # compiled-mode fields (PendingQuery.compiled)
         self.state = None
         self.next_state = None

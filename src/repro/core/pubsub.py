@@ -73,21 +73,29 @@ class Channel:
         ch.q.extend(survivors)
         return ch
 
-    def _enqueue(self, buf: StreamBuffer):
-        if len(self.q) >= self.capacity:
+    def _enqueue(self, buf: StreamBuffer) -> bool:
+        """Returns False iff the append displaced a queued frame."""
+        dropped = len(self.q) >= self.capacity
+        if dropped:
             self.drops += 1
             self.q.popleft()  # leaky=2 downstream semantics: drop oldest
         self.q.append(buf)
+        return not dropped
 
     def push(self, buf: StreamBuffer, nbytes: Optional[int] = None) -> bool:
+        """Returns False iff enqueueing displaced a frame anywhere (locally
+        or on any consumer queue).  The displaced frame is booked on the
+        displacing queue's ``drops``; returning the fact lets the CALLER
+        fold the loss into its own ledger too (serversink answer drops,
+        stage-hop push failures) so the conservation laws can't leak."""
         self.bytes_sent += buf.nbytes() if nbytes is None else nbytes
         self.msgs_sent += 1
         if self.consumers:
+            ok = True
             for c in self.consumers:
-                c._enqueue(buf)
-            return True
-        self._enqueue(buf)
-        return True
+                ok = c._enqueue(buf) and ok
+            return ok
+        return self._enqueue(buf)
 
     def pop(self) -> Optional[StreamBuffer]:
         return self.q.popleft() if self.q else None

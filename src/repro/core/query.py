@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import enum
 import itertools
+from collections import OrderedDict
 from typing import Dict, Optional
 
 from .broker import Broker, BrokerError
@@ -29,6 +30,7 @@ from .element import Element, register_element
 from .formats import Caps
 from .pubsub import Channel
 from . import compression as comp
+from . import netfault
 
 __all__ = ["QueryTransport", "QueryServerEndpoint", "TensorQueryClient",
            "TensorQueryServerSrc", "TensorQueryServerSink"]
@@ -96,6 +98,24 @@ class TensorQueryClient(Element):
         self.binding = None
         self._direct: Optional[QueryServerEndpoint] = None
         self.require = {k[8:]: v for k, v in props.items() if k.startswith("require_")}
+        #: delivery layer (DESIGN.md §10).  None — the default, and every
+        #: pre-delivery pipeline — stamps nothing and checks nothing: the
+        #: wire is bitwise the old wire.  A DeliveryPolicy turns on
+        #: (sender_id, seq) delivery ids + CRC32 checksums on requests and
+        #: dedup/corruption guarding on received answers.
+        self.delivery: Optional[netfault.DeliveryPolicy] = None
+        self._dseq = 0
+        self._ans_seen = OrderedDict()  # bounded LRU of consumed answer ids
+        self._ans_stash: Dict = {}      # early answers for other in-flight ids
+        self.answer_dups = 0
+        self.answer_corrupt = 0
+        self.push_drops = 0
+
+    def next_dseq(self):
+        """Mint the delivery id for ONE logical request.  Retransmits must
+        reuse the id — that is what makes them idempotent downstream."""
+        self._dseq += 1
+        return (self.client_id, self._dseq)
 
     def _routing_meta(self) -> Dict:
         meta = {"client_id": self.client_id, "codec": self.codec}
@@ -141,45 +161,124 @@ class TensorQueryClient(Element):
 
     # -- host-level request/answer (runtime scheduler & tests) ------------------
     def send_query(self, buf: StreamBuffer,
-                   ep: Optional[QueryServerEndpoint] = None
-                   ) -> QueryServerEndpoint:
+                   ep: Optional[QueryServerEndpoint] = None,
+                   dseq=None) -> QueryServerEndpoint:
         """Encode + tag + push one request.  ``ep`` pins the destination (the
         scheduler resolves once and records where the request actually went,
         so in-flight failover re-dispatches exactly the orphaned buffers);
-        by default the best-ranked live endpoint is resolved here."""
+        by default the best-ranked live endpoint is resolved here.  With
+        delivery on, ``dseq`` pins the delivery id — a retransmit passes the
+        original id so the server's dedup window recognizes it."""
         if ep is None:
             ep = self._endpoint()
         payload, nbytes = comp.encode(buf, self.codec)
-        payload = payload.with_(meta={**payload.meta, **self._routing_meta()})
+        meta = {**payload.meta, **self._routing_meta()}
+        crc = None
+        if self.delivery is not None:
+            meta["dseq"] = dseq if dseq is not None else self.next_dseq()
+            meta["crc"] = crc = netfault.checksum(payload)
+        payload = payload.with_(meta=meta)
+        if crc is not None:
+            netfault.memoize_crc(payload, crc)
         if self.transport == QueryTransport.MQTT_HYBRID and self.broker is not None:
             # control message (topic resolution ping) — tiny, broker-borne
             self.broker.relay_msgs += 0  # control msgs are not data-relayed
-        ep.requests.push(payload, nbytes)
+        if not ep.requests.push(payload, nbytes):
+            self.push_drops += 1
         return ep
 
     def send_query_wire(self, payload: StreamBuffer, nbytes: int,
-                        ep: QueryServerEndpoint) -> QueryServerEndpoint:
+                        ep: QueryServerEndpoint,
+                        dseq=None) -> QueryServerEndpoint:
         """Push an ALREADY-ENCODED request (fused wire path: the scheduler
         encodes a whole dispatch round in one batched codec call, then
         pushes per client).  Tags routing meta exactly like
         :meth:`send_query`; the payload/nbytes must be what ``encode``
         would have produced — bitwise, pinned by the codec batch tests."""
-        payload = payload.with_(meta={**payload.meta,
-                                      **self._routing_meta()})
-        ep.requests.push(payload, nbytes)
+        meta = {**payload.meta, **self._routing_meta()}
+        crc = None
+        if self.delivery is not None:
+            meta["dseq"] = dseq if dseq is not None else self.next_dseq()
+            meta["crc"] = crc = netfault.checksum(payload)
+        payload = payload.with_(meta=meta)
+        if crc is not None:
+            netfault.memoize_crc(payload, crc)
+        if not ep.requests.push(payload, nbytes):
+            self.push_drops += 1
         return ep
 
-    def recv_answer_raw(self, ep: QueryServerEndpoint
+    def _guard_answer(self, raw: StreamBuffer, channel,
+                      want) -> Optional[StreamBuffer]:
+        """Delivery-side answer triage: reject corrupt (counted), dedup by
+        id (counted), stash early answers for OTHER in-flight requests of
+        this client, and strip the delivery meta off an accepted answer so
+        everything downstream sees exactly the pre-delivery buffer."""
+        meta = raw.meta or {}
+        crc = meta.get("crc")
+        if crc is not None and netfault.checksum(raw) != int(crc):
+            self.answer_corrupt += 1
+            netfault.note(channel, "rejected_corrupt")
+            return None
+        dseq = meta.get("dseq")
+        if dseq is None:
+            netfault.note(channel, "accepted")
+            return raw
+        if dseq in self._ans_seen:
+            self._ans_seen.move_to_end(dseq)
+            self.answer_dups += 1
+            netfault.note(channel, "deduped")
+            return None
+        if want is not None and dseq != want:
+            # a different request's answer arrived first (reordering): hold
+            # it for that request's own recv instead of consuming it here
+            self._ans_stash[dseq] = raw
+            netfault.note(channel, "accepted")
+            return None
+        self._ans_seen[dseq] = True
+        while len(self._ans_seen) > self.delivery.window:
+            self._ans_seen.popitem(last=False)
+        netfault.note(channel, "accepted")
+        stripped = dict(meta)
+        stripped.pop("dseq", None)
+        stripped.pop("crc", None)
+        return raw.with_(meta=stripped)
+
+    def recv_answer_raw(self, ep: QueryServerEndpoint, want=None
                         ) -> Optional[StreamBuffer]:
         """Pop this client's WIRE-form answer without decoding (the
-        scheduler's drain batch-decodes a whole round in one dispatch)."""
-        return ep.client_channel(self.client_id).pop()
+        scheduler's drain batch-decodes a whole round in one dispatch).
+        With delivery on, ``want`` names the expected delivery id: corrupt
+        and duplicate answers are discarded (counted, never consumed as
+        data), answers for other in-flight ids are stashed for their own
+        recv, and the accepted answer comes back stripped of delivery
+        meta — bitwise what a delivery-off server would have answered."""
+        ch = ep.client_channel(self.client_id)
+        if self.delivery is None:
+            return ch.pop()
+        if want is not None and want in self._ans_stash:
+            return self._accept_stashed(self._ans_stash.pop(want), want)
+        while True:
+            raw = ch.pop()
+            if raw is None:
+                return None
+            out = self._guard_answer(raw, ch, want)
+            if out is not None:
+                return out
 
-    def recv_answer_from(self, ep: QueryServerEndpoint
+    def _accept_stashed(self, raw: StreamBuffer, dseq) -> StreamBuffer:
+        self._ans_seen[dseq] = True
+        while len(self._ans_seen) > self.delivery.window:
+            self._ans_seen.popitem(last=False)
+        stripped = dict(raw.meta or {})
+        stripped.pop("dseq", None)
+        stripped.pop("crc", None)
+        return raw.with_(meta=stripped)
+
+    def recv_answer_from(self, ep: QueryServerEndpoint, want=None
                          ) -> Optional[StreamBuffer]:
         """Pop this client's answer from a specific endpoint — the scheduler
         reads from the endpoint it dispatched to, never a rebound one."""
-        raw = self.recv_answer_raw(ep)
+        raw = self.recv_answer_raw(ep, want=want)
         if raw is None:
             return None
         return comp.decode(raw, self.codec)
@@ -190,16 +289,31 @@ class TensorQueryClient(Element):
     def apply(self, params, inputs, ctx=None):
         """Synchronous round-trip (compiled-pipeline semantics): the runtime
         scheduler interleaves server pipelines between send/recv; in a single
-        process we call the server's pending step inline."""
-        self.send_query(inputs[0])
-        srv = self._endpoint()
-        runner = srv.spec.get("inline_runner")
-        if runner is not None:
-            runner()
-        out = self.recv_answer()
-        if out is None:
-            raise BrokerError(f"{self.name}: no answer from {self.operation!r}")
-        return [out]
+        process we call the server's pending step inline.  With delivery on
+        the round-trip retransmits (same delivery id — idempotent by the
+        server's dedup window) up to ``hop_retries`` times before giving
+        up, so a lossy link can't starve the inline path."""
+        if self.delivery is None:
+            self.send_query(inputs[0])
+            srv = self._endpoint()
+            runner = srv.spec.get("inline_runner")
+            if runner is not None:
+                runner()
+            out = self.recv_answer()
+            if out is None:
+                raise BrokerError(f"{self.name}: no answer from {self.operation!r}")
+            return [out]
+        dseq = self.next_dseq()
+        for _ in range(max(1, self.delivery.hop_retries)):
+            srv = self.send_query(inputs[0], dseq=dseq)
+            runner = srv.spec.get("inline_runner")
+            if runner is not None:
+                runner()
+            out = self.recv_answer_from(srv, want=dseq)
+            if out is not None:
+                return [out]
+        raise BrokerError(f"{self.name}: no answer from {self.operation!r} "
+                          f"after {self.delivery.hop_retries} retransmits")
 
 
 @register_element("tensor_query_serversrc")
@@ -240,8 +354,14 @@ class TensorQueryServerSrc(Element):
         decoded = comp.decode(buf, codec)
         # decode strips the wire-form codec claim; the client's codec
         # survives as ROUTING meta so the paired serversink knows how to
-        # encode the answer back (mirrors the batcher's routing hoist)
-        return [decoded.with_(meta={**decoded.meta, "codec": codec})]
+        # encode the answer back (mirrors the batcher's routing hoist).
+        # The request's wire checksum does NOT survive: it authenticated
+        # the inbound frame only — were it to ride the pipeline into the
+        # answer meta, the client would verify the answer against the
+        # REQUEST's crc and reject it (the sink stamps answers afresh)
+        meta = {**decoded.meta, "codec": codec}
+        meta.pop("crc", None)
+        return [decoded.with_(meta=meta)]
 
 
 @register_element("tensor_query_serversink")
@@ -258,10 +378,37 @@ class TensorQueryServerSink(Element):
                  **props):
         super().__init__(name=name, **props)
         self.serversrc = serversrc
+        #: delivery guard shared with the owning batcher (DESIGN.md §10):
+        #: when set, outgoing answers get a fresh CRC over their encoded
+        #: form and are recorded in the replay cache, so a retransmitted
+        #: request whose original answer was lost is answered BITWISE again
+        #: without re-serving.  None = pre-delivery wire, untouched.
+        self.guard = None
+        #: answers displaced off a full client channel (satellite of the
+        #: PR-3 conservation law: a push rejection is the sink's loss to
+        #: book, not a silent vanishing act)
+        self.answer_drops = 0
 
     def pair_with(self, serversrc: TensorQueryServerSrc):
         self.serversrc = serversrc
         return self
+
+    def _ship(self, payload: StreamBuffer, nbytes: int, client_id: int):
+        """One answer push: fresh CRC + replay-cache entry when the
+        delivery layer is on, overflow folded into the sink ledger."""
+        ep = self.serversrc.endpoint
+        if self.guard is not None:
+            dseq = payload.meta.get("dseq")
+            if dseq is not None:
+                crc = netfault.checksum(payload)
+                payload = payload.with_(
+                    meta={**payload.meta, "crc": crc})
+                netfault.memoize_crc(payload, crc)
+                self.guard.record_answer(
+                    dseq, lambda ep=ep, cid=client_id, p=payload, n=nbytes:
+                        ep.client_channel(cid).push(p, n))
+        if not ep.client_channel(client_id).push(payload, nbytes):
+            self.answer_drops += 1
 
     def apply(self, params, inputs, ctx=None):
         buf = inputs[0]
@@ -270,7 +417,7 @@ class TensorQueryServerSink(Element):
             raise BrokerError(f"{self.name}: answer buffer lost its client_id tag")
         codec = buf.meta.get("codec", "none")
         payload, nbytes = comp.encode(buf, codec)
-        self.serversrc.endpoint.client_channel(client_id).push(payload, nbytes)
+        self._ship(payload, nbytes, client_id)
         return []
 
     def push_wire(self, payload: StreamBuffer, nbytes: int, client_id: int):
@@ -278,4 +425,4 @@ class TensorQueryServerSink(Element):
         re-encoded inside the serving jit; the batcher routes the wire
         frames with meta restored host-side).  Same channel push and byte
         accounting as :meth:`apply`."""
-        self.serversrc.endpoint.client_channel(client_id).push(payload, nbytes)
+        self._ship(payload, nbytes, client_id)

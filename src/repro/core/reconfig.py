@@ -46,6 +46,7 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 
+from . import netfault
 from .pipeline import Link, Pipeline
 from .pubsub import MqttSink, MqttSrc
 from .query import (QueryServerEndpoint, TensorQueryClient,
@@ -73,6 +74,7 @@ def teardown_endpoint(ep: QueryServerEndpoint) -> int:
     also leak one orphaned Channel per client per epoch, forever)."""
     ep.alive = False
     orphans = len(ep.requests)
+    _book_purges(ep)
     ep.requests.q.clear()
     ep.responses.clear()
     return orphans
@@ -83,8 +85,19 @@ def activate_endpoint(ep: QueryServerEndpoint):
     whatever a previous life left queued is invalid — returning clients get
     new response channels on their first routed answer."""
     ep.alive = True
+    _book_purges(ep)
     ep.requests.q.clear()
     ep.responses.clear()
+
+
+def _book_purges(ep: QueryServerEndpoint):
+    """Book frames a teardown/activation is about to clear on their fault
+    links (no-op outside chaos runs): a purged frame left the network
+    accounted — the §10 per-link conservation law must see it as ``purged``,
+    not linger forever as ``in_flight``."""
+    netfault.note_purged(ep.requests, len(ep.requests.q))
+    for ch in ep.responses.values():
+        netfault.note_purged(ch, len(ch.q))
 
 
 # ---------------------------------------------------------------------------

@@ -11,16 +11,32 @@ plain python process can act as a remote sensor ("edge_sensor"), a display
 Wire format (little-endian):
   magic 'NNSE' | version u16 | num_tensors u16 | pts i64
   per tensor: dtype_tag u16 | ndim u16 | dims u32[ndim] | nbytes u64 | raw
+  v2 appends: crc32 u32 over every preceding byte
+
+Version 2 adds the CRC32 trailer (the lossy-transport fault model,
+DESIGN.md §10): structure checks catch protocol damage, the checksum
+catches BIT damage — a flipped payload bit parses fine and silently
+becomes a corrupt inference three devices later.  v1 frames (no trailer)
+still parse, so pre-§10 senders interoperate.
 """
 from __future__ import annotations
 
 import struct
+import zlib
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 _MAGIC = b"NNSE"
-_VERSION = 1
+_VERSION = 2
+
+
+class ChecksumError(ValueError):
+    """The frame parsed structurally but failed its CRC32 trailer — bit
+    corruption in transit, distinct from protocol damage (bad magic,
+    truncation, unknown dtype): the sender spoke the format fine and a
+    retransmit of the same frame may well succeed."""
+
 
 _DTYPES = ("int8", "uint8", "int16", "uint16", "int32", "uint32",
            "int64", "uint64", "float16", "float32", "float64")
@@ -38,16 +54,20 @@ def pack_buffer(tensors: Sequence[np.ndarray], pts: int = 0) -> bytes:
         raw = t.tobytes()
         parts.append(struct.pack("<Q", len(raw)))
         parts.append(raw)
-    return b"".join(parts)
+    body = b"".join(parts)
+    return body + struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
 
 
 def unpack_buffer(data: bytes) -> Tuple[List[np.ndarray], int]:
     """Strict inverse of :func:`pack_buffer`.
 
     A sensor on a flaky link can hand us anything: wrong protocol, a future
-    wire version, or a frame cut mid-payload.  Every such case raises
-    ``ValueError`` — silently misparsing tensor bytes is how a corrupt frame
-    becomes a corrupt *inference* three devices later.
+    wire version, a frame cut mid-payload, or a bit flipped in transit.
+    Every such case raises ``ValueError`` — silently misparsing tensor
+    bytes is how a corrupt frame becomes a corrupt *inference* three
+    devices later.  Structural checks run FIRST and keep their specific
+    errors; the checksum is verified LAST, so a frame that parses but
+    fails its CRC raises the distinct :class:`ChecksumError`.
     """
     data = bytes(data)
     if len(data) < 16:
@@ -55,22 +75,30 @@ def unpack_buffer(data: bytes) -> Tuple[List[np.ndarray], int]:
     if data[:4] != _MAGIC:
         raise ValueError("bad magic")
     ver, n, pts = struct.unpack_from("<HHq", data, 4)
-    if ver != _VERSION:
+    if ver == _VERSION:
+        if len(data) < 20:
+            raise ValueError(f"truncated checksum trailer: {len(data)} "
+                             f"bytes, need 20")
+        (crc,) = struct.unpack_from("<I", data, len(data) - 4)
+        body = data[:-4]
+    elif ver == 1:
+        crc, body = None, data      # pre-§10 sender: no trailer
+    else:
         raise ValueError(f"unsupported wire version {ver} (speaks {_VERSION})")
     off = 16
     tensors = []
     for i in range(n):
-        if off + 4 > len(data):
+        if off + 4 > len(body):
             raise ValueError(f"tensor {i}: truncated tensor header")
-        tag, ndim = struct.unpack_from("<HH", data, off)
+        tag, ndim = struct.unpack_from("<HH", body, off)
         off += 4
         if tag >= len(_DTYPES):
             raise ValueError(f"tensor {i}: unknown dtype tag {tag}")
-        if off + 4 * ndim + 8 > len(data):
+        if off + 4 * ndim + 8 > len(body):
             raise ValueError(f"tensor {i}: truncated dims/size fields")
-        shape = struct.unpack_from(f"<{ndim}I", data, off) if ndim else ()
+        shape = struct.unpack_from(f"<{ndim}I", body, off) if ndim else ()
         off += 4 * ndim
-        (nbytes,) = struct.unpack_from("<Q", data, off)
+        (nbytes,) = struct.unpack_from("<Q", body, off)
         off += 8
         dt = np.dtype(_DTYPES[tag])
         expected = int(np.prod(shape, dtype=np.uint64)) * dt.itemsize
@@ -78,15 +106,19 @@ def unpack_buffer(data: bytes) -> Tuple[List[np.ndarray], int]:
             raise ValueError(
                 f"tensor {i}: payload size {nbytes} != shape {tuple(shape)} "
                 f"x {dt.name} = {expected}")
-        if off + nbytes > len(data):
+        if off + nbytes > len(body):
             raise ValueError(f"tensor {i}: truncated payload "
-                             f"({len(data) - off} of {nbytes} bytes)")
-        arr = np.frombuffer(data, dtype=dt, count=nbytes // dt.itemsize,
+                             f"({len(body) - off} of {nbytes} bytes)")
+        arr = np.frombuffer(body, dtype=dt, count=nbytes // dt.itemsize,
                             offset=off).reshape(shape)
         tensors.append(arr.copy())
         off += nbytes
-    if off != len(data):
-        raise ValueError(f"{len(data) - off} trailing bytes after {n} tensors")
+    if off != len(body):
+        raise ValueError(f"{len(body) - off} trailing bytes after {n} tensors")
+    if crc is not None and (zlib.crc32(body) & 0xFFFFFFFF) != crc:
+        raise ChecksumError(
+            f"checksum mismatch: trailer {crc:#010x} != computed "
+            f"{zlib.crc32(body) & 0xFFFFFFFF:#010x}")
     return tensors, pts
 
 

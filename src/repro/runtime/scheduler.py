@@ -101,6 +101,7 @@ from ..core.broker import Broker, BrokerError
 from ..core.buffers import (StreamBuffer, stack_buffers, structure_key,
                             unstack_buffers)
 from ..core.element import Element
+from ..core import netfault
 from ..core.pipeline import Pipeline
 from ..core.plan import PendingQuery
 from ..core.pubsub import Channel, MqttSink, MqttSrc
@@ -184,7 +185,8 @@ class Runtime:
                  mesh=None, shard_mode: str = "auto",
                  fused_wire: bool = True,
                  park_deadline_ticks: Optional[int] = None,
-                 qos: Optional[QoSConfig] = None):
+                 qos: Optional[QoSConfig] = None,
+                 delivery: Optional["netfault.DeliveryPolicy"] = None):
         self.broker = broker or Broker()
         if lease_ticks is not None:
             self.broker.default_lease_ticks = lease_ticks
@@ -215,6 +217,24 @@ class Runtime:
         #: batcher's AdmissionQueue in exact global-FIFO pass-through —
         #: the pre-QoS fabric, bit for bit
         self.qos = qos
+        #: at-least-once delivery layer (DESIGN.md §10): None keeps the
+        #: reliable-transport fabric bit for bit — no delivery ids, no
+        #: checksums, no retransmits.  Set, every query/hop/answer frame
+        #: carries a (sender, seq) id + CRC, receivers dedup and reject
+        #: corruption, and unanswered requests retransmit on the backoff
+        #: clock below.
+        self.delivery = delivery
+        #: FaultFabric (core/netfault.py) a chaos scenario installed —
+        #: stepped at the top of every tick so delayed/reordered frames
+        #: release on the scheduler's clock.  None outside chaos runs.
+        self.fabric = None
+        #: devices whose CONTROL plane is partitioned (heartbeats lost in
+        #: the network, data plane per the installed fault links) — the §10
+        #: suspicion scenario: their leases expire; their beats resume and
+        #: heal the suspicion when removed from this set
+        self._control_blocked: set = set()
+        #: §10 retransmit ledger (client-side timeouts that re-shipped)
+        self.retransmits = 0
         #: elastic-serving controllers (runtime/autoscale.py) — stepped at
         #: every tick boundary right after pending reconfigs; an Autoscaler
         #: registers itself here
@@ -277,6 +297,8 @@ class Runtime:
         for e in run.pipe.elements.values():
             if isinstance(e, (MqttSink, MqttSrc, TensorQueryClient)) and e.broker is None:
                 e.connect(self.broker)
+            if isinstance(e, TensorQueryClient) and self.delivery is not None:
+                e.delivery = self.delivery
             if isinstance(e, TensorQueryServerSrc) and e.registration is None:
                 # the endpoint's inline_runner is the batcher's flush: edge
                 # clients and direct pipe.step round-trips keep their
@@ -335,6 +357,18 @@ class Runtime:
                         fused=self.fused_wire,
                         on_orphans=self._count_orphans,
                         qos=self.qos, clock=lambda: self.ticks)
+                if self.delivery is not None:
+                    # one guard per endpoint, shared by the batcher (request
+                    # triage) and its paired serversink (answer CRC + replay
+                    # cache) — §10's receiver half
+                    guard = netfault.DeliveryGuard(self.delivery)
+                    batcher.guard = guard
+                    if isinstance(batcher, StagedStreamingBatcher):
+                        batcher.delivery = self.delivery
+                    for el in run.pipe.elements.values():
+                        if getattr(el, "is_query_sink", False) and \
+                                getattr(el, "serversrc", None) is e:
+                            el.guard = guard
                 self._batchers[e.endpoint.endpoint_id] = batcher
                 e.connect(self.broker, inline_runner=batcher.flush)
         # (re)negotiate with broker wiring in place so mqttsink registers;
@@ -414,11 +448,23 @@ class Runtime:
         for dev in self.devices:
             if not dev.alive:
                 continue
+            if dev in self._control_blocked:
+                # control partition (§10): the device is up and serving but
+                # its heartbeats are lost in the network — the broker sees
+                # silence, the lease lapses, and the expiry lands as
+                # SUSPICION rather than declared death
+                continue
             for run in dev.runs:
                 for e in run.pipe.elements.values():
                     reg = getattr(e, "registration", None)
                     if reg is None:
                         continue
+                    if not reg.alive and reg.suspected:
+                        # the suspected device is beating again: the expiry
+                        # was delay/partition, not death.  Win-back is the
+                        # ordinary revive "register" event; requests already
+                        # re-dispatched stay wherever dedup settles them.
+                        self.broker.heal(reg)
                     self.broker.heartbeat(reg)
                     if isinstance(e, TensorQueryServerSrc):
                         # "server workload status": instantaneous backlog —
@@ -545,7 +591,12 @@ class Runtime:
         encs = self._encode_requests([(qc, pq.request)
                                       for _, pq, qc, _ in ready])
         for (run, pq, qc, ep), (enc, nbytes) in zip(ready, encs):
-            qc.send_query_wire(enc, nbytes, ep)
+            if self.delivery is not None:
+                if pq.dseq is None:
+                    pq.dseq = qc.next_dseq()
+                pq.next_retry = self.ticks + \
+                    self.delivery.retry_in(pq.retries)
+            qc.send_query_wire(enc, nbytes, ep, dseq=pq.dseq)
             if pq.endpoint is not None and pq.endpoint is not ep:
                 self.redispatches += 1
                 pq.redispatches += 1
@@ -576,7 +627,14 @@ class Runtime:
             # dispatch of this parked frame is still a failover hop and
             # must count in `redispatches`
             return False
-        qc.send_query(pq.request, ep=ep)
+        if self.delivery is not None:
+            # the delivery id is minted ONCE per logical request: parks,
+            # failover re-dispatches, and timeout retransmits all reuse it,
+            # so receiver dedup makes every duplicate path harmless (§10)
+            if pq.dseq is None:
+                pq.dseq = qc.next_dseq()
+            pq.next_retry = self.ticks + self.delivery.retry_in(pq.retries)
+        qc.send_query(pq.request, ep=ep, dseq=pq.dseq)
         if pq.endpoint is not None and pq.endpoint is not ep:
             self.redispatches += 1
             pq.redispatches += 1
@@ -748,7 +806,8 @@ class Runtime:
             for run, pq in pending:
                 qc = pq.client
                 ep = pq.endpoint
-                raw = qc.recv_answer_raw(ep) if ep is not None else None
+                raw = qc.recv_answer_raw(ep, want=pq.dseq) \
+                    if ep is not None else None
                 if raw is None:
                     if ep is not None and ep.alive:
                         b = self._batchers.get(ep.endpoint_id)
@@ -770,6 +829,24 @@ class Runtime:
                                 # re-enter next tick.
                                 self._inflight.append((run, pq))
                                 continue
+                        if self.delivery is not None and \
+                                pq.dseq is not None:
+                            # lossy transport (§10): a missing answer from a
+                            # LIVE server means the request or its answer
+                            # is lost/delayed in the network — retransmit on
+                            # the backoff clock (same delivery id: the
+                            # server dedups and replays a committed answer
+                            # bitwise), or wait out the current timeout
+                            if self.ticks >= pq.next_retry:
+                                pq.retries += 1
+                                self.retransmits += 1
+                                if self._dispatch_query(pq):
+                                    nxt.append((run, pq))
+                                else:
+                                    self._park(run, pq)
+                            else:
+                                self._inflight.append((run, pq))
+                            continue
                         raise BrokerError(
                             f"{qc.name}: no answer from {qc.operation!r}")
                     if self._dispatch_query(pq):
@@ -884,6 +961,11 @@ class Runtime:
 
     def tick(self):
         self.ticks += 1
+        if self.fabric is not None:
+            # advance the fault clock first: frames the network held
+            # (delay/reorder) from earlier ticks land before anything runs,
+            # and this tick's scripted partitions take effect
+            self.fabric.step(self.ticks)
         self._ntp_ref.advance(self.tick_ns)
         for dev in self.devices:
             dev.clock.advance(self.tick_ns)
@@ -970,7 +1052,9 @@ class Runtime:
                             "drops": drops}
         out["broker"] = {"relay_msgs": self.broker.relay_msgs,
                          "relay_bytes": self.broker.relay_bytes,
-                         "lease_expiries": self.broker.expiries}
+                         "lease_expiries": self.broker.expiries,
+                         "suspicions": self.broker.suspicions,
+                         "heals": self.broker.heals}
         out["failover"] = {"redispatches": self.redispatches,
                            "parked_total": self.parked_total,
                            "parked_now": len(self._parked),
@@ -1005,6 +1089,27 @@ class Runtime:
                 t["queued"] + t["in_flight"], \
                 f"tenant {tid!r} leaks requests: {t}"
         out["tenants"] = tenants
+        if self.delivery is not None:
+            d = {"retransmits": self.retransmits, "accepted": 0,
+                 "deduped": 0, "rejected_corrupt": 0, "replayed": 0,
+                 "answer_drops": 0, "client_answer_dups": 0,
+                 "client_answer_corrupt": 0, "client_push_drops": 0}
+            for b in self._batchers.values():
+                if b.guard is not None:
+                    for k, v in b.guard.stats().items():
+                        d[k] += v
+            for dev in self.devices:
+                for run in dev.runs:
+                    for e in run.pipe.elements.values():
+                        if isinstance(e, TensorQueryClient):
+                            d["client_answer_dups"] += e.answer_dups
+                            d["client_answer_corrupt"] += e.answer_corrupt
+                            d["client_push_drops"] += e.push_drops
+                        elif getattr(e, "is_query_sink", False):
+                            d["answer_drops"] += e.answer_drops
+            out["delivery"] = d
+        if self.fabric is not None:
+            out["netfault"] = self.fabric.stats()
         if self.autoscalers:
             out["autoscale"] = [s.stats() for s in self.autoscalers]
         return out

@@ -113,6 +113,35 @@ def tenant_arrivals(n_ticks: int, tenants: Sequence[str],
     return out
 
 
+def lossy_endpoint(fabric, ep, req_policy, ans_policy=None, name=""):
+    """Make a query endpoint's links lossy (DESIGN.md §10): install a fault
+    link on its request channel and — because the endpoint mints per-client
+    answer channels lazily on the first routed answer — shadow
+    ``ep.client_channel`` so every answer channel, including ones born
+    after a teardown/activation purge, gets its own link.  Answer links
+    derive per-client seeds from ``ans_policy.seed``, so the fault schedule
+    is deterministic per (endpoint, client) regardless of arrival order.
+    Returns the list of installed links (grows as clients appear)."""
+    import dataclasses
+    links = [fabric.install(ep.requests, req_policy,
+                            name=f"{name}/req" if name else "req")]
+    if ans_policy is not None:
+        orig = ep.client_channel
+
+        def client_channel(cid):
+            ch = orig(cid)
+            if id(ch) not in fabric.links:
+                pol = dataclasses.replace(
+                    ans_policy,
+                    seed=(ans_policy.seed + 7919 * int(cid)) & 0xFFFFFFFF)
+                links.append(fabric.install(
+                    ch, pol, name=f"{name}/ans{cid}" if name
+                    else f"ans{cid}"))
+            return ch
+        ep.client_channel = client_channel
+    return links
+
+
 class Chaos:
     def __init__(self, runtime):
         self.rt = runtime
@@ -249,6 +278,19 @@ class Chaos:
             if rx not in pub_channel.consumers:
                 pub_channel.consumers.append(rx)
         return self.at(tick, fn, "restore channel")
+
+    def partition_control(self, tick0: int, tick1: int, device) -> "Chaos":
+        """Partition a device's CONTROL plane for ticks [tick0, tick1): its
+        heartbeats are lost in the network while the device itself keeps
+        running — the broker's lease lapses into SUSPICION (not declared
+        death; DESIGN.md §10), clients fail over, and when the partition
+        heals the resumed beats win the registration back without
+        double-serving anything the dedup layer already settled."""
+        self.at(tick0, lambda: self.rt._control_blocked.add(device),
+                f"control-partition {device.name}")
+        self.at(tick1, lambda: self.rt._control_blocked.discard(device),
+                f"heal control-partition {device.name}")
+        return self
 
     def expire_lease(self, tick: int, device, reg) -> "Chaos":
         """Force the registration's lease to lapse on the very next broker

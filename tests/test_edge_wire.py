@@ -10,7 +10,8 @@ import struct
 import numpy as np
 import pytest
 
-from repro.edge.edge import _DTYPES, _MAGIC, pack_buffer, unpack_buffer
+from repro.edge.edge import (ChecksumError, _DTYPES, _MAGIC, pack_buffer,
+                             unpack_buffer)
 
 
 def _arr(dtype: str, shape=(3, 4)) -> np.ndarray:
@@ -103,3 +104,65 @@ class TestRejection:
         wire = pack_buffer([_arr("uint16", (4,))])
         got, _ = unpack_buffer(memoryview(wire))
         assert got[0].dtype == np.uint16
+
+
+class TestChecksum:
+    """v2 CRC32 trailer (DESIGN.md §10): bit damage that parses structurally
+    must still be rejected — with an error DISTINCT from protocol damage,
+    because a retransmit of a corrupt frame can succeed where a retransmit
+    of a protocol mismatch cannot."""
+
+    def test_payload_bit_flip_rejected(self):
+        wire = bytearray(pack_buffer([_arr("float32", (4, 4))]))
+        # flip one bit deep inside the tensor payload: every structure
+        # field (header, dims, sizes) is untouched, so only the CRC can
+        # tell this frame from the real one
+        wire[40] ^= 0x10
+        with pytest.raises(ChecksumError, match="checksum mismatch"):
+            unpack_buffer(bytes(wire))
+
+    def test_every_payload_bit_position_rejected(self):
+        """Byte-exhaustive over the tensor payload region: no single-byte
+        corruption may slip through the trailer."""
+        body = pack_buffer([_arr("uint8", (8,))])
+        payload_start = 16 + 2 + 2 + 4 + 8   # header + tag/ndim + dims + nbytes
+        for pos in range(payload_start, payload_start + 8):
+            wire = bytearray(body)
+            wire[pos] ^= 0x01
+            with pytest.raises(ChecksumError):
+                unpack_buffer(bytes(wire))
+
+    def test_trailer_corruption_rejected(self):
+        wire = bytearray(pack_buffer([_arr("int32", (2,))]))
+        wire[-1] ^= 0x80
+        with pytest.raises(ChecksumError):
+            unpack_buffer(bytes(wire))
+
+    def test_checksum_error_is_value_error(self):
+        # callers of the PR-2 rejection matrix catch ValueError; the new
+        # failure mode must land inside that net, just distinguishable
+        assert issubclass(ChecksumError, ValueError)
+
+    def test_structural_damage_keeps_specific_error(self):
+        # a corrupt STRUCTURE field fails its own check, not the checksum:
+        # the parse-then-verify order keeps the PR-2 matrix's diagnostics
+        wire = bytearray(pack_buffer([_arr("uint8", (2,))]))
+        struct.pack_into("<H", wire, 16, len(_DTYPES))
+        with pytest.raises(ValueError, match="dtype tag"):
+            unpack_buffer(bytes(wire))
+
+    def test_v1_frame_without_trailer_accepted(self):
+        # pre-§10 sender: same format minus the trailer, version 1
+        arr = _arr("int16", (3,))
+        wire = bytearray(pack_buffer([arr])[:-4])
+        struct.pack_into("<H", wire, 4, 1)
+        got, _ = unpack_buffer(bytes(wire))
+        np.testing.assert_array_equal(got[0], arr)
+
+    def test_empty_frame_has_valid_trailer(self):
+        got, pts = unpack_buffer(pack_buffer([], pts=5))
+        assert got == [] and pts == 5
+        wire = bytearray(pack_buffer([], pts=5))
+        wire[8] ^= 0x01     # pts byte: structure-silent, checksum-loud
+        with pytest.raises(ChecksumError):
+            unpack_buffer(bytes(wire))

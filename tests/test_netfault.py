@@ -1,0 +1,652 @@
+"""Adversarial network fabric (DESIGN.md §10).
+
+Every earlier chaos scenario kills *devices*; the transport between them
+stayed perfect.  This file makes the transport itself the adversary: a
+:class:`FaultFabric` installs deterministic lossy links (drop, duplicate,
+corrupt, reorder, delay, scripted partition windows) on the query fabric,
+and the delivery layer (``Runtime(delivery=DeliveryPolicy())``) must turn
+at-least-once + idempotent dedup into EFFECTIVELY-ONCE.  The acceptance
+contract pinned here:
+
+* under every scripted fault class, at batch 1, 4 and 8, every answer a
+  client receives is bitwise what the fault-free twin produces — plain
+  queries AND mid-generation §7/§8 streams, where a duplicated or
+  replayed decode hop must not double-advance a slot;
+* zero silent loss: the per-link message conservation law ``sent ==
+  accepted + dropped_by_fault + rejected_corrupt + deduped + in_flight +
+  overflow_drops + purged`` balances exactly, every scenario;
+* lease expiry under a CONTROL-plane partition is *suspicion*, not
+  declared death: clients fail over, and the heal wins the registration
+  back without double-serving anything the dedup window already settled.
+
+The 200-tick lossy soak (5% drop, 2% dup, delay jitter, one 20-tick
+partition + heal, streams live) rides ``-m soak``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from chaoslib import lossy_endpoint
+from repro.core import Channel, StreamBuffer, TensorSpec, parse_launch
+from repro.core.batching import StagedStreamingBatcher
+from repro.core.elements import register_model
+from repro.core.netfault import (DeliveryGuard, DeliveryPolicy, FaultFabric,
+                                 FaultPolicy, checksum, stamp)
+from repro.launch import model_serve as ms
+from repro.runtime import Device, Runtime
+
+pytestmark = pytest.mark.netchaos
+
+DELIVERY = DeliveryPolicy()
+
+
+# -- harness ------------------------------------------------------------------
+
+@pytest.fixture(scope="module", autouse=True)
+def models():
+    def init(rng):
+        return {"w": jax.random.normal(rng, (12, 4)) * 0.3}
+
+    def apply(p, x):
+        return x.astype(jnp.float32).reshape(1, -1) @ p["w"]
+
+    register_model("nfsvc", init, apply,
+                   out_specs=(TensorSpec((1, 4), "float32"),))
+
+
+def _server(rt, name="hub", operation="op"):
+    """All servers init from PRNGKey(0): any survivor computes bitwise-
+    identical answers — the fault-free twin."""
+    dev = Device(name)
+    ps = parse_launch(
+        f"tensor_query_serversrc operation={operation} name=ssrc ! "
+        f"tensor_filter model=nfsvc ! tensor_query_serversink name=ssink")
+    ps.elements["ssink"].pair_with(ps.elements["ssrc"])
+    run = dev.add_pipeline(ps, jit=False)
+    rt.add_device(dev)
+    return dev, run, ps.elements["ssrc"]
+
+
+def _clients(rt, n, operation="op", prefix="tv"):
+    runs = []
+    for i in range(n):
+        dev = Device(f"{prefix}{i}")
+        pc = parse_launch(
+            f"testsrc width=2 height=2 ! tensor_converter ! "
+            f"tensor_query_client operation={operation} codec=none "
+            f"name=qc ! appsink name=res")
+        runs.append(dev.add_pipeline(pc, jit=False))
+        rt.add_device(dev)
+    return runs
+
+
+def _responses(run):
+    return [np.asarray(b.tensor) for b in run.sink_log.get("res", [])]
+
+
+def _assert_prefix_bitwise(ref_runs, got_runs, min_answers):
+    """Faults stretch the answer cadence (retransmits wait out backoff),
+    never the answer VALUES or their per-client order: each lossy run's
+    answer stream must be an exact bitwise prefix of the fault-free
+    twin's, and long enough to prove liveness."""
+    for ref, got in zip(ref_runs, got_runs):
+        a, b = _responses(ref), _responses(got)
+        assert len(b) >= min_answers, \
+            f"liveness: only {len(b)} answers, wanted >= {min_answers}"
+        assert len(b) <= len(a)
+        for j, (x, y) in enumerate(zip(a, b)):
+            np.testing.assert_array_equal(x, y, err_msg=f"answer {j}")
+
+
+def _buf(i, meta=None):
+    return StreamBuffer(tensors=(np.full((4,), i, np.float32),),
+                        pts=np.int64(i), meta=dict(meta or {}))
+
+
+# -- the fault model, unit level ----------------------------------------------
+
+class TestFaultLink:
+    def test_same_seed_same_schedule(self):
+        """Determinism is the whole game: two links with the same policy
+        must inject the identical fault schedule — counters and the
+        surviving frame sequence both."""
+        pol = FaultPolicy(seed=3, drop=0.2, dup=0.15, corrupt=0.1)
+        runs = []
+        for _ in range(2):
+            fabric = FaultFabric()
+            ch = Channel(capacity=256)
+            link = fabric.install(ch, pol)
+            for i in range(60):
+                ch.push(stamp(_buf(i), (1, i)))
+            runs.append(([int(b.pts) for b in ch.q], link.stats()))
+            fabric.uninstall(ch)
+        assert runs[0] == runs[1]
+
+    def test_fault_bands_are_disjoint(self):
+        """One uniform draw per frame, carved into disjoint bands: turning
+        ON duplication must not perturb which frames drop."""
+        def dropped_pts(pol):
+            fabric = FaultFabric()
+            ch = Channel(capacity=256)
+            fabric.install(ch, pol)
+            for i in range(80):
+                ch.push(_buf(i))
+            survivors = {int(b.pts) for b in ch.q}
+            fabric.uninstall(ch)
+            return set(range(80)) - survivors
+
+        assert dropped_pts(FaultPolicy(seed=9, drop=0.25)) == \
+            dropped_pts(FaultPolicy(seed=9, drop=0.25, dup=0.25))
+
+    def test_partition_window_is_tick_scripted(self):
+        fabric = FaultFabric()
+        ch = Channel(capacity=256)
+        link = fabric.install(ch, FaultPolicy(partitions=((2, 5),)))
+        for t in range(1, 7):
+            fabric.step(t)
+            ch.push(_buf(t))
+        assert [int(b.pts) for b in ch.q] == [1, 5, 6]
+        assert link.dropped_fault == 3
+        fabric.assert_conservation()      # eaten frames are accounted
+
+    def test_delay_holds_until_due_tick(self):
+        fabric = FaultFabric()
+        ch = Channel(capacity=256)
+        link = fabric.install(ch, FaultPolicy(seed=1, delay=1.0,
+                                              delay_ticks=(2, 2)))
+        fabric.step(1)
+        ch.push(_buf(0))
+        assert len(ch) == 0 and link.in_flight() == 1
+        fabric.assert_conservation()      # held frame counts as in flight
+        fabric.step(2)
+        assert len(ch) == 0               # not due yet (held 2 ticks)
+        fabric.step(3)
+        assert [int(b.pts) for b in ch.q] == [0]
+        fabric.assert_conservation()
+
+    def test_reorder_swaps_adjacent_frames(self):
+        fabric = FaultFabric()
+        ch = Channel(capacity=256)
+        link = fabric.install(ch, FaultPolicy(seed=1, reorder=1.0))
+        ch.push(_buf(0))
+        ch.push(_buf(1))
+        assert [int(b.pts) for b in ch.q] == [1, 0]
+        assert link.reordered == 1
+        # a straggler with no partner flushes on the next fabric step
+        ch.push(_buf(2))
+        assert [int(b.pts) for b in ch.q] == [1, 0]
+        fabric.step(1)
+        assert [int(b.pts) for b in ch.q] == [1, 0, 2]
+        fabric.assert_conservation()
+
+    def test_corruption_never_mutates_the_senders_buffer(self):
+        """The sender retransmits the SAME payload object on timeout — a
+        flip that mutated it in place would corrupt every retry too."""
+        fabric = FaultFabric()
+        ch = Channel(capacity=256)
+        fabric.install(ch, FaultPolicy(seed=5, corrupt=1.0))
+        src = _buf(7)
+        original = np.asarray(src.tensors[0]).copy()
+        ch.push(stamp(src, (1, 1)))
+        np.testing.assert_array_equal(np.asarray(src.tensors[0]), original)
+        wire = ch.pop()
+        assert checksum(wire) != int(wire.meta["crc"])   # damage is real
+
+    def test_overflow_drops_stay_on_the_ledger(self):
+        fabric = FaultFabric()
+        ch = Channel(capacity=2)
+        link = fabric.install(ch, FaultPolicy())
+        for i in range(3):
+            ch.push(_buf(i))
+        assert link.overflow_drops == 1
+        fabric.assert_conservation()      # sent 3 = in_flight 2 + overflow 1
+
+    def test_guard_verdicts_book_back_onto_the_link(self):
+        """End-to-end unit of the conservation law: a guarded receiver's
+        verdicts (accepted / deduped / rejected_corrupt) land on the link
+        that carried the frames, and the ledger balances exactly."""
+        fabric = FaultFabric()
+        ch = Channel(capacity=256)
+        link = fabric.install(ch, FaultPolicy(seed=2, drop=0.1, dup=0.2,
+                                              corrupt=0.1))
+        guard = DeliveryGuard(DELIVERY)
+        for i in range(100):
+            ch.push(stamp(_buf(i), (1, i)))
+        while True:
+            raw = ch.pop()
+            if raw is None:
+                break
+            guard.check(raw, ch)
+        assert link.dropped_fault > 0 and link.injected_dups > 0 \
+            and link.corrupted > 0
+        assert guard.deduped > 0 and guard.rejected_corrupt > 0
+        fabric.assert_conservation()
+
+
+class TestDeliveryGuard:
+    def test_dedup_by_delivery_id(self):
+        g = DeliveryGuard(DELIVERY)
+        raw = stamp(_buf(0), (7, 1))
+        assert g.check(raw) == "ok"
+        assert g.check(raw) == "dup"
+        assert g.stats()["deduped"] == 1
+
+    def test_corrupt_is_rejected_before_dedup(self):
+        g = DeliveryGuard(DELIVERY)
+        raw = stamp(_buf(5), (7, 1))
+        bad = raw.with_(tensors=(np.zeros((4,), np.float32),))
+        assert g.check(bad) == "corrupt"
+        # the corrupt copy must NOT have burned the delivery id: the
+        # sender's retransmit of the intact frame is the first delivery
+        assert g.check(raw) == "ok"
+
+    def test_undelivered_meta_passes_through(self):
+        g = DeliveryGuard(DELIVERY)
+        assert g.check(_buf(0)) == "ok"       # no dseq, no crc: old traffic
+        assert g.check(_buf(0)) == "ok"       # and never deduped
+
+    def test_window_is_bounded_lru(self):
+        g = DeliveryGuard(DeliveryPolicy(window=3))
+        for i in range(4):
+            assert g.check(stamp(_buf(i), (1, i))) == "ok"
+        assert not g.seen((1, 0))             # evicted, oldest first
+        assert g.seen((1, 3))
+        assert g.check(stamp(_buf(3), (1, 3))) == "dup"
+
+    def test_forget_reopens_a_shed_id(self):
+        """A request shed UNSERVED (endpoint death mid-queue) must leave
+        the window, or the failover re-dispatch — same delivery id — would
+        dedup into a void."""
+        g = DeliveryGuard(DELIVERY)
+        raw = stamp(_buf(0), (7, 1))
+        assert g.check(raw) == "ok"
+        fired = []
+        g.record_answer((7, 1), lambda: fired.append(1))
+        g.forget((7, 1))
+        assert g.check(raw) == "ok"           # the retry is served fresh
+        assert g.replay_answer((7, 1)) is False   # stale answer gone too
+        assert not fired
+
+    def test_replay_refires_the_committed_answer(self):
+        g = DeliveryGuard(DELIVERY)
+        fired = []
+        g.record_answer((7, 1), lambda: fired.append(1))
+        assert g.replay_answer((7, 1)) is True
+        assert fired == [1]
+        assert g.stats()["replayed"] == 1
+
+    def test_backoff_schedule(self):
+        pol = DeliveryPolicy(timeout_ticks=2, backoff=2.0,
+                             max_backoff_ticks=16)
+        sched = [pol.retry_in(k) for k in range(6)]
+        assert sched == [2, 4, 8, 16, 16, 16]
+        assert DeliveryPolicy(timeout_ticks=0).retry_in(0) == 1  # never 0
+
+
+# -- chaos-pinned parity: plain queries ---------------------------------------
+
+FAULT_CLASSES = {
+    "drop": FaultPolicy(seed=11, drop=0.08),
+    "dup": FaultPolicy(seed=12, dup=0.15),
+    "reorder": FaultPolicy(seed=13, reorder=0.2),
+    "corrupt": FaultPolicy(seed=14, corrupt=0.08),
+    "delay": FaultPolicy(seed=15, delay=0.15, delay_ticks=(1, 2)),
+}
+
+MIXED = FaultPolicy(seed=21, drop=0.05, dup=0.05, corrupt=0.04,
+                    reorder=0.08, delay=0.08, delay_ticks=(1, 2))
+
+FIRED_COUNTER = {"drop": "dropped_by_fault", "dup": "injected_dups",
+                 "reorder": "reordered", "corrupt": "corrupted",
+                 "delay": "delayed"}
+
+
+def _lossy_twin(ticks, n_clients, req_pol, ans_pol, query_batch=8):
+    """Build the fault-free twin and the lossy run, same script."""
+    rt0 = Runtime(query_batch=query_batch, delivery=DELIVERY)
+    _server(rt0)
+    ref = _clients(rt0, n_clients)
+    rt0.run(ticks)
+
+    rt = Runtime(query_batch=query_batch, delivery=DELIVERY)
+    _, _, ssrc = _server(rt)
+    got = _clients(rt, n_clients)
+    fabric = FaultFabric()
+    rt.fabric = fabric
+    links = lossy_endpoint(fabric, ssrc.endpoint, req_pol, ans_pol,
+                           name="hub")
+    rt.run(ticks)
+    return rt0, ref, rt, got, fabric, links
+
+
+class TestPlainQueryParity:
+    @pytest.mark.parametrize("fault", sorted(FAULT_CLASSES))
+    def test_each_fault_class_bitwise(self, fault):
+        """Both directions lossy (request link + every answer link), one
+        fault class at a time so a regression names its fault."""
+        pol = FAULT_CLASSES[fault]
+        ticks, n_clients = 24, 4
+        rt0, ref, rt, got, fabric, links = _lossy_twin(
+            ticks, n_clients, pol, pol)
+        fired = sum(link.stats()[FIRED_COUNTER[fault]] for link in links)
+        assert fired > 0, f"the {fault} schedule never fired"
+        # liveness floor, not cadence: one frame that loses three straight
+        # attempts stalls its client ~14 ticks on the backoff clock
+        _assert_prefix_bitwise(ref, got, min_answers=ticks // 3)
+        fabric.assert_conservation()
+        d = rt.stats()["delivery"]
+        if fault == "corrupt":
+            assert d["rejected_corrupt"] + d["client_answer_corrupt"] > 0
+        if fault == "drop":
+            assert d["retransmits"] > 0
+            assert d["replayed"] + d["accepted"] > 0
+
+    @pytest.mark.parametrize("query_batch", [1, 4, 8])
+    def test_mixed_faults_across_batch_sizes(self, query_batch):
+        """All five fault classes at once, at batch 1 / 4 / 8: the fused
+        dispatch round and the legacy per-frame path both hold the
+        effectively-once contract."""
+        ticks, n_clients = 40, 4
+        rt0, ref, rt, got, fabric, _ = _lossy_twin(
+            ticks, n_clients, MIXED, MIXED, query_batch=query_batch)
+        # a frame that loses its first three attempts waits out the 16-tick
+        # backoff cap — the floor tolerates one such streak per client
+        _assert_prefix_bitwise(ref, got, min_answers=ticks // 4)
+        fabric.assert_conservation()
+
+    def test_scripted_partition_heals_with_backoff(self):
+        """A 4-tick full request-plane partition: every send in the window
+        is eaten, the backoff clock carries the retransmits across the
+        outage, and after the heal every client catches up — bitwise."""
+        ticks, n_clients = 18, 3
+        part = FaultPolicy(partitions=((4, 8),))
+        rt0, ref, rt, got, fabric, links = _lossy_twin(
+            ticks, n_clients, part, None)
+        assert links[0].dropped_fault >= n_clients   # the window really bit
+        assert rt.stats()["delivery"]["retransmits"] > 0
+        _assert_prefix_bitwise(ref, got, min_answers=10)
+        fabric.assert_conservation()
+
+    def test_delivery_layer_is_inert_on_clean_links(self):
+        """Sanity for the opt-in: with delivery ON but the transport clean,
+        answers and cadence are bitwise the delivery-OFF runtime's, and
+        nothing ever retransmits."""
+        ticks, n_clients = 8, 3
+        rt0 = Runtime(query_batch=8)
+        _server(rt0)
+        ref = _clients(rt0, n_clients)
+        rt0.run(ticks)
+        rt = Runtime(query_batch=8, delivery=DELIVERY)
+        _server(rt)
+        got = _clients(rt, n_clients)
+        rt.run(ticks)
+        for r, g in zip(ref, got):
+            assert g.frames == ticks
+            a, b = _responses(r), _responses(g)
+            assert len(a) == len(b) == ticks
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(x, y)
+        d = rt.stats()["delivery"]
+        assert d["retransmits"] == 0 and d["deduped"] == 0 \
+            and d["rejected_corrupt"] == 0
+
+
+# -- suspicion vs declared death ----------------------------------------------
+
+class TestSuspicionAndHeal:
+    def test_control_partition_suspects_then_wins_back(self, chaos):
+        """Heartbeats lost, device fine: the lease lapses into SUSPICION,
+        clients fail over, and the heal (resumed beats) revives the
+        registration through the broker's win-back — zero loss, bitwise."""
+        ticks, n_clients = 14, 4
+        rt0 = Runtime(query_batch=8, lease_ticks=2, delivery=DELIVERY)
+        _server(rt0, name="hubA")
+        _server(rt0, name="hubB")
+        ref = _clients(rt0, n_clients)
+        rt0.run(ticks)
+
+        rt = Runtime(query_batch=8, lease_ticks=2, delivery=DELIVERY)
+        devA, runA, ssrcA = _server(rt, name="hubA")
+        devB, runB, ssrcB = _server(rt, name="hubB")
+        got = _clients(rt, n_clients)
+        harness = chaos(rt)
+        harness.partition_control(4, 9, devA)
+        harness.run(ticks)
+
+        assert rt.broker.suspicions >= 1
+        assert rt.broker.heals >= 1
+        reg = ssrcA.registration
+        assert reg.alive and not reg.suspected    # healed, back in service
+        assert runB.frames > 0                    # the failover really served
+        # zero loss, zero duplicates: one answer per tick per client,
+        # bitwise the twin's — the win-back double-served nothing
+        for r, g in zip(ref, got):
+            assert g.frames == ticks
+            a, b = _responses(r), _responses(g)
+            assert len(a) == len(b) == ticks
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(x, y)
+
+    def test_crash_is_declared_death_not_suspicion(self, chaos):
+        """An announced mark_down must not look like a lease lapse: no
+        suspicion is raised and heal() refuses to revive a crashed
+        registration on its own."""
+        rt = Runtime(query_batch=8, lease_ticks=4, delivery=DELIVERY)
+        devA, _, ssrcA = _server(rt, name="hubA")
+        _server(rt, name="hubB")
+        _clients(rt, 2)
+        harness = chaos(rt)
+        harness.kill_server(3, devA, ssrcA, crash=True)
+        harness.run(6)
+        reg = ssrcA.registration
+        assert not reg.alive and not reg.suspected
+        assert rt.broker.suspicions == 0
+        assert rt.broker.heal(reg) is False       # crash needs revive_server
+
+    def test_silent_death_is_suspicion_until_revived(self, chaos):
+        """The other half of the split: a SILENT death (no mark_down) does
+        lapse into suspicion — the state the §3 lease expiry already
+        detected now carries the suspected flag for the heal path."""
+        rt = Runtime(query_batch=8, lease_ticks=2, delivery=DELIVERY)
+        devA, _, ssrcA = _server(rt, name="hubA")
+        _server(rt, name="hubB")
+        cl = _clients(rt, 2)
+        harness = chaos(rt)
+        harness.kill_server(3, devA, ssrcA, crash=False)
+        harness.run(10)
+        reg = ssrcA.registration
+        assert not reg.alive and reg.suspected
+        assert reg.down_reason == "lease-expired"
+        assert rt.broker.suspicions == 1
+        assert all(r.frames == 10 for r in cl)    # failover bridged it all
+
+
+# -- mid-generation streams (§7) ----------------------------------------------
+
+class TestStreamingUnderLoss:
+    def test_streaming_answers_bitwise_under_mixed_faults(self):
+        """model_serve continuous batching with a lossy client link: a
+        duplicated prompt must not double-admit a stream (slot burn), a
+        corrupt one must be rejected-then-retransmitted, and every token
+        stream delivered is bitwise the fault-free twin's."""
+        ticks, n_clients = 16, 3
+        pol = FaultPolicy(seed=31, drop=0.05, dup=0.12, corrupt=0.05)
+
+        def build(lossy):
+            rt = Runtime(query_batch=8, delivery=DELIVERY)
+            dev = Device("hub")
+            ps = ms.serve_pipeline(slots=8, max_seq=32)
+            run = dev.add_pipeline(ps, jit=False)
+            rt.add_device(dev)
+            cls = [self._lm_client(rt, i) for i in range(n_clients)]
+            fabric = None
+            if lossy:
+                fabric = FaultFabric()
+                rt.fabric = fabric
+                lossy_endpoint(fabric, ps.elements["ssrc"].endpoint,
+                               pol, pol, name="lm")
+            rt.run(ticks)
+            return rt, cls, fabric
+
+        rt0, ref, _ = build(lossy=False)
+        rt, got, fabric = build(lossy=True)
+
+        for r, g in zip(ref, got):
+            a = [np.asarray(b.tensor).tolist() for b in
+                 r.sink_log.get("res", [])]
+            b = [np.asarray(x.tensor).tolist() for x in
+                 g.sink_log.get("res", [])]
+            assert len(b) >= 1                     # liveness under loss
+            assert b == a[:len(b)]                 # bitwise token streams
+        fabric.assert_conservation()
+        (batcher,) = [b for b in rt._batchers.values()
+                      if getattr(b, "tokens_generated", None) is not None]
+        st = batcher.stats()
+        # token conservation and no double-admitted streams: every stream
+        # maps to one accepted prompt, duplicates all landed in the dedup
+        assert st["tokens_generated"] == st["tokens_delivered"] + \
+            st["tokens_dropped"] + st["tokens_in_flight"]
+        d = rt.stats()["delivery"]
+        assert st["streams_started"] <= d["accepted"]
+
+    @staticmethod
+    def _lm_client(rt, i):
+        dev = Device(f"tv{i}")
+        run = dev.add_pipeline(
+            ms.client_pipeline(prompts=f"{i+1},{i+2},{i+3}", gens="4"),
+            jit=False)
+        rt.add_device(dev)
+        return run
+
+
+# -- mid-generation stage hops (§8) -------------------------------------------
+
+class TestStagedHopsUnderLoss:
+    def test_staged_decode_bitwise_with_lossy_hop_link(self):
+        """The §8 chain with the stage-1 hop link lossy in BOTH directions:
+        duplicated hops dedup + replay at the stage guard (a replayed
+        decode hop must not double-advance a slot), corrupt hops are
+        rejected and synchronously retransmitted, and the delivered token
+        streams stay bitwise the fault-free twin's."""
+        ticks, n_clients = 14, 2
+        req_pol = FaultPolicy(seed=41, dup=0.12, corrupt=0.06, drop=0.03)
+        ans_pol = FaultPolicy(seed=42, dup=0.10)
+
+        def build(lossy):
+            rt = Runtime(query_batch=8, delivery=DELIVERY)
+            stages = []
+            for k, ps in enumerate(ms.staged_serve_pipelines(
+                    model="stablelm-smoke-4l", slots=8, max_seq=32,
+                    n_stages=2)):
+                dev = Device(f"stage{k}")
+                dev.add_pipeline(ps, jit=False)
+                rt.add_device(dev)
+                stages.append(ps)
+            cls = []
+            for i in range(n_clients):
+                dev = Device(f"tv{i}")
+                cls.append(dev.add_pipeline(
+                    ms.client_pipeline(prompts=f"{i+1},{i+2}", gens="4"),
+                    jit=False))
+                rt.add_device(dev)
+            fabric = None
+            if lossy:
+                fabric = FaultFabric()
+                rt.fabric = fabric
+                lossy_endpoint(fabric, stages[1].elements["ssrc"].endpoint,
+                               req_pol, ans_pol, name="s1")
+            rt.run(ticks)
+            return rt, cls, fabric
+
+        rt0, ref, _ = build(lossy=False)
+        rt, got, fabric = build(lossy=True)
+
+        for r, g in zip(ref, got):
+            a = [np.asarray(b.tensor).tolist() for b in
+                 r.sink_log.get("res", [])]
+            b = [np.asarray(x.tensor).tolist() for x in
+                 g.sink_log.get("res", [])]
+            assert len(b) >= 1
+            assert b == a[:len(b)]                 # bitwise token streams
+        fabric.assert_conservation()
+        (coord,) = [b for b in rt._batchers.values()
+                    if isinstance(b, StagedStreamingBatcher)]
+        st = coord.stats()
+        assert st["tokens_generated"] == st["tokens_delivered"] + \
+            st["tokens_dropped"] + st["tokens_in_flight"]
+        for k in range(1, coord.n_stages):
+            led = coord.stage_ledger(k)
+            assert led["dispatched"] == led["completed"] + led["failed"]
+        # the fault schedule really exercised the hop delivery machinery
+        assert st["hop_retransmits"] + st["hop_dups"] + st["hop_corrupt"] \
+            + rt.stats()["delivery"]["deduped"] > 0
+
+
+# -- the lossy soak -----------------------------------------------------------
+
+@pytest.mark.soak
+class TestLossySoak:
+    def test_200_tick_lossy_soak_conserves_everything(self, chaos):
+        """200 ticks of 5% drop / 2% dup / delay jitter on the plain-query
+        fabric with mid-generation §7 streams live in the same runtime,
+        plus one scripted 20-tick request-plane partition that heals.
+        Exact conservation: per-link message ledgers, the §7 token law,
+        and zero client-visible loss (every delivered answer bitwise the
+        fault-free twin's, every client makes progress past the heal)."""
+        ticks, n_plain, n_lm = 200, 4, 2
+        lossy = FaultPolicy(seed=51, drop=0.05, dup=0.02, delay=0.05,
+                            delay_ticks=(1, 3))
+        lossy_part = dataclasses.replace(lossy, partitions=((80, 100),))
+
+        def build(with_faults):
+            rt = Runtime(query_batch=8, lease_ticks=4, delivery=DELIVERY)
+            _, _, ssrc = _server(rt, name="hub")
+            plain = _clients(rt, n_plain)
+            lmdev = Device("lmhub")
+            lmps = ms.serve_pipeline(slots=8, max_seq=32)
+            lmdev.add_pipeline(lmps, jit=False)
+            rt.add_device(lmdev)
+            lm = [TestStreamingUnderLoss._lm_client(rt, i)
+                  for i in range(n_lm)]
+            fabric = None
+            if with_faults:
+                fabric = FaultFabric()
+                rt.fabric = fabric
+                lossy_endpoint(fabric, ssrc.endpoint, lossy_part, lossy,
+                               name="hub")
+                lossy_endpoint(fabric, lmps.elements["ssrc"].endpoint,
+                               lossy, lossy, name="lm")
+            rt.run(ticks)
+            return rt, plain, lm, fabric
+
+        rt0, ref_plain, ref_lm, _ = build(False)
+        rt, plain, lm, fabric = build(True)
+
+        # zero client-visible loss, bitwise, with liveness PAST the heal:
+        # >=100 answers in 200 ticks means every client kept answering
+        # well after the partition healed at tick 100
+        _assert_prefix_bitwise(ref_plain, plain, min_answers=100)
+        for r, g in zip(ref_lm, lm):
+            a = [np.asarray(b.tensor).tolist() for b in
+                 r.sink_log.get("res", [])]
+            b = [np.asarray(x.tensor).tolist() for x in
+                 g.sink_log.get("res", [])]
+            assert len(b) >= len(a) // 2
+            assert b == a[:len(b)]
+        # exact message conservation on every link, partition included
+        fabric.assert_conservation()
+        # the schedule really was adversarial
+        st = rt.stats()
+        d = st["delivery"]
+        assert d["retransmits"] > 0 and d["deduped"] > 0
+        assert sum(link["dropped_by_fault"]
+                   for link in st["netfault"].values()) > 0
+        # §7 token law, exact
+        (batcher,) = [b for b in rt._batchers.values()
+                      if getattr(b, "tokens_generated", None) is not None]
+        bs = batcher.stats()
+        assert bs["tokens_generated"] == bs["tokens_delivered"] + \
+            bs["tokens_dropped"] + bs["tokens_in_flight"]

@@ -1,0 +1,142 @@
+"""Property tests for the §10 delivery layer (core/netfault.py).
+
+The at-least-once + dedup algebra gets the same treatment the broker and
+admission cores got: generated duplicate/reorder schedules against
+brute-force oracles.  Pinned laws:
+
+* EFFECTIVELY-ONCE: however a delivery schedule duplicates and reorders a
+  sender's frames, the set a :class:`DeliveryGuard` accepts is exactly one
+  copy per delivery id, in first-arrival order (the exactly-once oracle);
+* the dedup window is a bounded LRU — it never grows past ``window``, and
+  while an id is among the ``window`` most recently touched it can never
+  be re-accepted (no double-serve of a live id);
+* ``forget`` is the ONLY way a live id re-admits (the shed-unserved
+  escape hatch), and it re-admits exactly once;
+* the retransmit backoff schedule is monotone non-decreasing, starts at
+  ``timeout_ticks``, caps at ``max_backoff_ticks``, and never waits zero
+  ticks (a zero wait would retransmit every drain round, flooding the
+  link the policy exists to respect).
+
+Runs under real hypothesis when installed, else the deterministic
+vendored shim (tests/_vendor).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffers import StreamBuffer
+from repro.core.netfault import DeliveryGuard, DeliveryPolicy, stamp
+
+pytestmark = pytest.mark.netchaos
+
+# a delivery schedule: which logical message (by seq) arrives next — values
+# repeat (duplicates) and interleave (reorder) freely
+SCHEDULES = st.lists(st.integers(min_value=0, max_value=11),
+                     min_size=1, max_size=40)
+WINDOWS = st.integers(min_value=1, max_value=8)
+TIMEOUTS = st.integers(min_value=0, max_value=6)
+BACKOFFS = st.floats(min_value=1.0, max_value=4.0)
+CAPS = st.integers(min_value=1, max_value=64)
+
+
+def _frame(seq):
+    return stamp(StreamBuffer(
+        tensors=(np.full((3,), seq, np.float32),), pts=np.int64(seq),
+        meta={}), (1, int(seq)))
+
+
+class TestEffectivelyOnce:
+    @given(SCHEDULES)
+    @settings(max_examples=60)
+    def test_accepts_exactly_one_copy_per_id_in_arrival_order(self, sched):
+        """The oracle: whatever the duplication/reordering, the accepted
+        subsequence is the schedule with every repeat deleted."""
+        guard = DeliveryGuard(DeliveryPolicy())   # window >> id space
+        accepted = [seq for seq in sched
+                    if guard.check(_frame(seq)) == "ok"]
+        oracle, seen = [], set()
+        for seq in sched:
+            if seq not in seen:
+                seen.add(seq)
+                oracle.append(seq)
+        assert accepted == oracle
+        assert guard.stats()["deduped"] == len(sched) - len(oracle)
+
+    @given(SCHEDULES)
+    @settings(max_examples=40)
+    def test_verdicts_partition_the_schedule(self, sched):
+        """Every arrival gets exactly one verdict; accepted + deduped
+        covers the whole (uncorrupted) schedule — the guard can neither
+        invent nor silently swallow a frame."""
+        guard = DeliveryGuard(DeliveryPolicy())
+        for seq in sched:
+            assert guard.check(_frame(seq)) in ("ok", "dup")
+        s = guard.stats()
+        assert s["accepted"] + s["deduped"] == len(sched)
+        assert s["rejected_corrupt"] == 0
+
+
+class TestBoundedWindow:
+    @given(SCHEDULES, WINDOWS)
+    @settings(max_examples=60)
+    def test_window_never_exceeds_bound(self, sched, window):
+        guard = DeliveryGuard(DeliveryPolicy(window=window))
+        for seq in sched:
+            guard.check(_frame(seq))
+            assert len(guard._seen) <= window
+
+    @given(SCHEDULES, WINDOWS)
+    @settings(max_examples=60)
+    def test_live_ids_never_readmit(self, sched, window):
+        """LRU oracle: a duplicate whose id is still among the ``window``
+        most recently touched ids MUST dedup — eviction may only ever
+        bite the least recently touched tail."""
+        guard = DeliveryGuard(DeliveryPolicy(window=window))
+        lru = []                                  # most recent last
+        for seq in sched:
+            verdict = guard.check(_frame(seq))
+            if seq in lru:
+                assert verdict == "dup"           # live: never re-accepted
+                lru.remove(seq)
+            else:
+                assert verdict == "ok"            # evicted or brand new
+            lru.append(seq)
+            lru[:] = lru[-window:]
+
+    @given(SCHEDULES)
+    @settings(max_examples=40)
+    def test_forget_readmits_exactly_once(self, sched):
+        """After ``forget``, the next copy of that id is accepted (the
+        shed request's failover retry) and the one after dedups again —
+        the escape hatch opens the window exactly one slot wide."""
+        guard = DeliveryGuard(DeliveryPolicy())
+        for seq in sched:
+            guard.check(_frame(seq))
+        target = sched[0]
+        guard.forget((1, target))
+        assert guard.check(_frame(target)) == "ok"
+        assert guard.check(_frame(target)) == "dup"
+
+
+class TestBackoffSchedule:
+    @given(TIMEOUTS, BACKOFFS, CAPS)
+    @settings(max_examples=80)
+    def test_monotone_capped_and_never_zero(self, timeout, backoff, cap):
+        pol = DeliveryPolicy(timeout_ticks=timeout, backoff=backoff,
+                             max_backoff_ticks=cap)
+        sched = [pol.retry_in(k) for k in range(10)]
+        assert all(t >= 1 for t in sched)         # never a same-tick storm
+        assert all(t <= max(cap, 1) for t in sched)
+        assert all(a <= b for a, b in zip(sched, sched[1:]))
+
+    @given(TIMEOUTS, BACKOFFS, CAPS)
+    @settings(max_examples=40)
+    def test_reaches_the_cap_and_stays(self, timeout, backoff, cap):
+        """The schedule converges: some retry count hits a fixed point at
+        (or below) the cap and never moves again — retransmit cadence is
+        eventually periodic, not unbounded."""
+        pol = DeliveryPolicy(timeout_ticks=timeout, backoff=backoff,
+                             max_backoff_ticks=cap)
+        sched = [pol.retry_in(k) for k in range(64)]
+        assert sched[-1] == sched[-2]             # fixed point reached
+        assert sched[-1] <= max(cap, 1)
